@@ -1,0 +1,103 @@
+"""Beyond-paper: MoE dispatch strategies on the communicator — the
+paper's §V-A specialized collectives applied to expert parallelism.
+
+Compares (on 8 virtual devices): EP flat alltoallv vs EP grid (2-hop)
+vs TP-gathered (no dispatch), over token counts; reports wall time and
+staged collective composition.  The production-scale numbers come from
+the dry-run HLO (EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from common import csv_row, time_fn
+from repro.models import ModelConfig
+from repro.models.moe import (
+    init_moe,
+    moe_forward_dense,
+    moe_forward_ep_local,
+    moe_forward_tp_local,
+)
+
+CFG = ModelConfig(
+    name="bench-moe", family="moe", num_layers=1, d_model=256, num_heads=4,
+    num_kv_heads=4, d_ff=512, vocab_size=128, num_experts=16, top_k=2,
+    moe_d_ff=512, capacity_factor=1.5, dtype="float32", param_dtype="float32",
+)
+
+
+def run():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64, CFG.d_model))
+
+    out = {}
+    # EP flat
+    p_ep = init_moe(jax.random.PRNGKey(1), CFG, ep_size=4)
+
+    def ep_body(px, xx):
+        n = xx.shape[0] * xx.shape[1]
+        o, _ = moe_forward_ep_local(px, xx.reshape(n, CFG.d_model), CFG, "model")
+        return o.reshape(xx.shape)
+
+    in_specs_ep = (
+        {"router": P(), "wi": P("model", None, None),
+         "wg": P("model", None, None), "wo": P("model", None, None)},
+        P("data", "model", None),
+    )
+    fn = jax.jit(jax.shard_map(ep_body, mesh=mesh, in_specs=in_specs_ep,
+                               out_specs=P("data", "model", None),
+                               check_vma=False))
+    out["ep_flat"] = time_fn(fn, p_ep, x)
+    csv_row("moe_dispatch_ep_flat", out["ep_flat"] * 1e6, "2x alltoall")
+
+    # EP grid (2-hop over both axes; experts over all 8 ranks)
+    p_ep8 = init_moe(jax.random.PRNGKey(1), CFG, ep_size=8)
+
+    def grid_body(px, xx):
+        n = xx.shape[0] * xx.shape[1]
+        o, _ = moe_forward_ep_local(
+            px, xx.reshape(n, CFG.d_model), CFG, ("data", "model"),
+            use_grid=True,
+        )
+        return o.reshape(xx.shape)
+
+    in_specs_g = (
+        {"router": P(), "wi": P(("data", "model"), None, None),
+         "wg": P(("data", "model"), None, None),
+         "wo": P(("data", "model"), None, None)},
+        P(("data", "model"), None, None),
+    )
+    fn = jax.jit(jax.shard_map(grid_body, mesh=mesh, in_specs=in_specs_g,
+                               out_specs=P(("data", "model"), None, None),
+                               check_vma=False))
+    xg = x.reshape(8, 64, CFG.d_model)
+    out["ep_grid"] = time_fn(fn, p_ep8, xg)
+    csv_row("moe_dispatch_ep_grid", out["ep_grid"] * 1e6,
+            "4x sub-alltoall; msgs 2*(sqrt(p)-1)")
+
+    # TP gathered
+    p_tp = init_moe(jax.random.PRNGKey(1), CFG, ep_size=1)
+
+    def tp_body(px, xx):
+        n = xx.shape[0] * xx.shape[1]
+        o, _ = moe_forward_tp_local(px, xx.reshape(n, CFG.d_model), CFG, "model")
+        return o.reshape(xx.shape)
+
+    in_specs_tp = (
+        {"router": P(), "wi": P(None, None, "model"),
+         "wg": P(None, None, "model"), "wo": P(None, "model", None)},
+        P("data", None, None),
+    )
+    fn = jax.jit(jax.shard_map(tp_body, mesh=mesh, in_specs=in_specs_tp,
+                               out_specs=P("data", None, None),
+                               check_vma=False))
+    out["tp"] = time_fn(fn, p_tp, x)
+    csv_row("moe_dispatch_tp", out["tp"] * 1e6, "psum only; no dispatch")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Paper Table I + the (near) zero-overhead claim.
+
+Three measurements:
+1. HLO parity — the KaMPIng-style call stages exactly the collectives a
+   hand-rolled implementation would (the paper validated this with the
+   MPI profiling interface; XLA's lowered HLO is our PMPI).
+2. Dispatch (trace-time) overhead — cost of the named-parameter layer at
+   staging time; amortized to zero by jit caching.
+3. Lines of code for the vector-allgather example (Table I row 1).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from common import csv_row
+from repro.core import Communicator, send_buf
+
+P_RANKS = 8
+
+
+def run():
+    mesh = jax.make_mesh((P_RANKS,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def kamping(v):
+        return Communicator("x").allgatherv(send_buf(v))
+
+    def handrolled(v):
+        return jax.lax.all_gather(v, "x", tiled=True)
+
+    xs = jax.ShapeDtypeStruct((P_RANKS * 64, 32), jnp.float32)
+
+    import re
+
+    def colls(fn):
+        txt = jax.jit(jax.shard_map(
+            fn, mesh=mesh, in_specs=P("x"), out_specs=P(None),
+            check_vma=False)).lower(xs).as_text()
+        return re.findall(
+            r"\b(all-gather|all-reduce|all-to-all|collective-permute)\b", txt
+        )
+
+    parity = colls(kamping) == colls(handrolled)
+    csv_row("zero_overhead_hlo_parity", 0.0, f"identical_collectives={parity}")
+    assert parity, "KaMPIng call stages different collectives!"
+
+    # trace-time dispatch cost (retrace both, compare)
+    def trace_time(fn):
+        sm = jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
+                           out_specs=P(None), check_vma=False)
+        t0 = time.perf_counter()
+        for _ in range(20):
+            jax.make_jaxpr(sm)(xs)
+        return (time.perf_counter() - t0) / 20
+
+    tk, th = trace_time(kamping), trace_time(handrolled)
+    csv_row("dispatch_overhead_kamping_us", tk * 1e6, "trace_time")
+    csv_row("dispatch_overhead_handrolled_us", th * 1e6, "trace_time")
+    csv_row("dispatch_overhead_delta_us", (tk - th) * 1e6,
+            "amortized_to_zero_by_jit_cache")
+
+    # Table I: LOC of the two vector-allgather implementations in
+    # examples/quickstart.py (version1 = 2 lines, handrolled = 6 lines)
+    import inspect
+    import examples_loc  # counts from the example file
+
+    counts = examples_loc.loc_table()
+    for impl, loc in counts.items():
+        csv_row(f"loc_vector_allgather_{impl}", loc, "tableI")
+    return {"parity": parity, "trace_kamping": tk, "trace_handrolled": th,
+            "loc": counts}
+
+
+if __name__ == "__main__":
+    run()

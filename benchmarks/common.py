@@ -1,0 +1,38 @@
+"""Shared benchmark harness utilities (timing, HLO inspection)."""
+from __future__ import annotations
+
+import re
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup=2, iters=10):
+    """Median wall time (s) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def collective_ops(fn, *args):
+    """Sorted list of collective op names staged by fn (lowered HLO)."""
+    txt = jax.jit(fn).lower(*args).as_text()
+    return sorted(
+        re.findall(
+            r"\b(all-gather|all-reduce|all-to-all|collective-permute|"
+            r"reduce-scatter|collective-broadcast)\b",
+            txt,
+        )
+    )
+
+
+def csv_row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

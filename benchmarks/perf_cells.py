@@ -1,0 +1,64 @@
+"""§Perf artifact runner: measure the hillclimbed cells baseline vs opt.
+
+Usage: python benchmarks/perf_cells.py [--out benchmarks/artifacts/perf_cells.json]
+
+Produces the before/after roofline terms backing EXPERIMENTS.md §Perf.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+CELLS = [
+    ("mamba2-370m", "train_4k"),
+    ("smollm-360m", "train_4k"),
+    ("qwen2-moe-a2.7b", "prefill_32k"),
+    ("mistral-large-123b", "train_4k"),
+]
+
+
+def run_one(arch, shape, variant):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = os.path.join(os.path.dirname(__file__), "artifacts",
+                       f"perf_{arch}_{shape}_{variant}.json")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--variant", variant, "--out", out],
+        env=env, capture_output=True, text=True, timeout=1800,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    try:
+        return json.load(open(out))[0]
+    except Exception:
+        return {"arch": arch, "shape": shape, "variant": variant,
+                "status": "fail", "stderr": r.stderr[-500:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "artifacts", "perf_cells.json"))
+    args = ap.parse_args()
+    rows = []
+    for arch, shape in CELLS:
+        for variant in ("baseline", "opt"):
+            rec = run_one(arch, shape, variant)
+            rec["variant"] = variant
+            rows.append(rec)
+            if rec.get("status") == "ok":
+                t = rec["roofline"]
+                bound = max(t["t_compute"], t["t_memory"], t["t_collective"])
+                print(f"{arch} × {shape} [{variant}]: bound={bound:.2f}s "
+                      f"(c={t['t_compute']:.2f} m={t['t_memory']:.2f} "
+                      f"x={t['t_collective']:.2f})")
+            else:
+                print(f"{arch} × {shape} [{variant}]: FAIL")
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def _fmt_s(t):
+    if t == 0:
+        return "0"
+    if t < 1e-3:
+        return f"{t*1e6:.0f}us"
+    if t < 1:
+        return f"{t*1e3:.1f}ms"
+    return f"{t:.2f}s"
+
+
+def load(mesh_name):
+    path = os.path.join(os.path.dirname(__file__), "artifacts",
+                        f"dryrun_{mesh_name}.json")
+    return json.load(open(path))
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | status | bytes/dev (args+temp) | compile |",
+            "|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "ok":
+            m = r["memory"]
+            mem = _fmt_bytes(m["argument_bytes"] + m["temp_bytes"])
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | ok | {mem} | "
+                f"{r['compile_s']}s |"
+            )
+        elif r["status"] == "skip":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | skip | — | — |"
+            )
+        else:
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | **FAIL** | {r.get('error','')[:60]} | — |"
+            )
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant "
+        "| useful (6ND/HLO) | bound-step |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        bound = max(t["t_compute"], t["t_memory"], t["t_collective"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(t['t_compute'])} | "
+            f"{_fmt_s(t['t_memory'])} | {_fmt_s(t['t_collective'])} | "
+            f"{t['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{_fmt_s(bound)} |"
+        )
+    return "\n".join(rows)
+
+
+def collective_table(recs):
+    rows = ["| arch | shape | all-reduce | all-gather | reduce-scatter | "
+            "all-to-all | permute |", "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        c = r["collective_bytes"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{_fmt_bytes(c.get('all-reduce', 0))} | "
+            f"{_fmt_bytes(c.get('all-gather', 0))} | "
+            f"{_fmt_bytes(c.get('reduce-scatter', 0))} | "
+            f"{_fmt_bytes(c.get('all-to-all', 0))} | "
+            f"{_fmt_bytes(c.get('collective-permute', 0))} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    for mesh in sys.argv[1:] or ["pod16x16", "multipod2x16x16"]:
+        recs = load(mesh)
+        print(f"\n## {mesh}\n")
+        print(dryrun_table(recs))
+        print()
+        print(roofline_table(recs))

@@ -1,0 +1,97 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model: TPU v5e.
+  compute term    = HLO_FLOPs_global / (chips * 197e12 FLOP/s)
+  memory term     = HLO_bytes_per_chip / 819e9 B/s
+  collective term = collective_bytes_per_chip / (links_per_chip? -> spec
+                    formula: collective_bytes / (chips * 50e9 B/s))
+
+``cost_analysis`` on the compiled (post-SPMD) module reports *per-device*
+FLOPs and bytes.  Collective bytes are not in cost_analysis: we parse the
+compiled HLO text and sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute /
+collective-broadcast op.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["HW", "parse_collective_bytes", "roofline_terms", "MODEL_FLOPS"]
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,       # B/s per chip
+    "ici_bw": 50e9,        # B/s per link (spec constant)
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind from (post-SPMD) HLO.
+
+    ``*-start`` ops are counted; their ``-done`` twins are skipped to avoid
+    double counting (async collectives appear as start/done pairs).
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        ty, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(ty)
+    return out
+
+
+def MODEL_FLOPS(cfg, tokens: int) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def roofline_terms(cost: Dict, collective_bytes: int, chips: int,
+                   hw=HW) -> Dict[str, float]:
+    flops_per_dev = float(cost.get("flops", 0.0))
+    bytes_per_dev = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops_per_dev / hw["peak_flops"]
+    t_memory = bytes_per_dev / hw["hbm_bw"]
+    t_coll = collective_bytes / hw["ici_bw"]
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "dominant": dom,
+        "flops_per_device": flops_per_dev,
+        "bytes_per_device": bytes_per_dev,
+        "collective_bytes_per_device": collective_bytes,
+    }

@@ -1,0 +1,74 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a roofline summary from
+the dry-run artifacts when present).
+
+  Fig. 8   -> bench_sample_sort      (zero-overhead sample sort)
+  Fig. 10  -> bench_alltoall         (flat vs grid vs sparse exchange)
+  Table I  -> bench_zero_overhead    (LOC + HLO parity + dispatch cost)
+  Fig. 13  -> bench_reproducible     (p-invariant tree reduce)
+  Fig. 11  -> bench_serialization    (serialized bcast)
+  §V-A->EP -> bench_moe_dispatch     (MoE dispatch strategies)
+"""
+import json
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _roofline_summary():
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    for mesh_name in ("pod16x16", "multipod2x16x16"):
+        path = os.path.join(art, f"dryrun_{mesh_name}.json")
+        if not os.path.exists(path):
+            continue
+        recs = json.load(open(path))
+        ok = [r for r in recs if r["status"] == "ok"]
+        print(f"# roofline[{mesh_name}]: {len(ok)} cells")
+        for r in ok:
+            t = r["roofline"]
+            print(
+                f"roofline_{mesh_name}_{r['arch']}_{r['shape']},"
+                f"{max(t['t_compute'], t['t_memory'], t['t_collective'])*1e6:.1f},"
+                f"dom={t['dominant']};useful={r['useful_flops_ratio']:.2f}"
+            )
+
+
+def main() -> None:
+    import bench_sample_sort
+    import bench_alltoall
+    import bench_zero_overhead
+    import bench_reproducible
+    import bench_serialization
+    import bench_moe_dispatch
+
+    benches = [
+        ("fig8_sample_sort", bench_sample_sort),
+        ("fig10_alltoall", bench_alltoall),
+        ("tableI_zero_overhead", bench_zero_overhead),
+        ("fig13_reproducible", bench_reproducible),
+        ("fig11_serialization", bench_serialization),
+        ("moe_dispatch", bench_moe_dispatch),
+    ]
+    failures = []
+    for name, mod in benches:
+        print(f"# --- {name} ---")
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},FAILED,{type(e).__name__}")
+    _roofline_summary()
+    if failures:
+        sys.exit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Distributed BFS (paper §IV-B, Fig. 9) with pluggable frontier exchange:
+flat alltoallv vs grid (2-hop) vs sparse — the paper's Fig. 10 comparison.
+
+Run:  PYTHONPATH=src python examples/bfs.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import operator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    Communicator,
+    GridCommunicator,
+    SparseAlltoall,
+    bucketize_by_destination,
+    op,
+    send_buf,
+)
+
+P_RANKS = 8
+V_PER_RANK = 256
+DEG = 8
+UNDEF = np.int32(2**31 - 1)
+
+mesh = jax.make_mesh((2, 4), ("row", "col"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_graph(seed=0):
+    """Random graph in adjacency-array form, vertex v owned by rank v // V."""
+    rng = np.random.RandomState(seed)
+    n = P_RANKS * V_PER_RANK
+    dst = rng.randint(0, n, (n, DEG)).astype(np.int32)
+    return dst
+
+
+def bfs(adj, source, strategy="flat"):
+    """adj: (V_local, DEG) neighbor ids (global); returns hop distances."""
+
+    def body(adj, src_flag):
+        comm = Communicator(("row", "col"))
+        if strategy == "grid":
+            comm = comm.extend(GridCommunicator)
+        p = comm.size()
+        n_loc = adj.shape[0]
+        rank = comm.rank()
+        dist = jnp.full((n_loc,), UNDEF)
+        frontier = src_flag.astype(bool)  # (n_loc,) bool
+        dist = jnp.where(frontier, 0, dist)
+        # grow_only capacity: worst case every local edge targets one rank
+        cap = n_loc * DEG
+
+        def is_empty(front):
+            any_local = jnp.any(front)
+            return ~comm.allreduce_single(
+                send_buf(any_local), op(operator.or_)
+            ).astype(bool)
+
+        def step(state):
+            dist, frontier, level = state
+            # expand: neighbors of frontier vertices
+            neigh = jnp.where(frontier[:, None], adj, -1).reshape(-1)
+            dest_rank = jnp.where(neigh >= 0, neigh // n_loc, 0).astype(jnp.int32)
+            buckets, counts = bucketize_by_destination(
+                jnp.where(neigh >= 0, neigh, 0),
+                jnp.where(neigh >= 0, dest_rank, p + 100).astype(jnp.int32),
+                p, cap, pad_value=-1,
+            )
+            if strategy == "grid":
+                recv = comm.grid_alltoallv(send_buf(buckets))
+            else:
+                recv = comm.alltoallv(send_buf(buckets))
+            # mark received vertices (local ids); padding = -1
+            got = recv.reshape(-1)
+            local = got - rank * n_loc
+            valid = (got >= 0) & (local >= 0) & (local < n_loc)
+            hits = jnp.zeros((n_loc,), bool).at[
+                jnp.where(valid, local, n_loc)
+            ].max(True, mode="drop")
+            new_frontier = hits & (dist == UNDEF)
+            dist = jnp.where(new_frontier, level + 1, dist)
+            return dist, new_frontier, level + 1
+
+        def cond(state):
+            _, frontier, _ = state
+            return ~is_empty(frontier)
+
+        dist, _, _ = jax.lax.while_loop(cond, step, (dist, frontier, jnp.int32(0)))
+        return dist
+
+    return body
+
+
+def reference_bfs(adj_global, source):
+    n = adj_global.shape[0]
+    dist = np.full((n,), UNDEF)
+    dist[source] = 0
+    frontier = [source]
+    level = 0
+    while frontier:
+        nxt = set()
+        for v in frontier:
+            for w in adj_global[v]:
+                if dist[w] == UNDEF:
+                    dist[w] = level + 1
+                    nxt.add(w)
+        frontier = list(nxt)
+        level += 1
+    return dist
+
+
+def main():
+    adj = make_graph()
+    n = adj.shape[0]
+    source = 3
+    src_flag = np.zeros((n,), np.int32)
+    src_flag[source] = 1
+    expect = reference_bfs(adj, source)
+
+    for strategy in ("flat", "grid"):
+        fn = jax.jit(jax.shard_map(
+            bfs(None, None, strategy), mesh=mesh,
+            in_specs=(P(("row", "col")), P(("row", "col"))),
+            out_specs=P(("row", "col")),
+            check_vma=False,
+        ))
+        dist = np.asarray(fn(adj, src_flag))
+        match = (dist == expect).mean()
+        assert match == 1.0, f"{strategy}: {match:.3f} agreement"
+        reached = (dist != UNDEF).sum()
+        print(f"BFS[{strategy:5s}] OK — {reached}/{n} vertices reached, "
+              f"max depth {dist[dist != UNDEF].max()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Distributed sample sort (paper §IV-A, Fig. 7) on the communicator.
+
+The paper's flagship "textbook algorithm in 16 lines" — here with JAX
+collectives: sample splitters, allgather them, bucket locally, exchange
+buckets with ``alltoallv`` (counts inferred!), local sort.
+
+Run:  PYTHONPATH=src python examples/sample_sort.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    Communicator,
+    bucketize_by_destination,
+    recv_counts_out,
+    send_buf,
+    send_counts,
+)
+
+P_RANKS = 8
+N_PER_RANK = 1 << 12
+OVERSAMPLE = 16
+
+mesh = jax.make_mesh((P_RANKS,), ("ranks",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def sample_sort(data, key):
+    key = key[0]  # (1, 2) local shard -> scalar key
+    comm = Communicator("ranks")
+    p = comm.size()
+    n = data.shape[0]
+
+    # 1. local samples -> global splitters (allgather, Fig. 7)
+    samples = jax.random.choice(key, data, (OVERSAMPLE,), replace=False)
+    gsamples = jnp.sort(comm.allgather(send_buf(samples)).reshape(-1))
+    splitters = gsamples[OVERSAMPLE:: OVERSAMPLE][: p - 1]
+
+    # 2. bucket by destination rank
+    dest = jnp.searchsorted(splitters, data).astype(jnp.int32)
+    cap = int(N_PER_RANK * 2.5 / p) * 2  # capacity policy: static bound
+    buckets, counts = bucketize_by_destination(
+        data, dest, p, cap, pad_value=jnp.iinfo(jnp.int32).max
+    )
+
+    # 3. exchange buckets — counts for the receiver inferred by the library
+    r = comm.alltoallv(send_buf(buckets), send_counts(counts),
+                       recv_counts_out())
+    buf, rcounts = r.recv_buf, r.recv_counts
+
+    # 4. local sort (padding sorts to the tail as +inf sentinel)
+    merged = jnp.sort(buf.reshape(-1))
+    return merged, jnp.sum(rcounts)[None]  # rank-1 for out_specs
+
+
+def main():
+    rng = np.random.RandomState(0)
+    data = rng.randint(0, 1 << 30, (P_RANKS * N_PER_RANK,)).astype(np.int32)
+    keys = jax.random.split(jax.random.PRNGKey(0), P_RANKS)
+
+    fn = jax.jit(jax.shard_map(
+        sample_sort, mesh=mesh,
+        in_specs=(P("ranks"), P("ranks")),
+        out_specs=(P("ranks"), P("ranks")),
+        check_vma=False,
+    ))
+    merged, valid = fn(data, keys)
+    merged, valid = np.asarray(merged), np.asarray(valid)
+
+    # reassemble: each rank's valid prefix, concatenated, must equal sorted
+    per = merged.reshape(P_RANKS, -1)
+    valid = valid.reshape(-1)
+    out = np.concatenate([per[r][: valid[r]] for r in range(P_RANKS)])
+    expect = np.sort(data)
+    assert out.shape == expect.shape, (out.shape, expect.shape)
+    np.testing.assert_array_equal(out, expect)
+    print(f"sample sort OK: {data.size} keys over {P_RANKS} ranks; "
+          f"bucket skew {valid.max()/ (data.size/P_RANKS):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

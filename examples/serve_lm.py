@@ -1,0 +1,50 @@
+"""End-to-end serving example: continuous-batching engine on a reduced
+qwen-family model with a stream of concurrent requests.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=64, num_slots=4)
+
+    rng = np.random.RandomState(0)
+    requests = [
+        Request(rid=i,
+                prompt=rng.randint(1, cfg.vocab_size, (rng.randint(4, 12),))
+                .astype(np.int32),
+                max_new_tokens=int(rng.randint(4, 12)))
+        for i in range(10)
+    ]
+    t0 = time.perf_counter()
+    for r in requests:
+        engine.submit(r)
+    steps = engine.run_to_completion()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.generated) for r in requests)
+    print(f"served {len(requests)} requests / {total} tokens in {dt:.2f}s "
+          f"({steps} engine steps, {total/dt:.1f} tok/s, "
+          f"{engine.num_slots} slots)")
+    for r in requests[:3]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
+    assert all(len(r.generated) == r.max_new_tokens for r in requests)
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Distributed prefix-doubling suffix-array construction (paper §IV-A).
+
+The paper's headline verbosity result: 163 LOC with KaMPIng vs 426 LOC
+plain MPI.  Algorithm (Manber–Myers): rank suffixes by their first
+2^k characters, double k until all ranks are distinct.  Distribution:
+the text is block-partitioned; each round needs (a) ranks of positions
+i+2^k (a shifted gather = one collective_permute/allgather) and (b) a
+distributed sort of (rank, next_rank) pairs — our sample-sort building
+block, i.e. allgather + capacity-policy alltoallv.
+
+This example keeps the sort step local per round (allgather of the rank
+table — fine at example scale) so the *communication* structure matches
+the paper's: one allgather per doubling round.
+
+Run:  PYTHONPATH=src python examples/suffix_array.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import Communicator, send_buf
+
+P_RANKS = 8
+N_LOCAL = 512  # text chars per rank
+N = P_RANKS * N_LOCAL
+
+mesh = jax.make_mesh((P_RANKS,), ("ranks",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def prefix_doubling(text_local):
+    """text_local: (N_LOCAL,) uint8 -> suffix ranks (N_LOCAL,) int32."""
+    comm = Communicator("ranks")
+
+    # initial ranks = character codes (allgather once to build global view
+    # of the rank table; each round refreshes it — the paper's pattern of
+    # "communicate the small state, keep the big text distributed")
+    rank_local = text_local.astype(jnp.int32)
+
+    k = 1
+    while k < N:
+        ranks = comm.allgather(send_buf(rank_local)).reshape(-1)  # (N,)
+        nxt = jnp.where(
+            jnp.arange(N) + k < N,
+            jnp.roll(ranks, -k),
+            -1,
+        )
+        # sort (rank, next) pairs -> new ranks (dense re-ranking);
+        # two stable passes = lexicographic sort without 64-bit keys
+        order = jnp.argsort(nxt, stable=True)
+        order = order[jnp.argsort(ranks[order], stable=True)]
+        r_s, n_s = ranks[order], nxt[order]
+        changed = (r_s[1:] != r_s[:-1]) | (n_s[1:] != n_s[:-1])
+        new_rank_sorted = jnp.cumsum(
+            jnp.concatenate([jnp.zeros(1, jnp.int32),
+                             changed.astype(jnp.int32)])
+        )
+        new_ranks = jnp.zeros((N,), jnp.int32).at[order].set(new_rank_sorted)
+        me = jax.lax.axis_index("ranks")
+        rank_local = jax.lax.dynamic_slice_in_dim(
+            new_ranks, me * N_LOCAL, N_LOCAL
+        )
+        k *= 2
+    return rank_local
+
+
+def main():
+    rng = np.random.RandomState(0)
+    # small alphabet so prefix doubling actually needs several rounds
+    text = rng.randint(97, 101, (N,)).astype(np.uint8)
+
+    fn = jax.jit(jax.shard_map(
+        prefix_doubling, mesh=mesh, in_specs=P("ranks"),
+        out_specs=P("ranks"), check_vma=False,
+    ))
+    ranks = np.asarray(fn(text))
+
+    # reference: argsort of all suffixes
+    s = bytes(text)
+    ref_sa = sorted(range(N), key=lambda i: s[i:])
+    ref_rank = np.zeros(N, np.int32)
+    for r, i in enumerate(ref_sa):
+        ref_rank[i] = r
+    np.testing.assert_array_equal(ranks, ref_rank)
+    print(f"suffix array OK: n={N} over {P_RANKS} ranks, "
+          f"{int(np.ceil(np.log2(N)))} doubling rounds, "
+          f"distinct ranks={len(set(ranks.tolist()))}")
+
+
+if __name__ == "__main__":
+    main()

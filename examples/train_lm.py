@@ -1,0 +1,105 @@
+"""End-to-end driver: train a smollm-family LM on the framework.
+
+The production invocation (multi-host TPU) trains the full ~360M config:
+
+    python -m repro.launch.train --arch smollm-360m --steps 300 \
+        --batch-size 32 --seq-len 2048 --checkpoint-dir /ckpt/smollm
+
+This example runs the same driver end-to-end at a CPU-feasible scale
+(~15M params, a few hundred steps by default via --steps) and asserts the
+loss actually dropped — the full path: config -> sharded init -> pjit'd
+train step -> checkpoint -> restore -> resume.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import ShardingProfile, named_shardings
+from repro.train import AdamWConfig, TrainConfig, Trainer
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=192)
+    ap.add_argument("--layers", type=int, default=6)
+    args = ap.parse_args()
+
+    # smollm family, scaled to the machine (full config = the real run)
+    cfg = dataclasses.replace(
+        get_config("smollm-360m"),
+        num_layers=args.layers, d_model=args.d_model, num_heads=6,
+        num_kv_heads=2, head_dim=32, d_ff=args.d_model * 3,
+        vocab_size=4096, dtype="float32", param_dtype="float32",
+    )
+    mesh = make_host_mesh()
+    profile = ShardingProfile(dp_axes=("data",), tp_axis="model",
+                              fsdp_axes=("data",))
+    trainer = Trainer(
+        cfg, mesh, profile,
+        TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=20,
+                                    total_steps=args.steps)),
+    )
+    params, opt_state, extra = trainer.init_state(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"model: {cfg.name}-scaled  {n_params/1e6:.1f}M params  "
+          f"mesh {dict(mesh.shape)}")
+
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                       batch_size=args.batch_size, seed=0)
+    ckdir = tempfile.mkdtemp(prefix="train_lm_")
+    ckpt = CheckpointManager(ckdir, keep=2)
+
+    step_fn = trainer.step_fn()
+    import time
+
+    first = last = None
+    half = args.steps // 2
+    for i in range(half):
+        batch = trainer.place_batch(next(data))
+        t0 = time.perf_counter()
+        params, opt_state, extra, loss, m = step_fn(params, opt_state, extra, batch)
+        if i % 20 == 0:
+            print(f"step {i:4d} loss {float(loss):.4f} "
+                  f"({(time.perf_counter()-t0)*1e3:.0f} ms)")
+        first = float(loss) if first is None else first
+    ckpt.save(half, {"params": params, "opt": opt_state, "data": data.state()})
+
+    # -- simulate restart: restore and resume ---------------------------------
+    tree, meta = ckpt.restore(half)
+    params = jax.device_put(tree["params"],
+                            named_shardings(mesh, trainer.param_specs))
+    opt_state = jax.device_put(tree["opt"],
+                               named_shardings(mesh, trainer.opt_specs))
+    data2 = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                        batch_size=args.batch_size, seed=0)
+    data2.restore(tree["data"])
+    print(f"-- restart from checkpoint step {half} --")
+    for i in range(half, args.steps):
+        batch = trainer.place_batch(next(data2))
+        params, opt_state, extra, loss, m = step_fn(params, opt_state, extra, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f}")
+        last = float(loss)
+    assert last < first - 0.5, (first, last)
+    print(f"train_lm OK: loss {first:.3f} -> {last:.3f} "
+          f"(including a checkpoint/restore restart)")
+
+
+if __name__ == "__main__":
+    main()

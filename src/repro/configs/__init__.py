@@ -1,0 +1,34 @@
+"""repro.configs — assigned architectures as selectable configs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_REGISTRY = {
+    "mamba2-370m": "mamba2_370m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "mistral-large-123b": "mistral_large_123b",
+    "tinyllama-1.1b": "tinyllama_11b",
+    "smollm-360m": "smollm_360m",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "internvl2-76b": "internvl2_76b",
+    "whisper-medium": "whisper_medium",
+}
+
+
+def list_configs() -> List[str]:
+    return list(_REGISTRY)
+
+
+def get_config(name: str, smoke: bool = False):
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {list(_REGISTRY)}")
+    mod = importlib.import_module(f".{_REGISTRY[name]}", __package__)
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def get_profile(name: str) -> Dict:
+    mod = importlib.import_module(f".{_REGISTRY[name]}", __package__)
+    return dict(mod.PROFILE)

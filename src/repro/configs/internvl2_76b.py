@@ -1,0 +1,24 @@
+"""internvl2-76b [vlm] — InternViT + (llama3-70b-family) LLM backbone
+[arXiv:2404.16821].  80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256.  The ViT frontend is a STUB: input_specs provides
+precomputed patch embeddings spliced into the first positions.
+"""
+from repro.models import ModelConfig
+from ._base import make_smoke
+
+FULL = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=5e5,
+    frontend="vision_stub",
+    num_patches=256,
+)
+SMOKE = make_smoke(FULL, num_layers=2)
+PROFILE = dict(dp_axes_mode="data", tp_axis="model", fsdp="data")

@@ -1,0 +1,22 @@
+"""mistral-large-123b [dense] [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768, head_dim=128.
+FSDP is mandatory: 123B bf16 params = 246 GB.
+"""
+from repro.models import ModelConfig
+from ._base import make_smoke
+
+FULL = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    rope_theta=1e6,
+)
+SMOKE = make_smoke(FULL, num_layers=2)
+PROFILE = dict(dp_axes_mode="data", tp_axis="model", fsdp="data")

@@ -1,0 +1,30 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA [arXiv:2401.04088].
+
+56L d_model=6144 48H (GQA kv=8) expert d_ff=16384 vocab=32768, sliding
+window 4096.  8 experts < 16-wide axis -> TP MoE mode (expert FFNs sharded
+over the model axis; no dispatch collective), see DESIGN.md §4.
+"""
+from repro.models import ModelConfig
+from ._base import make_smoke
+
+FULL = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    moe_d_ff=16384,
+    vocab_size=32768,
+    rope_theta=1e6,
+    num_experts=8,
+    num_shared_experts=0,
+    top_k=2,
+    sliding_window=4096,
+    moe_mode="tp",
+    capacity_factor=1.25,
+)
+SMOKE = make_smoke(FULL, num_layers=2)
+PROFILE = dict(dp_axes_mode="data", tp_axis="model", fsdp="data")

@@ -1,0 +1,28 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B].  24L d_model=2048 16H (kv=16) moe_d_ff=1408
+vocab=151936.  EP dispatch via the paper's capacity-policy alltoallv
+(60 experts padded to 64 = 4 per rank on a 16-wide EP axis).
+"""
+from repro.models import ModelConfig
+from ._base import make_smoke
+
+FULL = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    moe_d_ff=1408,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+    num_experts=60,
+    num_shared_experts=4,
+    top_k=4,
+    moe_mode="ep_alltoall",
+    capacity_factor=1.25,
+)
+SMOKE = make_smoke(FULL, num_layers=2)
+PROFILE = dict(dp_axes_mode="data", tp_axis="model", fsdp="data")

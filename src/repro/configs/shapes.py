@@ -1,0 +1,89 @@
+"""Assigned input-shape sets and per-(arch × shape) applicability.
+
+Every LM arch pairs with 4 shapes; ``long_500k`` requires sub-quadratic
+attention and is skipped (recorded, not silently dropped) for pure
+full-attention archs per the assignment rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "cell_skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _is_subquadratic(cfg) -> bool:
+    """Archs allowed to run long_500k: SSM / hybrid-linear / windowed attn."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    if cfg.sliding_window is not None:
+        return True
+    return False
+
+
+def cell_skip_reason(cfg, shape_name: str) -> Optional[str]:
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not _is_subquadratic(cfg):
+        return (
+            "full quadratic attention: 524k context is out of scope by the "
+            "assignment's sub-quadratic rule (see DESIGN.md §4)"
+        )
+    return None
+
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train: the training batch. prefill: the prompt batch. decode: the
+    (tokens, caches) for one serve_step — caches built by eval_shape over
+    init_decode_caches so no memory is allocated.
+    """
+    from repro.models import init_decode_caches
+
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def batch_struct(seq):
+        b = {"tokens": jax.ShapeDtypeStruct((B, seq), i32)}
+        if cfg.frontend == "vision_stub":
+            b["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), f32
+            )
+        if cfg.frontend == "audio_stub":
+            b["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), f32
+            )
+        return b
+
+    if shape.kind == "train":
+        return {"batch": batch_struct(S)}
+    if shape.kind == "prefill":
+        return {"batch": batch_struct(S)}
+    # decode: one token in flight with a seq_len-deep cache (enc-dec archs
+    # carry their cross-attention KV inside the cache pytree)
+    caches = jax.eval_shape(lambda: init_decode_caches(cfg, B, S))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+        "caches": caches,
+    }

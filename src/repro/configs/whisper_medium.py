@@ -1,0 +1,27 @@
+"""whisper-medium [audio] — enc-dec transformer backbone
+[arXiv:2212.04356].  24+24L d_model=1024 16H (kv=16) d_ff=4096
+vocab=51865; the conv/audio frontend is a STUB (precomputed 1500-frame
+embeddings).  Backbone standardization note (DESIGN.md): rotary+RMSNorm+
+gated-MLP replace whisper's learned-abs-pos/LayerNorm/GELU-MLP — the
+assignment specifies the transformer backbone only.
+"""
+from repro.models import ModelConfig
+from ._base import make_smoke
+
+FULL = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    num_encoder_layers=24,
+    encoder_seq_len=1500,
+    frontend="audio_stub",
+    act="gelu",
+)
+SMOKE = make_smoke(FULL, num_layers=2)
+PROFILE = dict(dp_axes_mode="data", tp_axis="model", fsdp="data")

@@ -1,0 +1,80 @@
+"""repro.core — KaMPIng's contribution as a composable JAX module.
+
+Named-parameter collectives with trace-time parameter inference and
+capacity policies, non-blocking safety, plugins (grid/sparse all-to-all,
+reproducible reduce, ULFM fault tolerance), explicit serialization.
+"""
+from .communicator import Communicator
+from .errors import (
+    AssertionLevel,
+    KampingError,
+    MissingParameterError,
+    MovedBufferError,
+    ParameterConflictError,
+    PendingRequestError,
+    UnsupportedParameterError,
+    assertion_level,
+    set_assertion_level,
+)
+from .flatten import bucketize_by_destination, flatten_buckets, with_flattened
+from .grid import GridCommunicator
+from .nonblocking import NonBlockingResult, RequestPool
+from .params import (
+    Param,
+    ResizePolicy,
+    axis,
+    dest,
+    grow_only,
+    move,
+    no_resize,
+    op,
+    recv_buf,
+    recv_counts,
+    recv_counts_out,
+    recv_displs,
+    recv_displs_out,
+    resize_to_fit,
+    root,
+    send_buf,
+    send_count,
+    send_counts,
+    send_counts_out,
+    send_displs,
+    send_displs_out,
+    send_recv_buf,
+    source,
+    tag,
+)
+from .plugins import Plugin, register_parameter
+from .reproducible import ReproducibleReduce, tree_reduce_canonical
+from .result import Result
+from .serialization import (
+    Serialized,
+    as_deserializable,
+    as_serialized,
+    deserialize,
+    deserialize_like,
+    host_pack,
+    host_unpack,
+)
+from .sparse import SparseAlltoall, neighbors
+from .ulfm import DeviceFailureDetected, RevokedError, WorldComm
+
+__all__ = [
+    "Communicator", "GridCommunicator", "SparseAlltoall",
+    "ReproducibleReduce", "Plugin", "register_parameter",
+    "NonBlockingResult", "RequestPool", "Result", "WorldComm",
+    "DeviceFailureDetected", "RevokedError",
+    "send_buf", "recv_buf", "send_recv_buf", "send_count", "send_counts",
+    "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
+    "send_displs_out", "recv_displs", "recv_displs_out", "op", "root",
+    "dest", "source", "tag", "axis", "move", "neighbors",
+    "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
+    "as_serialized", "as_deserializable", "deserialize", "deserialize_like",
+    "Serialized", "host_pack", "host_unpack",
+    "with_flattened", "flatten_buckets", "bucketize_by_destination",
+    "tree_reduce_canonical", "AssertionLevel", "set_assertion_level",
+    "assertion_level", "KampingError", "MissingParameterError",
+    "ParameterConflictError", "UnsupportedParameterError",
+    "PendingRequestError", "MovedBufferError", "Param",
+]

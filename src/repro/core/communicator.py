@@ -1,0 +1,509 @@
+"""The KaMPIng-style Communicator, mapped onto JAX SPMD collectives.
+
+A :class:`Communicator` names one (or a tuple of) mesh axes and provides
+collective operations *inside* a ``jax.shard_map`` region.  Calls take
+named parameters (:mod:`repro.core.params`); any omitted parameter is
+inferred — with zero staged overhead when the information is available at
+trace time, and with exactly the communication a hand-rolled implementation
+would stage otherwise (paper §III-A: "only required code paths are
+generated at compile time", with trace time playing the role of compile
+time).
+
+Variable collectives (``*v``) use *capacity policies* in place of the
+paper's resize policies because XLA shapes are static: buffers are
+fixed-capacity, counts are (possibly traced) element counts.  See
+``params.ResizePolicy``.
+"""
+from __future__ import annotations
+
+import builtins
+import functools
+import operator
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import params as kp
+from .errors import (
+    AssertionLevel,
+    KampingError,
+    check_enabled,
+)
+from .nonblocking import NonBlockingResult
+from .params import ParamKind as K
+from .params import collect_params
+from .result import Result, make_result
+
+__all__ = ["Communicator"]
+
+
+# --------------------------------------------------------------------------
+# STL-functor -> hardware-collective mapping (paper §II "reduction via
+# lambda" + Boost.MPI functor mapping).
+# --------------------------------------------------------------------------
+_SUM_FNS = {operator.add, jnp.add, builtins.sum, "sum", "+", "plus"}
+_MAX_FNS = {builtins.max, jnp.maximum, "max"}
+_MIN_FNS = {builtins.min, jnp.minimum, "min"}
+_AND_FNS = {operator.and_, jnp.logical_and, "and", "land"}
+_OR_FNS = {operator.or_, jnp.logical_or, "or", "lor"}
+
+
+def _try_hash_lookup(fn, table) -> bool:
+    try:
+        return fn in table
+    except TypeError:  # unhashable
+        return False
+
+
+class Communicator:
+    """Collective operations over one or more mesh axes.
+
+    Instantiate *inside* a shard_map-ed function::
+
+        def step(x):
+            comm = Communicator("data")
+            return comm.allreduce(send_buf(x), op(operator.add))
+    """
+
+    def __init__(self, axis: Any = "data"):
+        self.axis = axis
+        self._axes: Tuple = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+
+    # -- topology ----------------------------------------------------------
+    def size(self) -> int:
+        """Communicator size. Static at trace time (cf. MPI_Comm_size)."""
+        n = 1
+        for a in self._axes:
+            n *= lax.axis_size(a)
+        return n
+
+    def rank(self):
+        """This rank's index (traced value; cf. MPI_Comm_rank)."""
+        return lax.axis_index(self.axis if len(self._axes) > 1 else self._axes[0])
+
+    # -- plugin support (paper §III-F) --------------------------------------
+    def extend(self, *plugin_classes):
+        """Return a communicator extended with plugin mixins.
+
+        Plugins may override collectives and add new named parameters —
+        the mechanism KaMPIng uses for grid/sparse all-to-all, ULFM, and
+        reproducible reduce.
+        """
+        bases = tuple(plugin_classes) + (type(self),)
+        cls = type("+".join(c.__name__ for c in bases), bases, {})
+        ext = cls.__new__(cls)
+        ext.__dict__.update(self.__dict__)
+        for p in plugin_classes:
+            init = getattr(p, "install", None)
+            if init is not None:
+                init(ext)
+        return ext
+
+    # ----------------------------------------------------------------------
+    # Collectives
+    # ----------------------------------------------------------------------
+    def allgather(self, *args):
+        """MPI_Allgather. Accepts send_buf or send_recv_buf (in-place)."""
+        pack = collect_params(
+            "allgather",
+            args,
+            required=((K.SEND_BUF, K.SEND_RECV_BUF),),
+            accepted=(K.RECV_BUF,),
+            in_place_ignored=(K.SEND_COUNT,),
+        )
+        if K.SEND_RECV_BUF in pack:
+            # Simplified MPI_IN_PLACE (paper §III-G): buffer holds one
+            # slot per rank, this rank's slot at index `rank`.
+            x = pack[K.SEND_RECV_BUF].value
+            p = self.size()
+            if x.shape[0] != p:
+                raise KampingError(
+                    f"kamping.allgather(send_recv_buf): leading dim "
+                    f"{x.shape[0]} != communicator size {p}"
+                )
+            mine = lax.dynamic_index_in_dim(x, self.rank(), 0, keepdims=False)
+            out = lax.all_gather(mine, self.axis, axis=0, tiled=False)
+            return out.reshape(x.shape)
+        x = pack[K.SEND_BUF].value
+        return lax.all_gather(x, self.axis, axis=0, tiled=True)
+
+    def allgatherv(self, *args):
+        """MPI_Allgatherv with parameter inference (paper Fig. 1/3).
+
+        ``send_buf(x)`` — x has static capacity ``cap = x.shape[0]``;
+        ``send_count(n)`` — valid prefix length (default: cap, static);
+        ``recv_counts(c)`` / ``recv_counts_out()`` — supplied or inferred
+        (inference stages one all-gather of the scalar count — exactly the
+        exchange in paper Fig. 2);
+        ``recv_displs(...)`` / ``recv_displs_out()``.
+
+        With static counts the result is the exact concatenation and *no*
+        extra communication is staged (the zero-overhead path).  With
+        traced counts the result uses the padded layout: rank i's data at
+        displacement ``i*cap``.
+        """
+        pack = collect_params(
+            "allgatherv",
+            args,
+            required=(K.SEND_BUF,),
+            accepted=(K.SEND_COUNT, K.RECV_COUNTS, K.RECV_DISPLS, K.RECV_BUF),
+        )
+        x = pack[K.SEND_BUF].value
+        cap = x.shape[0]
+        p = self.size()
+        n = pack[K.SEND_COUNT].value if K.SEND_COUNT in pack else cap
+        static_count = isinstance(n, (int, np.integer))
+
+        out_fields = []
+        if static_count:
+            # Zero-overhead path: counts known at trace time -> exact
+            # concat, inferred counts/displs are compile-time constants.
+            buf = lax.all_gather(x[:n], self.axis, axis=0, tiled=True)
+            rc = jnp.full((p,), n, dtype=jnp.int32)
+            rd = jnp.arange(p, dtype=jnp.int32) * n
+        else:
+            buf = lax.all_gather(x, self.axis, axis=0, tiled=True)
+            rc_param = pack.get(K.RECV_COUNTS)
+            if rc_param is not None and not rc_param.is_out and rc_param.value is not None:
+                rc = rc_param.value  # user-supplied: nothing staged
+            else:
+                need_counts = (
+                    (rc_param is not None and rc_param.is_out)
+                    or K.RECV_DISPLS in pack
+                )
+                rc = (
+                    lax.all_gather(jnp.asarray(n, jnp.int32), self.axis)
+                    if need_counts
+                    else None
+                )
+            rd = jnp.arange(p, dtype=jnp.int32) * cap  # padded layout
+
+        out_fields.append(("recv_buf", buf))
+        if K.RECV_COUNTS in pack and pack[K.RECV_COUNTS].is_out:
+            out_fields.append(("recv_counts", rc))
+        if K.RECV_DISPLS in pack and pack[K.RECV_DISPLS].is_out:
+            out_fields.append(("recv_displs", rd))
+        return make_result(out_fields)
+
+    def alltoall(self, *args):
+        """MPI_Alltoall: send_buf shaped (p, chunk, ...)."""
+        pack = collect_params(
+            "alltoall", args, required=(K.SEND_BUF,), accepted=(K.RECV_BUF,)
+        )
+        x = pack[K.SEND_BUF].value
+        p = self.size()
+        if x.shape[0] != p:
+            raise KampingError(
+                f"kamping.alltoall: send_buf leading dim {x.shape[0]} must "
+                f"equal communicator size {p}"
+            )
+        return self._dense_alltoall(x)
+
+    def _dense_alltoall(self, x):
+        """One dense (flat, single-hop) all_to_all over the communicator's
+        axis or axes — rank order is row-major over the axis tuple."""
+        ax = self._axes[0] if len(self._axes) == 1 else self._axes
+        return lax.all_to_all(x, ax, split_axis=0, concat_axis=0, tiled=True)
+
+    def alltoallv(self, *args):
+        """MPI_Alltoallv with capacity policies (the MoE-dispatch workhorse).
+
+        ``send_buf(x)`` — bucketed layout ``(p, cap, ...)``: ``x[j]`` is
+        the (padded) bucket destined for rank ``j``;
+        ``send_counts(sc)`` — (p,) valid element counts per destination
+        (static np arrays take the zero-overhead path);
+        ``recv_counts(...)``/``recv_counts_out()`` — supplied, or inferred
+        with one staged counts all_to_all (paper's default-parameter
+        communication);
+        ``recv_buf(policy)`` — capacity policy for the receive side.
+
+        Returns recv_buf ``(p, cap_r, ...)`` (+ requested outs); entry
+        ``[j]`` is what rank j sent here.
+        """
+        pack = collect_params(
+            "alltoallv",
+            args,
+            required=(K.SEND_BUF,),
+            accepted=(
+                K.SEND_COUNTS,
+                K.RECV_COUNTS,
+                K.RECV_DISPLS,
+                K.SEND_DISPLS,
+                K.RECV_BUF,
+            ),
+        )
+        x = pack[K.SEND_BUF].value
+        p = self.size()
+        if x.ndim < 2 or x.shape[0] != p:
+            raise KampingError(
+                f"kamping.alltoallv: send_buf must be bucketed (p, cap, ...) "
+                f"with p={p}; got shape {x.shape}. Use with_flattened(...) "
+                f"to build buckets from destination->data mappings."
+            )
+        cap = x.shape[1]
+        sc = pack[K.SEND_COUNTS].value if K.SEND_COUNTS in pack else None
+
+        rb = pack.get(K.RECV_BUF)
+        policy = rb.policy if rb is not None else kp.resize_to_fit
+        if isinstance(policy, kp.grow_only):
+            cap_r = policy.capacity
+            if cap_r > cap:
+                pad = [(0, 0)] * x.ndim
+                pad[1] = (0, cap_r - cap)
+                x = jnp.pad(x, pad)
+            elif cap_r < cap:
+                if check_enabled(AssertionLevel.NORMAL) and sc is not None:
+                    x = _check_counts_fit(x, sc, cap_r, "alltoallv")
+                x = x[:, :cap_r]
+        # resize_to_fit / no_resize: symmetric capacity (= send capacity).
+
+        buf = self._dense_alltoall(x)
+
+        out_fields = [("recv_buf", buf)]
+        rc_param = pack.get(K.RECV_COUNTS)
+        if rc_param is not None:
+            if rc_param.is_out:
+                if sc is None:
+                    raise KampingError(
+                        "kamping.alltoallv: recv_counts_out() requires "
+                        "send_counts(...) to infer from"
+                    )
+                # Staged counts exchange — only because it was requested.
+                rc = self._counts_transpose(sc)
+                out_fields.append(("recv_counts", rc))
+            # else: user-supplied, nothing staged, nothing returned.
+        if K.RECV_DISPLS in pack and pack[K.RECV_DISPLS].is_out:
+            out_fields.append(
+                ("recv_displs", jnp.arange(p, dtype=jnp.int32) * buf.shape[1])
+            )
+
+        if check_enabled(AssertionLevel.HEAVY) and sc is not None:
+            # Communication-level assertion (paper §III-G): total elements
+            # sent == total elements received, verified globally.
+            sent = jnp.sum(jnp.asarray(sc))
+            total_sent = lax.psum(sent, self.axis)
+            rc_chk = self._counts_transpose(jnp.asarray(sc))
+            total_recv = lax.psum(jnp.sum(rc_chk), self.axis)
+            buf = _stage_equal_check(buf, total_sent, total_recv, "alltoallv")
+            out_fields[0] = ("recv_buf", buf)
+
+        return make_result(out_fields)
+
+    def _counts_transpose(self, sc):
+        """recv_counts[j] = send_counts of rank j towards me."""
+        sc = jnp.asarray(sc, jnp.int32).reshape(self.size(), 1)
+        return self._dense_alltoall(sc).reshape(self.size())
+
+    # -- reductions ---------------------------------------------------------
+    def allreduce(self, *args):
+        """MPI_Allreduce with functor mapping / reduction-via-lambda."""
+        pack = collect_params(
+            "allreduce",
+            args,
+            required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
+            accepted=(K.RECV_BUF,),
+        )
+        x = pack.get(K.SEND_BUF, pack.get(K.SEND_RECV_BUF)).value
+        return self._reduce_impl(x, pack[K.OP])
+
+    def allreduce_single(self, *args):
+        """Scalar allreduce (used by the paper's BFS termination check)."""
+        out = self.allreduce(*args)
+        return out if not isinstance(out, Result) else out.recv_buf
+
+    def _reduce_impl(self, x, op_param):
+        fn = op_param.value
+        x = jnp.asarray(x)
+        if _try_hash_lookup(fn, _SUM_FNS):
+            return lax.psum(x, self.axis)
+        if _try_hash_lookup(fn, _MAX_FNS):
+            return lax.pmax(x, self.axis)
+        if _try_hash_lookup(fn, _MIN_FNS):
+            return lax.pmin(x, self.axis)
+        if _try_hash_lookup(fn, _AND_FNS):
+            return lax.pmin(x.astype(jnp.int32), self.axis).astype(x.dtype)
+        if _try_hash_lookup(fn, _OR_FNS):
+            return lax.pmax(x.astype(jnp.int32), self.axis).astype(x.dtype)
+        # Reduction via lambda: left fold in rank order (deterministic,
+        # supports non-commutative ops). Staged as gather + lax.scan.
+        gathered = lax.all_gather(x, self.axis, axis=0, tiled=False)
+        def body(acc, v):
+            return fn(acc, v), None
+        acc, _ = lax.scan(body, gathered[0], gathered[1:])
+        return acc
+
+    def reduce(self, *args):
+        """MPI_Reduce: like allreduce; `root(...)` kept for API parity.
+
+        Under SPMD every rank computes the value (documented deviation:
+        there is no cheaper root-only reduction on a TPU mesh).
+        """
+        pack = collect_params(
+            "reduce",
+            args,
+            required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
+            accepted=(K.ROOT, K.RECV_BUF),
+        )
+        x = pack.get(K.SEND_BUF, pack.get(K.SEND_RECV_BUF)).value
+        return self._reduce_impl(x, pack[K.OP])
+
+    def exscan(self, *args):
+        """MPI_Exscan (exclusive prefix) over ranks."""
+        pack = collect_params(
+            "exscan", args, required=(K.SEND_BUF, K.OP), accepted=()
+        )
+        x = jnp.asarray(pack[K.SEND_BUF].value)
+        fn = pack[K.OP].value
+        gathered = lax.all_gather(x, self.axis, axis=0, tiled=False)
+        if _try_hash_lookup(fn, _SUM_FNS):
+            csum = jnp.cumsum(gathered, axis=0)
+            excl = jnp.concatenate([jnp.zeros_like(gathered[:1]), csum[:-1]], 0)
+        else:
+            def body(acc, v):
+                nxt = fn(acc, v)
+                return nxt, acc
+            _, excl = lax.scan(body, jnp.zeros_like(gathered[0]), gathered)
+        return lax.dynamic_index_in_dim(excl, self.rank(), 0, keepdims=False)
+
+    def scan(self, *args):
+        """MPI_Scan (inclusive prefix) over ranks."""
+        pack = collect_params("scan", args, required=(K.SEND_BUF, K.OP), accepted=())
+        x = jnp.asarray(pack[K.SEND_BUF].value)
+        fn = pack[K.OP].value
+        gathered = lax.all_gather(x, self.axis, axis=0, tiled=False)
+        if _try_hash_lookup(fn, _SUM_FNS):
+            incl = jnp.cumsum(gathered, axis=0)
+        else:
+            def body(acc, v):
+                nxt = fn(acc, v)
+                return nxt, nxt
+            _, incl = lax.scan(body, jnp.zeros_like(gathered[0]), gathered)
+        return lax.dynamic_index_in_dim(incl, self.rank(), 0, keepdims=False)
+
+    # -- rooted ops ----------------------------------------------------------
+    def bcast(self, *args):
+        """MPI_Bcast. ``send_recv_buf`` on all ranks; ``root`` defaults 0."""
+        pack = collect_params(
+            "bcast",
+            args,
+            required=(K.SEND_RECV_BUF,),
+            accepted=(K.ROOT,),
+        )
+        x = pack[K.SEND_RECV_BUF].value
+        r = pack[K.ROOT].value if K.ROOT in pack else 0
+        return self._bcast_value(x, r)
+
+    def _bcast_value(self, x, r):
+        from .serialization import Serialized, deserialize_like
+
+        if isinstance(x, Serialized):
+            payload = self._bcast_value(x.buffer, r)
+            return deserialize_like(x, payload)
+        x = jnp.asarray(x)
+        if (
+            isinstance(r, (int, np.integer))
+            and len(self._axes) == 1
+            and jax.default_backend() == "tpu"
+        ):
+            # Static root -> the hardware-optimized CollectiveBroadcast HLO.
+            # (No CPU lowering exists, so the interpret/dry-run environment
+            # takes the masked-psum path below — semantically identical.)
+            return lax.pbroadcast(x, self._axes[0], int(r))
+        # Traced root / multi-axis: masked psum (semantically identical).
+        mask = self.rank() == r
+        if x.dtype == jnp.bool_:
+            masked = jnp.where(mask, x, False)
+            return lax.pmax(masked.astype(jnp.int32), self.axis).astype(jnp.bool_)
+        return lax.psum(x * mask.astype(x.dtype), self.axis)
+
+    def gather(self, *args):
+        """MPI_Gather — SPMD note: result materializes on *all* ranks
+        (an all-gather); `root` kept for API parity."""
+        pack = collect_params(
+            "gather", args, required=(K.SEND_BUF,), accepted=(K.ROOT, K.RECV_BUF)
+        )
+        return lax.all_gather(pack[K.SEND_BUF].value, self.axis, axis=0, tiled=True)
+
+    def gatherv(self, *args):
+        return self.allgatherv(*args)
+
+    def scatter(self, *args):
+        """MPI_Scatter: root's (p, chunk, ...) buffer; each rank gets [rank]."""
+        pack = collect_params(
+            "scatter", args, required=(K.SEND_BUF,), accepted=(K.ROOT,)
+        )
+        x = pack[K.SEND_BUF].value
+        r = pack[K.ROOT].value if K.ROOT in pack else 0
+        x = self._bcast_value(x, r)
+        return lax.dynamic_index_in_dim(x, self.rank(), 0, keepdims=False)
+
+    def barrier(self):
+        """Semantic no-op under SPMD bulk-synchronous execution; stages a
+        trivial psum so program order is preserved where it matters."""
+        return lax.psum(jnp.zeros((), jnp.int32), self.axis)
+
+    # -- point-to-point -------------------------------------------------------
+    def send_recv(self, *args, perm: Optional[Sequence[Tuple[int, int]]] = None):
+        """Combined send+recv (SPMD p2p = collective_permute).
+
+        Either pass ``perm=[(src, dst), ...]`` or ``dest(fn)`` where fn maps
+        rank -> destination rank (a static schedule).
+        """
+        pack = collect_params(
+            "send_recv", args, required=(K.SEND_BUF,), accepted=(K.DEST, K.TAG)
+        )
+        x = pack[K.SEND_BUF].value
+        if perm is None:
+            if K.DEST not in pack:
+                raise KampingError(
+                    "kamping.send_recv: pass perm=[(src,dst),...] or dest(fn)"
+                )
+            dfn = pack[K.DEST].value
+            p = self.size()
+            perm = [(i, int(dfn(i)) % p) for i in range(p)]
+        return lax.ppermute(x, self.axis, perm)
+
+    # -- non-blocking variants (paper §III-E) ----------------------------------
+    def _nb(self, fn, *args, **kw) -> NonBlockingResult:
+        moved = [a for a in args if isinstance(a, kp.Param) and a.moved]
+        value = fn(*args, **kw)
+        return NonBlockingResult(value, moved_params=moved)
+
+    def iallgather(self, *args) -> NonBlockingResult:
+        return self._nb(self.allgather, *args)
+
+    def iallgatherv(self, *args) -> NonBlockingResult:
+        return self._nb(self.allgatherv, *args)
+
+    def ialltoallv(self, *args) -> NonBlockingResult:
+        return self._nb(self.alltoallv, *args)
+
+    def iallreduce(self, *args) -> NonBlockingResult:
+        return self._nb(self.allreduce, *args)
+
+    def isend_recv(self, *args, perm=None) -> NonBlockingResult:
+        return self._nb(self.send_recv, *args, perm=perm)
+
+
+# --------------------------------------------------------------------------
+# staged runtime checks
+# --------------------------------------------------------------------------
+def _check_counts_fit(x, counts, cap, opname):
+    """NORMAL-level staged assertion: counts <= capacity (overflow check)."""
+    ok = jnp.all(jnp.asarray(counts) <= cap)
+    # Poison the buffer with NaN/sentinel on failure so the error is
+    # observable without host callbacks (which don't exist on TPU fast
+    # paths). Debug builds can use jax.debug.check instead.
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.where(ok, x, jnp.nan)
+    return jnp.where(ok, x, jnp.iinfo(x.dtype).max)
+
+
+def _stage_equal_check(buf, a, b, opname):
+    ok = a == b
+    if jnp.issubdtype(buf.dtype, jnp.floating):
+        return jnp.where(ok, buf, jnp.nan)
+    return jnp.where(ok, buf, jnp.iinfo(buf.dtype).max)

@@ -1,0 +1,110 @@
+"""``with_flattened`` — the paper's BFS helper (§IV-B, Fig. 9).
+
+Flattens a destination->messages mapping into the contiguous bucketed
+layout expected by ``alltoallv`` while also providing send counts.  Two
+modes:
+
+* **host mode** (dict of numpy arrays, outside jit): exact ragged flatten,
+  returns a ``(p, cap, ...)`` bucket tensor padded to the max bucket plus
+  the exact counts — this is what irregular discrete algorithms (BFS,
+  sample sort) use between steps.
+* **staged mode** (traced ``(n,)`` data + ``(n,)`` destination ranks inside
+  jit): a sort-by-destination bucketization with a static per-peer
+  capacity — the MoE-dispatch primitive.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import params as kp
+
+__all__ = ["with_flattened", "flatten_buckets", "bucketize_by_destination"]
+
+
+class _FlattenedCall:
+    """Callable wrapper mirroring ``with_flattened(...).call(lambda ...)``."""
+
+    def __init__(self, buckets, counts):
+        self.buckets = buckets
+        self.counts = counts
+
+    def call(self, fn: Callable):
+        return fn(kp.send_buf(self.buckets), kp.send_counts(self.counts))
+
+    def __iter__(self):
+        return iter((self.buckets, self.counts))
+
+
+def flatten_buckets(messages: Dict[int, Any], comm_size: int, pad_value=0):
+    """Host-side ragged flatten: dict rank->array -> ((p,cap,...), counts)."""
+    arrays = {}
+    trailing = None
+    dtype = None
+    for r, v in messages.items():
+        a = np.asarray(v)
+        arrays[int(r)] = a
+        t = a.shape[1:]
+        if trailing is None:
+            trailing, dtype = t, a.dtype
+        elif t != trailing:
+            raise ValueError(
+                f"with_flattened: inconsistent message trailing shapes "
+                f"{t} vs {trailing}"
+            )
+    if trailing is None:
+        trailing, dtype = (), np.int32
+    cap = max((a.shape[0] for a in arrays.values()), default=0)
+    cap = max(cap, 1)  # zero-capacity buffers break collectives; keep 1 slot
+    buckets = np.full((comm_size, cap) + trailing, pad_value, dtype=dtype)
+    counts = np.zeros((comm_size,), np.int32)
+    for r, a in arrays.items():
+        if not 0 <= r < comm_size:
+            raise ValueError(f"with_flattened: destination {r} out of range")
+        buckets[r, : a.shape[0]] = a
+        counts[r] = a.shape[0]
+    return buckets, counts
+
+
+def bucketize_by_destination(data, dest_ranks, comm_size: int, capacity: int,
+                             pad_value=0):
+    """Staged bucketization: sort traced data by destination rank.
+
+    ``data``: (n, ...); ``dest_ranks``: (n,) int32 in [0, comm_size).
+    Returns ``(p, capacity, ...)`` buckets + ``(p,)`` counts.  Elements
+    beyond ``capacity`` for a peer are dropped (capacity-policy semantics —
+    callers choose capacity via napkin math or grow_only asserts).
+    """
+    data = jnp.asarray(data)
+    dest = jnp.asarray(dest_ranks, jnp.int32)
+    n = data.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sdata = jnp.take(data, order, axis=0)
+    sdest = jnp.take(dest, order)
+    counts = jnp.bincount(sdest, length=comm_size).astype(jnp.int32)
+    displs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    # position within bucket
+    pos = jnp.arange(n, dtype=jnp.int32) - jnp.take(displs, sdest)
+    valid = pos < capacity
+    flat_idx = jnp.where(valid, sdest * capacity + pos, comm_size * capacity)
+    buckets_flat = jnp.full(
+        (comm_size * capacity + 1,) + data.shape[1:], pad_value, data.dtype
+    )
+    buckets_flat = buckets_flat.at[flat_idx].set(sdata, mode="drop")
+    buckets = buckets_flat[:-1].reshape((comm_size, capacity) + data.shape[1:])
+    return buckets, jnp.minimum(counts, capacity)
+
+
+def with_flattened(messages, comm_size: int, **kw) -> _FlattenedCall:
+    """Paper Fig. 9: ``with_flattened(frontier, comm.size()).call(...)``."""
+    if isinstance(messages, dict):
+        buckets, counts = flatten_buckets(messages, comm_size, **kw)
+    else:
+        raise TypeError(
+            "with_flattened expects a dict rank->messages on the host path; "
+            "inside jit use bucketize_by_destination(...)"
+        )
+    return _FlattenedCall(buckets, counts)

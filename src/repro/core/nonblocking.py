@@ -1,0 +1,102 @@
+"""Safety for non-blocking communication (paper §III-E).
+
+MPI returns a bare request handle and trusts the user not to touch buffers
+until completion.  KaMPIng instead returns a *non-blocking result* that owns
+both the request and the (moved) buffers; data is only accessible after
+``wait()`` / a successful ``test()``.
+
+On TPU the XLA runtime schedules and overlaps collectives itself, so the
+"request" has no device-side analogue — but the *safety property* (no access
+to in-flight buffers) is enforceable at trace time, which is where all user
+code runs.  A :class:`NonBlockingResult`:
+
+* hides the operation's value until ``wait()`` is called,
+* re-returns buffers that were ``move(...)``d into the call (ownership
+  round-trip, zero copies — they are the same traced values),
+* supports ``test()`` returning an optional-style ``(ready, value)``.
+
+:class:`RequestPool` collects results for bulk completion (paper's request
+pools), including a fixed-slot variant that bounds the number of in-flight
+operations (the paper mentions this as work in progress — we implement it).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+from .errors import KampingError, PendingRequestError
+
+__all__ = ["NonBlockingResult", "RequestPool"]
+
+
+class NonBlockingResult:
+    def __init__(self, value: Any, moved_params: Sequence = ()):
+        self._value = value
+        self._moved = list(moved_params)
+        self._completed = False
+
+    # -- paper API -----------------------------------------------------------
+    def wait(self):
+        """Complete the request and release the value (+ moved buffers)."""
+        if self._completed:
+            raise PendingRequestError(
+                "non-blocking result already completed; the value was "
+                "moved out by the previous wait()"
+            )
+        self._completed = True
+        if self._moved:
+            return (self._value, *(p.value for p in self._moved))
+        return self._value
+
+    def test(self):
+        """Optional-style completion test.
+
+        Trace-time model: completion is decided by the XLA scheduler, so at
+        the program level ``test()`` conservatively reports ready (the
+        staged program has a data dependency anyway).  Returns
+        ``(True, value)``; after the value is taken the result is spent.
+        """
+        return True, self.wait()
+
+    # -- safety --------------------------------------------------------------
+    @property
+    def value(self):
+        raise PendingRequestError(
+            "result of a non-blocking operation accessed before wait(); "
+            "call .wait() (or .test()) to complete the request first"
+        )
+
+    @property
+    def completed(self) -> bool:
+        return self._completed
+
+
+class RequestPool:
+    """Bulk completion of non-blocking results (paper §III-E).
+
+    ``slots=None`` gives the unbounded pool from the paper;  a fixed
+    ``slots=k`` bounds concurrency: ``submit`` on a full pool first waits
+    for (and yields) the oldest request — backpressure for pipelined
+    communication loops.
+    """
+
+    def __init__(self, slots: Optional[int] = None):
+        if slots is not None and slots <= 0:
+            raise KampingError("RequestPool: slots must be positive or None")
+        self._slots = slots
+        self._pending: List[NonBlockingResult] = []
+
+    def submit(self, result: NonBlockingResult):
+        """Add a request; returns the evicted request's value (or None)."""
+        evicted = None
+        if self._slots is not None and len(self._pending) >= self._slots:
+            evicted = self._pending.pop(0).wait()
+        self._pending.append(result)
+        return evicted
+
+    def wait_all(self) -> List[Any]:
+        out = [r.wait() for r in self._pending]
+        self._pending.clear()
+        return out
+
+    def __len__(self):
+        return len(self._pending)

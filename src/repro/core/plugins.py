@@ -1,0 +1,50 @@
+"""Plugin architecture (paper §III-F).
+
+KaMPIng keeps the communicator core small; building blocks (grid/sparse
+all-to-all, reproducible reduce, fault tolerance) are plugins that extend a
+communicator with new member functions — and may define *new named
+parameters* participating in the same trace-time checking machinery.
+
+Usage::
+
+    comm = Communicator("data").extend(GridCommunicator, ReproducibleReduce)
+    comm.grid_alltoallv(send_buf(x), send_counts(c))
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .params import Param, ParamKind
+
+__all__ = ["Plugin", "register_parameter"]
+
+_EXTRA_PARAMS: Dict[str, Callable] = {}
+
+
+class Plugin:
+    """Base class for communicator plugins (mixin style).
+
+    Subclasses add methods; ``install(comm)`` (optional classmethod) runs
+    when the plugin is attached via ``Communicator.extend``.
+    """
+
+    @classmethod
+    def install(cls, comm):  # pragma: no cover - default no-op
+        return None
+
+
+def register_parameter(name: str, factory: Callable):
+    """Let a plugin define a new named parameter factory (paper §III-F:
+    "plugin implementers can define new named parameters").
+
+    The factory must return a :class:`Param`; it becomes importable from
+    the plugin namespace and participates in collect_params checking.
+    """
+    if name in _EXTRA_PARAMS:
+        raise ValueError(f"named parameter '{name}' already registered")
+    _EXTRA_PARAMS[name] = factory
+    return factory
+
+
+def get_registered_parameter(name: str):
+    return _EXTRA_PARAMS.get(name)

@@ -1,0 +1,118 @@
+"""ReproducibleReduce plugin (paper §V-C, Fig. 13).
+
+IEEE-754 addition is commutative but not associative: the *grouping* of a
+distributed sum usually follows the machine topology, so results change
+with the number of ranks.  The paper fixes a binary reduction tree over the
+*global element order*, independent of p, and evaluates it with a few
+messages rather than gather+reduce+bcast.
+
+Adaptation for gradient reduction: the reduced quantity is a sum of ``M``
+canonical *leaf partials* (M static, chosen per-run: e.g. one per
+microbatch).  Rank r holds leaves ``[r·M/p, (r+1)·M/p)``.  The perfect
+binary tree over the M leaves is evaluated
+
+* locally for the low ``log2(M/p)`` levels (canonical adjacent pairing),
+* across ranks for the top ``log2(p)`` levels via masked
+  ``collective_permute`` hops (partner = rank + 2^k), with a fixed
+  left/right operand grouping,
+
+then broadcast from the tree root.  Because the *tree* depends only on M,
+the result is bitwise identical for every power-of-two p dividing M —
+verified in tests for p ∈ {1, 2, 4, 8}.
+
+Cost: 2·log2(p) latency-bound permute hops on a vector of the payload
+size — vs. all-gather of p·payload for gather+local-reduce (the paper's
+"faster than gather + local reduction + broadcast").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .errors import KampingError
+from .params import ParamKind as K
+from .params import collect_params
+from .plugins import Plugin
+
+__all__ = ["ReproducibleReduce", "tree_reduce_canonical"]
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def tree_reduce_canonical(leaves, fn=jnp.add):
+    """Reduce a stack of leaf partials (m, ...) with the canonical perfect
+    binary tree: level l pairs blocks of 2^l adjacent leaves.  m must be a
+    power of two.  Pure function — the local phase of the plugin, also
+    usable standalone for p-invariant microbatch accumulation."""
+    m = leaves.shape[0]
+    if not _is_pow2(m):
+        raise KampingError(
+            f"tree_reduce_canonical: leaf count {m} must be a power of two"
+        )
+    x = leaves
+    while x.shape[0] > 1:
+        x = fn(x[0::2], x[1::2])
+    return x[0]
+
+
+class ReproducibleReduce(Plugin):
+    def reproducible_allreduce(self, *args):
+        """p-invariant allreduce of canonically ordered leaf partials.
+
+        ``send_buf(x)`` — x: (m_local, ...) leaf partials, global leaf index
+        = rank·m_local + i.  Global leaf count M = p·m_local must be a power
+        of two.  Optional ``op(fn)`` (default sum; must be commutative —
+        grouping is what the tree fixes).
+
+        Returns the tree-reduced value, identical on all ranks and bitwise
+        independent of p (for fixed M and leaf data).
+        """
+        pack = collect_params(
+            "reproducible_allreduce",
+            args,
+            required=(K.SEND_BUF,),
+            accepted=(K.OP,),
+        )
+        x = jnp.asarray(pack[K.SEND_BUF].value)
+        fn = pack[K.OP].value if K.OP in pack else jnp.add
+        if not callable(fn):
+            fn = jnp.add
+        if len(self._axes) != 1:
+            raise KampingError(
+                "reproducible_allreduce requires a single-axis communicator"
+            )
+        axis = self._axes[0]
+        p = self.size()
+        if not _is_pow2(p):
+            raise KampingError(
+                f"reproducible_allreduce: communicator size {p} must be a "
+                f"power of two (mesh axes on TPU pods are)"
+            )
+        if x.ndim < 1 or not _is_pow2(x.shape[0]):
+            raise KampingError(
+                "reproducible_allreduce: send_buf must be (m_local, ...) "
+                f"with power-of-two m_local; got shape {x.shape}"
+            )
+
+        # Local levels: canonical adjacent pairing.
+        partial = tree_reduce_canonical(x, fn)
+
+        # Cross-rank levels: at level k, partner pairs are (r, r + 2^k) for
+        # r ≡ 0 (mod 2^{k+1}); grouping fixed as fn(left=low rank, right=
+        # high rank).  All ranks execute the permute; non-roots carry a
+        # stale value that is masked out of the final broadcast.
+        rank = lax.axis_index(axis)
+        k = 1
+        while k < p:
+            perm = [(r, (r - k) % p) for r in range(p)]  # shift partials down
+            incoming = lax.ppermute(partial, axis, perm)
+            combined = fn(partial, incoming)
+            is_left = (rank % (2 * k)) == 0
+            partial = jnp.where(is_left, combined, partial)
+            k *= 2
+
+        # Broadcast the root (rank 0) value.
+        mask = (rank == 0).astype(partial.dtype)
+        return lax.psum(partial * mask, axis)

@@ -1,0 +1,106 @@
+"""Explicit serialization (paper §III-D3).
+
+KaMPIng refuses to serialize implicitly — hidden (de)serialization means
+hidden allocation and compute.  ``as_serialized(tree)`` *explicitly* packs
+an arbitrary pytree of arrays into one contiguous ``uint8`` buffer (flatten
++ byte-cast + concat) carrying a static spec, so it can travel through any
+single-buffer collective (bcast/send/…); ``deserialize`` reverses it.
+
+This is the TPU analogue of Cereal-backed serialization: the "archive" is a
+flat byte tensor, the "type registry" is the pytree treedef + per-leaf
+(shape, dtype) — all static, so the pack/unpack stages to pure reshapes and
+bitcasts (no host round-trip, no hidden copies beyond the concat itself).
+
+For *host-side* objects (configs, checkpoint metadata) there is a pickle
+archive, used only outside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["as_serialized", "Serialized", "deserialize_like", "host_pack", "host_unpack"]
+
+
+@dataclasses.dataclass
+class Serialized:
+    """A pytree packed into one uint8 buffer + its static spec."""
+
+    buffer: Any  # uint8[total_bytes]
+    treedef: Any
+    leaf_specs: List[Tuple[Tuple[int, ...], Any]]  # (shape, dtype) per leaf
+
+    @property
+    def nbytes(self) -> int:
+        return self.buffer.shape[0]
+
+
+def _leaf_bytes(shape, dtype) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * np.dtype(dtype).itemsize
+
+
+def as_serialized(tree) -> Serialized:
+    """Explicitly pack a pytree of arrays into a byte buffer (Fig. 5/11)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    specs = []
+    chunks = []
+    for leaf in leaves:
+        leaf = jnp.asarray(leaf)
+        specs.append((tuple(leaf.shape), leaf.dtype))
+        # bitcast to bytes: view via uint8 of the flattened leaf
+        flat = leaf.reshape(-1)
+        if flat.dtype == jnp.bool_:
+            flat = flat.astype(jnp.uint8)
+        chunks.append(jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1))
+    buffer = (
+        jnp.concatenate(chunks) if chunks else jnp.zeros((0,), jnp.uint8)
+    )
+    return Serialized(buffer, treedef, specs)
+
+
+def as_deserializable(tree_like) -> Serialized:
+    """Receive-side spec: a Serialized with an empty buffer of the right
+    size, describing what to reconstruct (cf. ``as_deserializable<dict>()``)."""
+    s = as_serialized(jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.result_type(x)), tree_like))
+    return s
+
+
+def deserialize_like(spec: Serialized, buffer) -> Any:
+    """Unpack a byte buffer using a Serialized's static spec."""
+    leaves = []
+    off = 0
+    for shape, dtype in spec.leaf_specs:
+        nb = _leaf_bytes(shape, dtype)
+        chunk = jax.lax.dynamic_slice_in_dim(buffer, off, nb)
+        if np.dtype(dtype) == np.bool_:
+            leaf = chunk.astype(jnp.bool_).reshape(shape)
+        else:
+            itemsize = np.dtype(dtype).itemsize
+            leaf = jax.lax.bitcast_convert_type(
+                chunk.reshape(-1, itemsize), jnp.dtype(dtype)
+            ).reshape(shape)
+        leaves.append(leaf)
+        off += nb
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def deserialize(s: Serialized) -> Any:
+    return deserialize_like(s, s.buffer)
+
+
+# -- host-side archive (outside jit only) ------------------------------------
+def host_pack(obj) -> np.ndarray:
+    """Pickle archive for host metadata (checkpoint manifests, configs)."""
+    return np.frombuffer(pickle.dumps(obj), dtype=np.uint8).copy()
+
+
+def host_unpack(buf: np.ndarray):
+    return pickle.loads(np.asarray(buf, dtype=np.uint8).tobytes())

@@ -1,0 +1,128 @@
+"""SparseAlltoall plugin (paper §V-A, NBX by Hoefler et al.).
+
+MPI's NBX discovers unknown communication partners with nondeterministic
+probes — a mechanism with no SPMD/TPU analogue (documented in DESIGN.md).
+What *does* transfer is the insight: **a sparse exchange must not pay Θ(p)**.
+
+Here sparsity is expressed as a static set of rank *offsets* (destination =
+(rank + offset) mod p), the natural form for SPMD programs (halo exchanges,
+hypercube phases, graph partitions with bounded neighborhoods).  Each
+offset stages exactly one ``collective_permute`` — cost ∝ |neighborhood|,
+not p, and offsets unused by the program are pruned at trace time (the
+KaMPIng zero-overhead move).
+
+A *masked* dynamic variant supports traced per-peer validity: the schedule
+is still the static offset list, but payload slots carry a validity count
+so receivers can ignore empty messages — the price of static shapes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+from jax import lax
+
+from .errors import KampingError
+from .params import Param, ParamKind
+from .plugins import Plugin, register_parameter
+from .result import make_result
+
+__all__ = ["SparseAlltoall", "neighbors"]
+
+
+# A plugin-defined named parameter (paper §III-F lets plugins add these).
+_NEIGHBORS = ParamKind  # reuse enum namespace is not possible; use factory
+
+
+class _NeighborsParam(Param):
+    pass
+
+
+def neighbors(offsets: Sequence[int]) -> _NeighborsParam:
+    """Static neighborhood: destination ranks = (rank + off) % p, per off."""
+    p = _NeighborsParam.__new__(_NeighborsParam)
+    Param.__init__(p, ParamKind.DEST, tuple(int(o) for o in offsets))
+    return p
+
+
+register_parameter("neighbors", neighbors)
+
+
+class SparseAlltoall(Plugin):
+    def alltoallv_sparse(self, *args):
+        """Sparse personalized exchange over a static neighborhood.
+
+        Parameters: ``send_buf(x)`` with x shaped ``(k, cap, ...)`` — slot i
+        holds the payload for neighbor ``offsets[i]``; ``neighbors([...])``;
+        optional ``send_counts((k,))`` -> returned ``recv_counts`` when
+        requested via ``recv_counts_out()``.
+
+        Returns recv_buf ``(k, cap, ...)`` where slot i holds the payload
+        *from* rank ``(rank - offsets[i]) % p`` (the mirrored neighborhood),
+        matching MPI neighborhood-collective semantics on a symmetric
+        topology.
+        """
+        neigh = None
+        rest = []
+        for a in args:
+            if isinstance(a, _NeighborsParam):
+                if neigh is not None:
+                    raise KampingError("alltoallv_sparse: neighbors(...) given twice")
+                neigh = a.value
+            else:
+                rest.append(a)
+        if neigh is None:
+            raise KampingError(
+                "alltoallv_sparse: missing neighbors([...]) parameter "
+                "(the static offset list defining the sparse topology)"
+            )
+        from .params import collect_params, ParamKind as K
+
+        pack = collect_params(
+            "alltoallv_sparse",
+            rest,
+            required=(K.SEND_BUF,),
+            accepted=(K.SEND_COUNTS, K.RECV_COUNTS, K.RECV_BUF),
+        )
+        x = pack[K.SEND_BUF].value
+        if x.shape[0] != len(neigh):
+            raise KampingError(
+                f"alltoallv_sparse: send_buf leading dim {x.shape[0]} != "
+                f"len(neighbors)={len(neigh)}"
+            )
+        if len(self._axes) != 1:
+            raise KampingError(
+                "alltoallv_sparse requires a single-axis communicator "
+                "(collective_permute schedules are per-axis)"
+            )
+        axis = self._axes[0]
+        p = self.size()
+
+        received = []
+        for i, off in enumerate(neigh):
+            off = off % p
+            if off == 0:
+                received.append(x[i])  # self-message: no wire traffic staged
+                continue
+            perm = [(r, (r + off) % p) for r in range(p)]
+            received.append(lax.ppermute(x[i], axis, perm))
+        buf = jnp.stack(received, axis=0)
+
+        out_fields = [("recv_buf", buf)]
+        rc_param = pack.get(K.RECV_COUNTS)
+        if rc_param is not None and rc_param.is_out:
+            if K.SEND_COUNTS not in pack:
+                raise KampingError(
+                    "alltoallv_sparse: recv_counts_out() requires send_counts(...)"
+                )
+            sc = jnp.asarray(pack[K.SEND_COUNTS].value, jnp.int32)
+            rcs = []
+            for i, off in enumerate(neigh):
+                off = off % p
+                if off == 0:
+                    rcs.append(sc[i])
+                    continue
+                perm = [(r, (r + off) % p) for r in range(p)]
+                rcs.append(lax.ppermute(sc[i], axis, perm))
+            out_fields.append(("recv_counts", jnp.stack(rcs)))
+        return make_result(out_fields)

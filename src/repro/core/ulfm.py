@@ -1,0 +1,126 @@
+"""ULFM-style fault tolerance (paper §V-B, Fig. 12).
+
+MPI's User-Level Failure Mitigation lets survivors *revoke* a communicator
+and *shrink* it to the living ranks.  On TPU fleets the failure unit is a
+host/slice and recovery is re-meshing + restoring state, so the adaptation
+is a host-level ``WorldComm``:
+
+* failures surface as :class:`DeviceFailureDetected` exceptions (idiomatic
+  C++-exceptions-over-return-codes, per the paper),
+* ``revoke()`` marks the world dead for everyone,
+* ``shrink()`` rebuilds a (smaller) device mesh from survivors,
+* the trainer (see ``repro.train.fault_tolerance``) catches the exception,
+  shrinks, re-lowers the step on the new mesh and restores the latest
+  checkpoint — exactly the control flow of paper Fig. 12.
+
+Failure *injection* hooks make this testable without real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .errors import KampingError
+
+__all__ = [
+    "DeviceFailureDetected",
+    "RevokedError",
+    "WorldComm",
+]
+
+
+class DeviceFailureDetected(KampingError):
+    """Analogue of the paper's MPIFailureDetected."""
+
+    def __init__(self, failed: Sequence[int]):
+        self.failed = list(failed)
+        super().__init__(f"device failure detected: devices {self.failed}")
+
+
+class RevokedError(KampingError):
+    """Operation attempted on a revoked world."""
+
+
+@dataclasses.dataclass
+class _WorldState:
+    devices: List  # alive jax devices
+    revoked: bool = False
+    generation: int = 0
+
+
+class WorldComm:
+    """Host-level communicator world with revoke/shrink semantics.
+
+    ``mesh_factory(devices) -> Mesh`` rebuilds the mesh after a shrink —
+    typically dropping a whole (pod/data) row so the mesh stays rectangular
+    (TPU slices fail as units; see DESIGN.md).
+    """
+
+    def __init__(
+        self,
+        devices: Optional[Sequence] = None,
+        mesh_factory: Optional[Callable] = None,
+    ):
+        self._state = _WorldState(list(devices if devices is not None else jax.devices()))
+        self._mesh_factory = mesh_factory
+        self._fail_next: List[int] = []
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def devices(self):
+        return list(self._state.devices)
+
+    def size(self) -> int:
+        return len(self._state.devices)
+
+    def is_revoked(self) -> bool:
+        return self._state.revoked
+
+    @property
+    def generation(self) -> int:
+        """Incremented by every shrink — tags checkpoints/steps."""
+        return self._state.generation
+
+    # -- failure injection (tests / simulation) ------------------------------
+    def inject_failure(self, device_ids: Sequence[int]):
+        """Schedule devices to 'fail' at the next health check."""
+        self._fail_next.extend(int(d) for d in device_ids)
+
+    def check_health(self):
+        """Poll for failures; raises DeviceFailureDetected like a failed
+        collective would in ULFM.  Called by the trainer between steps
+        (real deployments: hook the runtime's slice-health signal here)."""
+        if self._state.revoked:
+            raise RevokedError("world is revoked; shrink() before continuing")
+        if self._fail_next:
+            failed, self._fail_next = self._fail_next, []
+            raise DeviceFailureDetected(failed)
+
+    # -- ULFM verbs (paper Fig. 12) -------------------------------------------
+    def revoke(self):
+        self._state.revoked = True
+
+    def shrink(self, failed: Sequence[int] = ()):
+        """Return a new WorldComm over the surviving devices.
+
+        Whole-group removal: if a failed device is in a group (e.g. a pod
+        row), the mesh_factory decides how much to drop to stay
+        rectangular; default drops exactly the failed device ids.
+        """
+        failed = set(int(f) for f in failed)
+        survivors = [d for d in self._state.devices if d.id not in failed]
+        if not survivors:
+            raise KampingError("shrink: no surviving devices")
+        nw = WorldComm(survivors, self._mesh_factory)
+        nw._state.generation = self._state.generation + 1
+        return nw
+
+    def mesh(self):
+        if self._state.revoked:
+            raise RevokedError("cannot build a mesh on a revoked world")
+        if self._mesh_factory is None:
+            raise KampingError("WorldComm has no mesh_factory")
+        return self._mesh_factory(self._state.devices)

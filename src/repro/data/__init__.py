@@ -1,0 +1,3 @@
+"""repro.data — deterministic pipelines."""
+from .pipeline import ByteCorpus, PackedLM, SyntheticLM
+__all__ = ["ByteCorpus", "PackedLM", "SyntheticLM"]

@@ -1,0 +1,134 @@
+"""Data pipeline: deterministic synthetic LM streams + a byte-level text
+pipeline with sequence packing (the minimal honest substrate — tokenize,
+pack, batch, shard-place).
+
+Everything is seeded and restart-reproducible: the iterator's state is one
+integer (the step), so checkpoint/restart resumes the exact stream (a
+fault-tolerance requirement: elastic restarts must not skip or repeat
+data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["SyntheticLM", "ByteCorpus", "PackedLM"]
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Zipfian token stream with Markov structure so loss decreases under
+    training (pure-uniform tokens give nothing to learn)."""
+
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    step: int = 0
+    frontend: Optional[str] = None  # vision_stub | audio_stub
+    d_model: int = 0
+    num_patches: int = 0
+    encoder_seq_len: int = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        rng = np.random.RandomState((self.seed * 1_000_003 + self.step) % (2**31))
+        self.step += 1
+        B, S, V = self.batch_size, self.seq_len, self.vocab_size
+        # zipf-ish unigram (bounded pareto — np.zipf overflows int64 for
+        # small exponents) + deterministic bigram drift: token[t+1] is
+        # correlated with token[t] so a model can learn structure
+        heavy = np.minimum(rng.pareto(1.5, size=(B, S)) * 8.0, 1e6)
+        base = (heavy.astype(np.int64) % (V - 2)) + 1
+        shift = np.roll(base, 1, axis=1)
+        mix = rng.rand(B, S) < 0.5
+        tokens = np.where(mix, base, (shift * 7 + 3) % (V - 2) + 1)
+        tokens = tokens.astype(np.int32)
+        batch = {"tokens": tokens}
+        if self.frontend == "vision_stub":
+            batch["patches"] = rng.randn(B, self.num_patches, self.d_model).astype(
+                np.float32
+            )
+        elif self.frontend == "audio_stub":
+            batch["frames"] = rng.randn(B, self.encoder_seq_len, self.d_model).astype(
+                np.float32
+            )
+        return batch
+
+    def state(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state):
+        # values may arrive as (checkpointed) device arrays — back to ints
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])
+
+
+class ByteCorpus:
+    """Deterministic pseudo-text corpus (seeded); stands in for file IO."""
+
+    WORDS = (
+        "the quick brown fox jumps over lazy dog message passing interface "
+        "distributed computing collective communication zero overhead "
+        "template meta programming bindings karlsruhe".split()
+    )
+
+    def __init__(self, seed=0):
+        self.seed = seed
+
+    def documents(self, n: int):
+        rng = np.random.RandomState(self.seed)
+        for _ in range(n):
+            k = rng.randint(5, 60)
+            words = rng.choice(self.WORDS, size=k)
+            yield (" ".join(words) + ".").encode()
+
+
+class PackedLM:
+    """Byte-level tokenization (vocab 256 + specials) with sequence packing:
+    documents are concatenated with an EOS byte and split into fixed-length
+    rows — the standard LM packing scheme."""
+
+    EOS = 0
+
+    def __init__(self, corpus: ByteCorpus, seq_len: int, batch_size: int,
+                 docs_per_epoch: int = 4096):
+        self.corpus = corpus
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.docs_per_epoch = docs_per_epoch
+        self._buf = np.zeros((0,), np.int32)
+        self._docs = None
+        self.step = 0
+
+    def _refill(self):
+        if self._docs is None:
+            self._docs = self.corpus.documents(self.docs_per_epoch)
+        chunks = [self._buf]
+        need = self.seq_len * self.batch_size + 1
+        have = len(self._buf)
+        while have < need:
+            try:
+                doc = next(self._docs)
+            except StopIteration:
+                self._docs = self.corpus.documents(self.docs_per_epoch)
+                doc = next(self._docs)
+            arr = np.frombuffer(doc, np.uint8).astype(np.int32) + 1
+            chunks.append(np.concatenate([arr, [self.EOS]]))
+            have += len(arr) + 1
+        self._buf = np.concatenate(chunks)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        self._refill()
+        n = self.seq_len * self.batch_size
+        rows = self._buf[:n].reshape(self.batch_size, self.seq_len)
+        self._buf = self._buf[n:]
+        self.step += 1
+        return {"tokens": rows.copy()}

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper: picks the Pallas kernel on TPU, interpret-mode
+Pallas for CPU validation, or the jnp reference."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, force_ref=False,
+                    interpret=None):
+    if force_ref:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, interpret=interpret
+    )

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (naive full-materialization)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,Sq,H,D); k/v: (B,Skv,KV,D) -> (B,Sq,H,D). fp32 softmax."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) / math.sqrt(D)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None, None], p, 0.0)  # fully-masked rows -> 0
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

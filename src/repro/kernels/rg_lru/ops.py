@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the RG-LRU scan."""
+from __future__ import annotations
+
+import jax
+
+from .ref import lru_sequential_ref, rglru_scan_ref
+from .rg_lru import lru_scan_pallas
+
+__all__ = ["lru_scan", "rglru_scan_ref", "lru_sequential_ref"]
+
+
+def lru_scan(a, b, *, force_ref=False, interpret=None):
+    if force_ref:
+        return rglru_scan_ref(a, b)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return lru_scan_pallas(a, b, interpret=interpret)

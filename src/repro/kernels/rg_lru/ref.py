@@ -1,0 +1,27 @@
+"""Oracles for the RG-LRU scan: associative_scan (the model path) and a
+plain sequential loop (ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rglru import rglru_scan_ref  # associative_scan oracle
+
+__all__ = ["rglru_scan_ref", "lru_sequential_ref"]
+
+
+def lru_sequential_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t, h_0-prior = 0. a/b: (B, S, C)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step, jnp.zeros_like(a[:, 0]),
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)),
+    )
+    return jnp.moveaxis(hs, 0, 1)

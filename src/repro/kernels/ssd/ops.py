@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the SSD scan."""
+from __future__ import annotations
+
+import jax
+
+from .ref import ssd_scan_ref, ssd_sequential_ref
+from .ssd import ssd_scan_pallas
+
+__all__ = ["ssd_scan", "ssd_scan_ref", "ssd_sequential_ref"]
+
+
+def ssd_scan(x, a, Bm, C, *, chunk=128, force_ref=False, interpret=None):
+    if force_ref:
+        return ssd_scan_ref(x, a, Bm, C, chunk=chunk)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_scan_pallas(x, a, Bm, C, chunk=chunk, interpret=interpret)

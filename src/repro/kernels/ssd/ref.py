@@ -1,0 +1,37 @@
+"""Oracles for SSD: the chunked jnp implementation (models/ssd.py) and a
+fully sequential recurrence (the ground truth both must match)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssd import ssd_scan_ref  # chunked jnp oracle
+
+__all__ = ["ssd_scan_ref", "ssd_sequential_ref"]
+
+
+def ssd_sequential_ref(x, a, Bm, C):
+    """Token-by-token recurrence: S_t = a_t S_{t-1} + B_t x_t^T;
+    y_t = C_t · S_t.  x: (B,S,H,P); a: (B,S,H); Bm/C: (B,S,G,N)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(state, inp):
+        a_t, b_t, x_t, c_t = inp
+        s = state * a_t[:, :, None, None] + jnp.einsum(
+            "bhk,bhp->bhkp", b_t, x_t
+        )
+        y = jnp.einsum("bhk,bhkp->bhp", c_t, s)
+        return s, y
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = tuple(
+        jnp.moveaxis(jnp.asarray(v), 1, 0) for v in (af, Bh, xf, Ch)
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,H,P)

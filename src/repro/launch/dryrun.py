@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell the right program is AOT-lowered against ShapeDtypeStruct
+stand-ins (zero device allocation), compiled for the production mesh, and
+its memory analysis, cost analysis and per-collective byte counts are
+recorded to a JSON artifact consumed by EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# §Perf hillclimb variants: per-arch beyond-baseline optimizations,
+# selected with --variant opt (see EXPERIMENTS.md §Perf for the
+# hypothesis -> change -> measure log behind each entry).
+OPT_VARIANTS = {
+    # A0 (embed rule) is global; A1 split-TP SSD + A3 remat=dots:
+    "mamba2-370m": {"cfg": {"ssm_split_proj": True, "remat": "dots"}},
+    # B1: attention-TP off for 15 non-dividing heads (collective win):
+    "smollm-360m": {"profile": {"tp_attention": False}},
+    # D1 seq-sharded carry + D2 remat=dots (C1/C2/D3 refuted & reverted):
+    "mistral-large-123b": {"runtime": {"seq_shard_carry": True},
+                           "cfg": {"remat": "dots"}},
+    "internvl2-76b": {"runtime": {"seq_shard_carry": True},
+                      "cfg": {"remat": "dots"}},
+    "mixtral-8x22b": {"runtime": {"seq_shard_carry": True}},
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, moe_grid=False,
+               grad_reduce="auto", cfg_override=None, variant="baseline",
+               remat=None):
+    """Returns (fn, example_args, in_shardings) for one cell."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, get_profile
+    from repro.configs.shapes import SHAPES, cell_skip_reason, input_specs
+    from repro.launch.mesh import dp_axes_for
+    from repro.models import Runtime, decode_step, init_params, prefill
+    from repro.sharding.rules import (
+        ShardingProfile,
+        batch_specs,
+        cache_specs,
+        named_shardings,
+        param_specs,
+    )
+    from repro.train.optimizer import adamw_init
+    from repro.train.trainer import TrainConfig, make_train_step
+
+    import dataclasses as _dc0
+
+    var = OPT_VARIANTS.get(arch, {}) if variant == "opt" else {}
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    if var.get("cfg"):
+        cfg = _dc0.replace(cfg, **var["cfg"])
+    if remat:
+        cfg = _dc0.replace(cfg, remat=remat)
+    prof_kw = get_profile(arch)
+    if var.get("profile"):
+        prof_kw.update(var["profile"])
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape_name)
+    if skip:
+        return None, skip, None
+
+    dp_axes = dp_axes_for(mesh, prof_kw.get("dp_axes_mode", "data"))
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    sp_mode = shape.kind == "decode" and shape.global_batch < dp_size
+    profile = ShardingProfile(
+        dp_axes=dp_axes,
+        tp_axis=prof_kw.get("tp_axis", "model"),
+        fsdp_axes=dp_axes if prof_kw.get("fsdp") else None,
+        moe_mode=cfg.moe_mode,
+        decode_cache="sp" if sp_mode else "batch",
+        tp_attention=prof_kw.get("tp_attention", True),
+    )
+    ep_size = (
+        mesh.shape[profile.tp_axis]
+        if cfg.family == "moe" and cfg.moe_mode == "ep_alltoall"
+        else 1
+    )
+
+    params_struct = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), ep_size)
+    )
+    pspecs = param_specs(params_struct, cfg, profile, mesh)
+    p_sh = named_shardings(mesh, pspecs)
+    from repro.sharding.rules import use_shardings as _use_sh
+
+    ush = _use_sh(params_struct, cfg, profile, mesh) if profile.fsdp_axes else None
+    runtime = Runtime(
+        mesh=mesh,
+        tp_axis=profile.tp_axis or "model",
+        batch_spec_axes=profile.dp,
+        moe_grid=moe_grid,
+        decode_sp=sp_mode,
+        force_moe_mode="tp" if (shape.kind == "decode" and cfg.family == "moe")
+        else (None if cfg.moe_mode == "ep_alltoall" else cfg.moe_mode),
+        use_shardings=ush,
+        **(var.get("runtime", {})),
+    )
+    specs = input_specs(cfg, shape_name)
+
+    if shape.kind == "train":
+        opt_struct = jax.eval_shape(adamw_init, params_struct)
+        o_sh = named_shardings(
+            mesh, {"step": P(), "master": pspecs, "mu": pspecs, "nu": pspecs}
+        )
+        b_sh = named_shardings(mesh, batch_specs(profile, specs["batch"]))
+        if grad_reduce == "compressed":
+            # manual-DP island: error-feedback state (dp, *param) + FSDP off
+            import dataclasses as _dc1
+
+            profile = _dc1.replace(profile, fsdp_axes=None)
+            pspecs = param_specs(params_struct, cfg, profile, mesh)
+            p_sh = named_shardings(mesh, pspecs)
+            o_sh = named_shardings(
+                mesh,
+                {"step": P(), "master": pspecs, "mu": pspecs, "nu": pspecs},
+            )
+            dp_size_ = int(np.prod([mesh.shape[a] for a in profile.dp_axes]))
+            extra_struct = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((dp_size_,) + l.shape,
+                                               jnp.dtype("float32")),
+                params_struct,
+            )
+            e_sh = named_shardings(
+                mesh,
+                jax.tree.map(lambda _: P(profile.dp), extra_struct),
+            )
+            step = make_train_step(
+                cfg, TrainConfig(grad_reduce=grad_reduce), runtime, profile,
+                mesh,
+            )
+
+            def fn(p, o, e, b):
+                new_p, new_o, new_e, loss, _ = step(p, o, e, b)
+                return new_p, new_o, loss
+
+            return (
+                (fn, (params_struct, opt_struct, extra_struct,
+                      specs["batch"]), (p_sh, o_sh, e_sh, b_sh)),
+                None,
+                {"cfg": cfg, "profile": profile,
+                 "tokens": shape.global_batch * shape.seq_len},
+            )
+        step = make_train_step(
+            cfg, TrainConfig(grad_reduce=grad_reduce), runtime, profile, mesh
+        )
+
+        def fn(p, o, b):
+            new_p, new_o, _, loss, _ = step(p, o, None, b)
+            return new_p, new_o, loss
+
+        return (
+            (fn, (params_struct, opt_struct, specs["batch"]),
+             (p_sh, o_sh, b_sh)),
+            None,
+            {"cfg": cfg, "profile": profile, "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    if shape.kind == "prefill":
+        b_sh = named_shardings(mesh, batch_specs(profile, specs["batch"]))
+
+        def fn(p, b):
+            return prefill(p, b, cfg, runtime, max_len=shape.seq_len)
+
+        return (
+            (fn, (params_struct, specs["batch"]), (p_sh, b_sh)),
+            None,
+            {"cfg": cfg, "profile": profile, "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    # decode
+    c_specs = cache_specs(specs["caches"], profile, dp_size=dp_size)
+    c_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if s is not None else None,
+        c_specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+    t_sh = NamedSharding(
+        mesh, P(profile.dp) if not sp_mode else P(None)
+    )
+
+    def fn(p, c, t):
+        return decode_step(p, c, t, cfg, runtime)
+
+    return (
+        (fn, (params_struct, specs["caches"], specs["tokens"]),
+         (p_sh, c_sh, t_sh)),
+        None,
+        {"cfg": cfg, "profile": profile, "tokens": shape.global_batch},
+    )
+
+
+def run_cell(arch, shape_name, mesh, mesh_name, *, moe_grid=False,
+             grad_reduce="auto", verbose=True, variant="baseline",
+             remat=None):
+    bench_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks")
+    if os.path.abspath(bench_dir) not in [os.path.abspath(p) for p in sys.path]:
+        sys.path.insert(0, os.path.abspath(bench_dir))
+    from roofline import MODEL_FLOPS, parse_collective_bytes, roofline_terms
+
+    t0 = time.time()
+    try:
+        built, skip, meta = build_cell(
+            arch, shape_name, mesh, moe_grid=moe_grid,
+            grad_reduce=grad_reduce, variant=variant, remat=remat,
+        )
+        if skip:
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "skip", "reason": skip}
+        fn, args, shardings = built
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        chips = int(np.prod(list(mesh.shape.values())))
+
+        # --- scan-aware cost extrapolation -------------------------------
+        # XLA's cost analysis counts a while-loop body ONCE; our layers are
+        # scanned, so lower the same cell at 1 and 2 scan units and fit
+        # cost(k) = a*k + b, then evaluate at the real unit count.
+        import dataclasses as _dc
+
+        from repro.models import block_pattern as _bp
+
+        cfg = meta["cfg"]
+        pat = len(_bp(cfg))
+        n_units, rem = divmod(cfg.num_layers, pat)
+        k_eff = n_units + rem / pat
+        enc_ratio = (
+            cfg.num_encoder_layers / n_units if cfg.is_encoder_decoder else 0
+        )
+
+        def cost_at(k):
+            # unrolled (scan_layers=False) so the HLO contains k copies of
+            # the layer body and the linear fit has a real slope
+            over = {"num_layers": pat * k, "scan_layers": False}
+            if cfg.is_encoder_decoder:
+                over["num_encoder_layers"] = max(1, round(enc_ratio * k))
+            c_k = _dc.replace(cfg, **over)
+            b_k, _, _ = build_cell(
+                arch, shape_name, mesh, moe_grid=moe_grid,
+                grad_reduce=grad_reduce, cfg_override=c_k, variant=variant,
+                remat=remat,
+            )
+            fnk, argsk, shk = b_k
+            with mesh:
+                ck = jax.jit(fnk, in_shardings=shk).lower(*argsk).compile()
+            cak = ck.cost_analysis()
+            collk = sum(parse_collective_bytes(ck.as_text()).values())
+            return (float(cak.get("flops", 0.0)),
+                    float(cak.get("bytes accessed", 0.0)), float(collk))
+
+        f1 = cost_at(1)
+        f2 = cost_at(2)
+        slope = tuple(max(0.0, x2 - x1) for x1, x2 in zip(f1, f2))
+        base = tuple(max(0.0, x1 - a) for x1, a in zip(f1, slope))
+        est = tuple(a * k_eff + b for a, b in zip(slope, base))
+        cost_est = {"flops": est[0], "bytes accessed": est[1]}
+        coll_est = est[2]
+
+        terms = roofline_terms(cost_est, coll_est, chips)
+        terms["raw_body_flops"] = float(cost.get("flops", 0.0))
+        terms["raw_body_bytes"] = float(cost.get("bytes accessed", 0.0))
+        terms["raw_body_collective_bytes"] = float(sum(coll.values()))
+        mf = MODEL_FLOPS(meta["cfg"], meta["tokens"])
+        if shape_name.startswith("train"):
+            mf *= 1.0  # 6ND already counts fwd+bwd
+        else:
+            mf /= 3.0  # inference: 2ND
+        global_flops = terms["flops_per_device"] * chips
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "status": "ok",
+            "chips": chips,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "collective_bytes": coll,
+            "roofline": terms,
+            "model_flops": mf,
+            "useful_flops_ratio": (mf / global_flops) if global_flops else 0.0,
+        }
+        if verbose:
+            print(
+                f"[{mesh_name}] {arch} × {shape_name}: OK "
+                f"({rec['compile_s']}s compile; dominant={terms['dominant']}; "
+                f"t_c={terms['t_compute']:.2e}s t_m={terms['t_memory']:.2e}s "
+                f"t_x={terms['t_collective']:.2e}s; "
+                f"useful={rec['useful_flops_ratio']:.2f})"
+            )
+        return rec
+    except Exception as e:  # noqa: BLE001 — record and continue
+        if verbose:
+            print(f"[{mesh_name}] {arch} × {shape_name}: FAIL {e}")
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "fail", "error": f"{type(e).__name__}: {e}",
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-grid", action="store_true",
+                    help="use grid (2-hop) all-to-all for MoE dispatch")
+    ap.add_argument("--grad-reduce", default="auto")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt"])
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots", "none"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import list_configs
+    from repro.configs.shapes import SHAPES
+    from repro.launch.mesh import make_production_mesh
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("pod16x16", False), ("multipod2x16x16", True)]
+    else:
+        meshes = [
+            ("multipod2x16x16", True) if args.multi_pod else ("pod16x16", False)
+        ]
+
+    archs = [args.arch] if args.arch else list_configs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    records = []
+    for mesh_name, mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                records.append(
+                    run_cell(arch, shape, mesh, mesh_name,
+                             moe_grid=args.moe_grid,
+                             grad_reduce=args.grad_reduce,
+                             variant=args.variant, remat=args.remat)
+                )
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records -> {args.out}")
+    ok = sum(r["status"] == "ok" for r in records)
+    skip = sum(r["status"] == "skip" for r in records)
+    fail = sum(r["status"] == "fail" for r in records)
+    print(f"cells: {ok} ok / {skip} skip / {fail} fail")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Pure functions — importing this module never touches jax device state.
+Production target: TPU v5e pods, 256 chips each, 16x16 (data, model)
+per pod; the multi-pod mesh adds a leading "pod" axis over DCN.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_host_mesh", "dp_axes_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=None, axes=("data", "model"), devices=None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if shape is None:
+        dm = 1
+        while dm * dm * 4 <= n:
+            dm *= 2
+        dm = max(1, min(n, dm))
+        shape = (n // dm, dm)
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes
+    )
+
+
+def dp_axes_for(mesh, mode: str = "data"):
+    """Batch axes per profile mode, adapting to the pod axis if present."""
+    names = mesh.axis_names
+    if mode == "all":
+        return tuple(names)
+    if "pod" in names:
+        return ("pod", "data")
+    return ("data",)

@@ -1,0 +1,116 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+Builds the host mesh (or the production mesh under forced device count),
+the sharding profile from the arch's config, a deterministic data
+pipeline, and runs the fault-tolerant training loop with checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-reduce", default="auto",
+                    choices=["auto", "compressed", "reproducible"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--data", default="synthetic", choices=["synthetic", "bytes"])
+    ap.add_argument("--num-layers", type=int, default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs import get_config, get_profile
+    from repro.data import ByteCorpus, PackedLM, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import ShardingProfile
+    from repro.train import AdamWConfig, TrainConfig, Trainer
+    from repro.checkpoint import CheckpointManager
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    over = {}
+    if args.num_layers:
+        over["num_layers"] = args.num_layers
+    if args.d_model:
+        over["d_model"] = args.d_model
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    mesh = make_host_mesh()
+    fsdp_ok = args.grad_reduce == "auto"
+    profile = ShardingProfile(
+        dp_axes=("data",), tp_axis="model",
+        fsdp_axes=("data",) if fsdp_ok else None,
+        moe_mode=cfg.moe_mode if cfg.family == "moe" else "ep_alltoall",
+    )
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                        total_steps=args.steps),
+        grad_reduce=args.grad_reduce,
+        microbatches=args.microbatches,
+    )
+    trainer = Trainer(cfg, mesh, profile, tcfg)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+
+    if args.data == "bytes":
+        if cfg.vocab_size < 257:
+            data = PackedLM(ByteCorpus(seed=0), args.seq_len, args.batch_size)
+        else:
+            data = PackedLM(ByteCorpus(seed=0), args.seq_len, args.batch_size)
+    else:
+        data = SyntheticLM(
+            vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+            batch_size=args.batch_size, seed=0,
+            frontend=cfg.frontend, d_model=cfg.d_model,
+            num_patches=cfg.num_patches,
+            encoder_seq_len=cfg.encoder_seq_len,
+        )
+
+    ckpt = CheckpointManager(args.checkpoint_dir, keep=3) if args.checkpoint_dir else None
+    n_params = sum(
+        int(np.prod(l.shape)) for np, l in
+        [(__import__("numpy"), leaf) for leaf in jax.tree.leaves(state[0])]
+    )
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={len(jax.devices())} "
+          f"mesh={dict(mesh.shape)} grad_reduce={args.grad_reduce}")
+
+    params, opt_state, extra = state
+    step_fn = trainer.step_fn()
+    import time
+
+    for i in range(args.steps):
+        batch = trainer.place_batch(next(data))
+        t0 = time.perf_counter()
+        params, opt_state, extra, loss, metrics = step_fn(
+            params, opt_state, extra, batch
+        )
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.perf_counter() - t0
+            tok_s = args.batch_size * args.seq_len / dt
+            print(f"step {i:5d} loss {float(loss):.4f} "
+                  f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
+                  f"{dt*1e3:7.1f} ms/step {tok_s:9.0f} tok/s")
+        if ckpt and (i + 1) % args.checkpoint_every == 0:
+            ckpt.save(i + 1, {"params": params, "opt": opt_state}, async_=True)
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

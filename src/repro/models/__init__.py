@@ -1,0 +1,19 @@
+"""repro.models — unified model definitions for all assigned architectures."""
+from .config import ModelConfig
+from .transformer import (
+    Model,
+    Runtime,
+    block_pattern,
+    decode_step,
+    forward_train,
+    init_decode_caches,
+    init_params,
+    loss_and_metrics,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "Model", "Runtime", "block_pattern", "decode_step",
+    "forward_train", "init_decode_caches", "init_params",
+    "loss_and_metrics", "prefill",
+]

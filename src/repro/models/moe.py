@@ -1,0 +1,235 @@
+"""Mixture-of-Experts layers.
+
+Expert-parallel dispatch is the framework's flagship use of the paper's
+technique: token routing is a *sparse, irregular personalized exchange*,
+and the capacity policy decides what gets staged:
+
+* ``grow_only(capacity)`` (the default): capacity = ceil(tokens·top_k/E ·
+  capacity_factor) is static, so dispatch is two dense ``alltoallv`` calls
+  with **zero** staged count exchanges — validity travels in-band (empty
+  slots are zero and are ignored at combine time on the source rank).
+  This is MoE-as-a-KaMPIng-resize-policy (DESIGN.md §2).
+* the dense reference mode computes every expert for every token (smoke
+  tests / the allclose oracle for the EP path).
+* ``tp`` mode shards every expert's FFN over the model axis instead of
+  sharding experts (for E < model-axis size, e.g. mixtral's 8 experts on a
+  16-wide axis) — no dispatch at all, pure TP matmuls.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Communicator, send_buf
+from .layers import dense, init_dense, gated_mlp, init_mlp
+
+__all__ = [
+    "init_moe",
+    "moe_forward_dense",
+    "moe_forward_ep_local",
+    "moe_forward_tp_local",
+    "router_topk",
+    "padded_num_experts",
+]
+
+
+def padded_num_experts(cfg, ep_size: int) -> int:
+    """Experts padded up so ep_size divides them (qwen2-moe: 60 -> 64)."""
+    e = cfg.num_experts
+    return int(math.ceil(e / ep_size) * ep_size)
+
+
+def init_moe(key, cfg, ep_size: int = 1):
+    ks = jax.random.split(key, 6)
+    d, ff = cfg.d_model, cfg.moe_d_ff
+    e_pad = padded_num_experts(cfg, ep_size)
+    dt = jnp.dtype(cfg.param_dtype)
+    scale = 1.0 / math.sqrt(d)
+
+    def expert_bank(k):
+        w = jax.random.truncated_normal(k, -2, 2, (e_pad, d, ff), jnp.float32)
+        return (w * scale).astype(dt)
+
+    p = {
+        "router": init_dense(ks[0], d, cfg.num_experts, dtype="float32"),
+        "wi": expert_bank(ks[1]),
+        "wg": expert_bank(ks[2]),
+        "wo": (
+            jax.random.truncated_normal(ks[3], -2, 2, (e_pad, ff, d), jnp.float32)
+            / math.sqrt(ff)
+        ).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        # qwen2-moe: one shared expert of width n_shared * ff + sigmoid gate
+        p["shared"] = init_mlp(ks[4], d, cfg.num_shared_experts * ff, dtype=cfg.param_dtype)
+        p["shared_gate"] = init_dense(ks[5], d, 1, dtype=cfg.param_dtype)
+    return p
+
+
+def router_topk(p, x, cfg):
+    """Top-k routing. x: (n, d) -> (gates (n,k), experts (n,k), aux_loss)."""
+    logits = (x.astype(jnp.float32)) @ p["router"]["w"]  # (n, E) fp32 router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    e = cfg.num_experts
+    pe = probs.mean(0)
+    fe = jnp.zeros((e,), jnp.float32).at[experts.reshape(-1)].add(
+        jnp.ones_like(experts.reshape(-1), jnp.float32)
+    ) / (x.shape[0] * cfg.top_k)
+    aux = e * jnp.sum(fe * pe)
+    return gates, experts, aux
+
+
+def _shared_out(p, x, cfg):
+    if "shared" not in p:
+        return 0.0
+    g = jax.nn.sigmoid(dense(p["shared_gate"], x).astype(jnp.float32))
+    return gated_mlp(p["shared"], x, cfg.act) * g.astype(x.dtype)
+
+
+def moe_forward_dense(p, x, cfg):
+    """Reference MoE: computes all experts for all tokens (oracle/smoke).
+
+    x: (B, S, d) -> (B, S, d), aux loss.
+    """
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    gates, experts, aux = router_topk(p, xt, cfg)
+    # (n, E) combine weights
+    e_pad = p["wi"].shape[0]
+    comb = jnp.zeros((xt.shape[0], e_pad), jnp.float32)
+    comb = jax.vmap(lambda c, e, g: c.at[e].add(g))(comb, experts, gates)
+    h_i = jnp.einsum("nd,edf->nef", xt, p["wi"])
+    h_g = jnp.einsum("nd,edf->nef", xt, p["wg"])
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.act]
+    h = act(h_g) * h_i
+    out = jnp.einsum("nef,efd,ne->nd", h, p["wo"], comb.astype(x.dtype))
+    out = out + _shared_out(p, xt, cfg)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel dispatch (inside shard_map over the EP axis)
+# ---------------------------------------------------------------------------
+def _dispatch_slots(experts, gates, e_pad: int, cap_e: int):
+    """Assign each (token, k) routing pair a slot in (e_pad, cap_e).
+
+    Returns flat slot id per pair (e*cap_e + pos, or e_pad*cap_e when the
+    expert bucket overflowed — dropped-token semantics of capacity factor).
+    """
+    n, k = experts.shape
+    flat_e = experts.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(sorted_e, length=e_pad)
+    displs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos_sorted = jnp.arange(n * k, dtype=jnp.int32) - displs[sorted_e]
+    slot_sorted = jnp.where(
+        pos_sorted < cap_e, sorted_e * cap_e + pos_sorted, e_pad * cap_e
+    )
+    inv = jnp.zeros((n * k,), jnp.int32).at[order].set(slot_sorted)
+    return inv  # (n*k,) flat slot per routing pair
+
+
+def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False):
+    """EP MoE body — call INSIDE shard_map.
+
+    p_local: expert bank sharded over ``ep_axis`` -> local (E_local, d, ff);
+    router/shared replicated.  x_local: (n_loc, d) local tokens.
+    Dispatch = paper-style alltoallv with grow_only capacity: fully static,
+    no counts exchanged; empty slots are zeros and vanish at combine.
+    """
+    comm = Communicator(ep_axis)
+    if use_grid:
+        from repro.core import GridCommunicator
+
+        comm = comm.extend(GridCommunicator)
+    ep = comm.size()
+    e_pad = p_local["wi"].shape[0] * ep
+    n_loc, d = x_local.shape
+    k = cfg.top_k
+    e_local = e_pad // ep
+    cap_e = max(1, int(math.ceil(n_loc * k / e_pad * cfg.capacity_factor)))
+
+    gates, experts, aux = router_topk(p_local, x_local, cfg)
+    slots = _dispatch_slots(experts, gates, e_pad, cap_e)  # (n_loc*k,)
+
+    # scatter tokens into (e_pad*cap_e [+1 overflow], d) send buckets
+    xt = jnp.repeat(x_local, k, axis=0)  # (n_loc*k, d) one copy per route
+    send = jnp.zeros((e_pad * cap_e + 1, d), x_local.dtype)
+    send = send.at[slots].set(xt, mode="drop")
+    send_buckets = send[:-1].reshape(ep, e_local * cap_e, d)
+
+    if use_grid:
+        recv = comm.grid_alltoallv(send_buf(send_buckets))
+    else:
+        recv = comm.alltoallv(send_buf(send_buckets))
+    # recv: (ep, e_local*cap_e, d) — tokens from every source rank for my
+    # local experts; reorder to (e_local, ep*cap_e, d) batched per expert
+    recv = recv.reshape(ep, e_local, cap_e, d).transpose(1, 0, 2, 3)
+    recv = recv.reshape(e_local, ep * cap_e, d)
+
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.act]
+    h = act(jnp.einsum("ecd,edf->ecf", recv, p_local["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", recv, p_local["wi"]
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, p_local["wo"])
+
+    # return path: inverse layout transform + alltoallv back
+    y = y.reshape(e_local, ep, cap_e, d).transpose(1, 0, 2, 3)
+    y = y.reshape(ep, e_local * cap_e, d)
+    if use_grid:
+        back = comm.grid_alltoallv(send_buf(y))
+    else:
+        back = comm.alltoallv(send_buf(y))
+    back_flat = jnp.concatenate(
+        [back.reshape(e_pad * cap_e, d), jnp.zeros((1, d), back.dtype)], 0
+    )
+    # gather each routing pair's expert output from its slot (overflow -> 0)
+    y_pairs = back_flat[slots]  # (n_loc*k, d)
+    y_pairs = y_pairs * gates.reshape(-1, 1).astype(y_pairs.dtype)
+    out = y_pairs.reshape(n_loc, k, d).sum(axis=1)
+    out = out + _shared_out(p_local, x_local, cfg)
+    return out, aux
+
+
+def moe_forward_tp_local(p_local, x_local, cfg, tp_axis):
+    """TP MoE body — call INSIDE shard_map (mixtral mode: E < tp size).
+
+    Experts stay where the tokens are; each expert's FFN dim is sharded over
+    ``tp_axis`` (p_local: wi/wg (E, d, ff_local), wo (E, ff_local, d)).
+    Tokens are capacity-gathered per expert locally, computed against the
+    local FFN slice, and partial outputs are psum'd over the axis — no
+    dispatch collective at all.
+    """
+    comm = Communicator(tp_axis)
+    e_pad = p_local["wi"].shape[0]
+    n_loc, d = x_local.shape
+    k = cfg.top_k
+    cap_e = max(1, int(math.ceil(n_loc * k / e_pad * cfg.capacity_factor)))
+
+    gates, experts, aux = router_topk(p_local, x_local, cfg)
+    slots = _dispatch_slots(experts, gates, e_pad, cap_e)
+
+    xt = jnp.repeat(x_local, k, axis=0)
+    buckets = jnp.zeros((e_pad * cap_e + 1, d), x_local.dtype)
+    buckets = buckets.at[slots].set(xt, mode="drop")[:-1].reshape(e_pad, cap_e, d)
+
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.act]
+    h = act(jnp.einsum("ecd,edf->ecf", buckets, p_local["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buckets, p_local["wi"]
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, p_local["wo"])
+    y = jax.lax.psum(y, tp_axis)  # combine FFN-dim partial sums
+
+    y_flat = jnp.concatenate([y.reshape(e_pad * cap_e, d), jnp.zeros((1, d), y.dtype)], 0)
+    y_pairs = y_flat[slots] * gates.reshape(-1, 1).astype(y.dtype)
+    out = y_pairs.reshape(n_loc, k, d).sum(axis=1)
+    out = out + _shared_out(p_local, x_local, cfg)
+    return out, aux

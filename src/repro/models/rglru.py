@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrence: h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t) with
+a_t = exp(-c · softplus(Λ) · r_t); r_t, i_t elementwise sigmoid gates.
+Linear in the sequence -> evaluated with an associative scan (train) and a
+single fused elementwise step (decode).  The block follows Griffin's
+recurrent-block structure: two branches (GeLU gate × conv1d+RG-LRU),
+multiplicative merge, output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, dense, init_dense, rms_norm
+
+__all__ = [
+    "init_rglru_block",
+    "rglru_block_forward",
+    "rglru_block_decode",
+    "init_rglru_decode_state",
+    "rglru_scan_ref",
+]
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def rglru_gates(p, x):
+    """x: (..., w) -> (a, b) recurrence coefficients (fp32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf * p["w_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably: a2 = exp(2 log a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * xf)
+    return a, b
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Associative-scan linear recurrence. a,b: (B, S, w) fp32."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def init_rglru_block(key, cfg):
+    ks = jax.random.split(key, 6)
+    d, w = cfg.d_model, cfg.lru_width
+    p = {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "gate_proj": init_dense(ks[0], d, w, dtype=cfg.param_dtype),
+        "rec_proj": init_dense(ks[1], d, w, dtype=cfg.param_dtype),
+        "conv_w": (
+            jax.random.normal(ks[2], (cfg.ssm_conv_width, w), jnp.float32) * 0.1
+        ).astype(jnp.dtype(cfg.param_dtype)),
+        "lru": {
+            "lam": jnp.linspace(0.5, 4.0, w).astype(jnp.float32),  # Λ
+            "w_a": (jax.random.normal(ks[3], (w,), jnp.float32) * 0.1),
+            "b_a": jnp.zeros((w,), jnp.float32),
+            "w_x": (jax.random.normal(ks[4], (w,), jnp.float32) * 0.1),
+            "b_x": jnp.zeros((w,), jnp.float32),
+        },
+        "out_proj": init_dense(ks[5], w, d, dtype=cfg.param_dtype),
+    }
+    return p
+
+
+def rglru_block_forward(p, x, cfg):
+    """x: (B, S, d) -> (B, S, d) residual block."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(dense(p["gate_proj"], h))
+    rec = dense(p["rec_proj"], h)
+    rec, _ = causal_conv1d(rec, p["conv_w"])
+    a, b = rglru_gates(p["lru"], rec)
+    if cfg.use_pallas and jax.default_backend() == "tpu":
+        from repro.kernels.rg_lru import ops as lru_ops
+
+        hseq = lru_ops.lru_scan(a, b)
+    else:
+        hseq = rglru_scan_ref(a, b)
+    y = hseq.astype(x.dtype) * gate
+    return x + dense(p["out_proj"], y)
+
+
+def init_rglru_decode_state(cfg, batch):
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, w), jnp.dtype(cfg.dtype)),
+    }
+
+
+def rglru_block_decode(p, x, state, cfg):
+    """One-token step. x: (B, 1, d)."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(dense(p["gate_proj"], h))
+    rec = dense(p["rec_proj"], h)
+    rec, conv_state = causal_conv1d(rec, p["conv_w"], state["conv"])
+    a, b = rglru_gates(p["lru"], rec[:, 0])
+    h_new = a * state["h"] + b
+    y = h_new[:, None, :].astype(x.dtype) * gate
+    out = x + dense(p["out_proj"], y)
+    return out, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,245 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked linear-attention-dual formulation: within chunks of length Q the
+computation is a masked quadratic product (MXU-friendly); across chunks a
+small (H, N, P) state is carried — O(S·Q) work, O(S/Q) sequential depth.
+The XLA path below is the reference; ``repro/kernels/ssd`` holds the
+Pallas TPU kernel for the chunk-local products.
+
+Shapes: x (B, S, H, P) head-split inner activations; a (B, S, H) per-head
+decay exp(dt·A); Bm/C (B, S, G, N) input/output projections of the state
+(G groups broadcast over H).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, dense, init_dense, rms_norm
+
+__all__ = ["init_ssd_block", "ssd_block_forward", "ssd_block_decode",
+           "ssd_scan_ref", "init_ssd_decode_state"]
+
+
+def ssd_scan_ref(x, a, Bm, C, chunk=128):
+    """Chunked SSD scan (pure jnp oracle).
+
+    x: (B,S,H,P) [dt already folded in]; a: (B,S,H) decay in (0,1];
+    Bm, C: (B,S,G,N).  Returns y: (B,S,H,P).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} must be divisible by chunk {Q}"
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    ac = a.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N)
+    Cc = C.reshape(Bsz, nc, Q, G, N)
+
+    la = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-37)), axis=2)  # (B,nc,Q,H)
+    # intra-chunk (diagonal block): y_d[i] = sum_{j<=i} C_i·B_j exp(la_i-la_j) x_j
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: the anti-causal entries have seg > 0 and overflow,
+    # and inf*0 inside where() poisons the backward pass (NaN grads)
+    seg = jnp.where(causal, seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum(
+        "bnigk,bnjgk->bnijg",
+        Cc.astype(jnp.float32),
+        Bc.astype(jnp.float32),
+    )  # (B,nc,Qi,Qj,G)
+    cbh = jnp.repeat(cb, rep, axis=-1)  # -> (B,nc,Qi,Qj,H)
+    w = cbh * decay
+    y_diag = jnp.einsum("bnijh,bnjhp->bnihp", w, xc.astype(jnp.float32))
+
+    # chunk states: state_n = sum_j exp(la_last - la_j) B_j x_j^T  (H,N,P)
+    tail = jnp.exp(la[:, :, -1:, :] - la)  # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    cs = jnp.einsum(
+        "bnqh,bnqhk,bnqhp->bnhkp", tail, Bh.astype(jnp.float32),
+        xc.astype(jnp.float32)
+    )
+    # inter-chunk recurrence: S_n = decay_n * S_{n-1} + cs_n
+    chunk_decay = jnp.exp(la[:, :, -1, :])  # (B,nc,H)
+
+    def body(state, inp):
+        dec, c = inp
+        new = state * dec[:, :, None, None] + c
+        return new, state  # emit the *previous* state for chunk n
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        body,
+        init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(cs, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,N,P)
+
+    # inter-chunk contribution: y_off[i] = exp(la_i) C_i · S_prev
+    Ch = jnp.repeat(Cc, rep, axis=3)  # (B,nc,Q,H,N)
+    y_off = jnp.einsum(
+        "bnqh,bnqhk,bnhkp->bnqhp",
+        jnp.exp(la),
+        Ch.astype(jnp.float32),
+        prev_states,
+    )
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+def init_ssd_block(key, cfg):
+    ks = jax.random.split(key, 5)
+    d, di = cfg.d_model, cfg.ssm_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * G * N
+    common = {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": init_dense(ks[2], di, d, dtype=cfg.param_dtype),
+    }
+    pd = jnp.dtype(cfg.param_dtype)
+    if cfg.ssm_split_proj:
+        kk = jax.random.split(ks[0], 5)
+        conv = lambda k, c: (jax.random.normal(k, (cfg.ssm_conv_width, c),
+                                               jnp.float32) * 0.1).astype(pd)
+        kc = jax.random.split(ks[1], 3)
+        return {
+            **common,
+            "wz": init_dense(kk[0], d, di, dtype=cfg.param_dtype),
+            "wx": init_dense(kk[1], d, di, dtype=cfg.param_dtype),
+            "wB": init_dense(kk[2], d, G * N, dtype=cfg.param_dtype),
+            "wC": init_dense(kk[3], d, G * N, dtype=cfg.param_dtype),
+            "wdt": init_dense(kk[4], d, H, dtype=cfg.param_dtype),
+            "conv_x": conv(kc[0], di),
+            "conv_b": conv(kc[1], G * N),
+            "conv_c": conv(kc[2], G * N),
+        }
+    return {
+        **common,
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * G * N + H,
+                              dtype=cfg.param_dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                              jnp.float32) * 0.1
+        ).astype(pd),
+    }
+
+
+def _ssd_pre(p, x, cfg):
+    """Shared projection + split for train/decode (fused-proj path)."""
+    di = cfg.ssm_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    proj = dense(p["in_proj"], x)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _ssd_mix_inputs(p, h, cfg, conv_state=None):
+    """Project + conv + activate. Returns (z, xs, Bm, C, dt_raw, new_conv).
+
+    Handles both the fused in_proj layout and the TP-shardable split
+    layout; conv decode-state uses the concatenated (x|B|C) channel layout
+    in both cases so caches are layout-compatible.
+    """
+    di = cfg.ssm_inner
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    if "in_proj" in p:
+        z, xbc, dt = _ssd_pre(p, h, cfg)
+        xbc, ncs = causal_conv1d(xbc, p["conv_w"], conv_state)
+        xbc = jax.nn.silu(xbc)
+        xs, Bm, C = jnp.split(xbc, [di, di + G * N], axis=-1)
+        return z, xs, Bm, C, dt, ncs
+    z = dense(p["wz"], h)
+    xs = dense(p["wx"], h)
+    Bm = dense(p["wB"], h)
+    C = dense(p["wC"], h)
+    dt = dense(p["wdt"], h)
+    if conv_state is not None:
+        cs_x = conv_state[..., :di]
+        cs_b = conv_state[..., di : di + G * N]
+        cs_c = conv_state[..., di + G * N :]
+    else:
+        cs_x = cs_b = cs_c = None
+    xs, s1 = causal_conv1d(xs, p["conv_x"], cs_x)
+    Bm, s2 = causal_conv1d(Bm, p["conv_b"], cs_b)
+    C, s3 = causal_conv1d(C, p["conv_c"], cs_c)
+    ncs = jnp.concatenate([s1, s2, s3], axis=-1)
+    return z, jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(C), dt, ncs
+
+
+def _ssd_post(p, y, z, cfg):
+    B, S = y.shape[0], y.shape[1]
+    di = cfg.ssm_inner
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return dense(p["out_proj"], y)
+
+
+def ssd_block_forward(p, x, cfg):
+    """Full-sequence SSD mixer. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di = cfg.ssm_inner
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xs, Bm, C, dt, _ = _ssd_mix_inputs(p, h, cfg)
+    xs = xs.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, G, N)
+    C = C.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a = jnp.exp(dt * A)  # decay in (0,1)
+    xdt = xs * dt[..., None].astype(xs.dtype)
+    if cfg.use_pallas and jax.default_backend() == "tpu":
+        from repro.kernels.ssd import ops as ssd_ops
+
+        y = ssd_ops.ssd_scan(xdt, a, Bm, C, chunk=cfg.ssm_chunk)
+    else:
+        y = ssd_scan_ref(xdt, a, Bm, C, chunk=cfg.ssm_chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    return x + _ssd_post(p, y, z, cfg)
+
+
+def init_ssd_decode_state(cfg, batch, dtype=jnp.float32):
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = cfg.ssm_inner + 2 * G * N
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+    }
+
+
+def ssd_block_decode(p, x, state, cfg):
+    """One-token SSD step. x: (B, 1, d); state from init_ssd_decode_state."""
+    B = x.shape[0]
+    di = cfg.ssm_inner
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xs, Bm, C, dt, conv_state = _ssd_mix_inputs(p, h, cfg, state["conv"])
+    xs = xs.reshape(B, H, P)
+    Bm = Bm.reshape(B, G, N).astype(jnp.float32)
+    C = C.reshape(B, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32).reshape(B, H) + p["dt_bias"])
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))  # (B,H)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(C, rep, axis=1)
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+    new_ssm = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bhk,bhp->bhkp", Bh, xdt
+    )
+    y = jnp.einsum("bhk,bhkp->bhp", Ch, new_ssm)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.astype(x.dtype).reshape(B, 1, di)
+    out = x + _ssd_post(p, y, z, cfg)
+    return out, {"ssm": new_ssm, "conv": conv_state}

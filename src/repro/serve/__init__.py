@@ -1,0 +1,3 @@
+"""repro.serve — batched serving engine."""
+from .engine import Request, ServeEngine
+__all__ = ["Request", "ServeEngine"]

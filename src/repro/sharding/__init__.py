@@ -1,0 +1,5 @@
+"""repro.sharding — DP/FSDP/TP/EP/SP partitioning rules."""
+from .rules import (ShardingProfile, batch_specs, cache_specs,
+                    named_shardings, param_specs)
+__all__ = ["ShardingProfile", "batch_specs", "cache_specs",
+           "named_shardings", "param_specs"]

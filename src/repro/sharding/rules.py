@@ -1,0 +1,273 @@
+"""Logical-axis sharding rules: param pytree -> PartitionSpec pytree.
+
+Strategy profiles compose DP / FSDP(ZeRO-3) / TP / EP per architecture:
+
+* ``dp_axes``   — batch (data-parallel) mesh axes, e.g. ("pod", "data").
+* ``tp_axis``   — tensor-parallel axis ("model").
+* ``fsdp_axes`` — weight-sharding axes for ZeRO-3 (usually = dp_axes);
+  None disables FSDP (weights replicated across data).
+* MoE expert banks shard over ``tp_axis`` in EP mode and over the FFN dim
+  in TP mode (matching the shard_map in_specs in models/transformer.py).
+
+Rules are by parameter *name* within the block structure; dims that do not
+divide the axis product are left unsharded where exact divisibility
+matters, while pjit-facing big tables (embeddings) may shard unevenly
+(GSPMD pads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingProfile", "param_specs", "batch_specs", "cache_specs",
+           "named_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: Optional[str] = "model"
+    fsdp_axes: Optional[Tuple[str, ...]] = ("data",)
+    moe_mode: str = "ep_alltoall"  # ep_alltoall | tp | dense
+    # TP-shard attention weights (turn off when num_heads doesn't divide
+    # the axis — GSPMD's padded uneven sharding causes involuntary full
+    # rematerialization, measured catastrophic on smollm's 15 heads)
+    tp_attention: bool = True
+    # decode-time cache layout: "batch" shards caches over dp, "sp" shards
+    # the cache length (sequence/context parallel, flash-decode combine)
+    decode_cache: str = "batch"
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+
+def _axsize(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fsdp(profile, mesh, dim_size):
+    """fsdp axes entry if the dim divides evenly, else None."""
+    ax = profile.fsdp_axes
+    if ax is None or dim_size % _axsize(mesh, tuple(ax)) != 0:
+        return None
+    return ax if len(ax) > 1 else ax[0]
+
+
+def _tp(profile, mesh, dim_size, pad_ok=False):
+    tp = profile.tp_axis
+    if tp is None:
+        return None
+    if dim_size % _axsize(mesh, tp) != 0 and not pad_ok:
+        return None
+    return tp
+
+
+def _leaf_spec(name, shape, cfg, profile, mesh, stacked):
+    """Spec for one parameter leaf, by its (block-local) name."""
+    lead = (None,) if stacked else ()
+    shp = shape[1:] if stacked else shape
+
+    def S(*dims):
+        return P(*(lead + dims))
+
+    if len(shp) <= 1:
+        # norms, scalar gates, lru vectors, biases handled by caller tag
+        if name == "bias_tp" and len(shp) == 1:
+            return S(_tp(profile, mesh, shp[0]))
+        return S(*([None] * len(shp)))
+    if name in ("wq", "wk", "wv", "wi", "wg", "gate_proj", "rec_proj",
+                "wz", "wx", "wdt"):
+        if len(shp) == 3:  # moe expert bank (E, d, ff)
+            if profile.moe_mode == "tp":
+                return S(None, _fsdp(profile, mesh, shp[1]),
+                         _tp(profile, mesh, shp[2]))
+            return S(_tp(profile, mesh, shp[0]),
+                     _fsdp(profile, mesh, shp[1]), None)
+        if name in ("wq", "wk", "wv") and not profile.tp_attention:
+            return S(_fsdp(profile, mesh, shp[0]), None)
+        return S(_fsdp(profile, mesh, shp[0]), _tp(profile, mesh, shp[1]))
+    if name in ("wB", "wC"):  # SSD state projections: shared across heads
+        return S(_fsdp(profile, mesh, shp[0]), None)
+    if name == "conv_x":  # depthwise conv over TP-sharded channels
+        return S(None, _tp(profile, mesh, shp[1]))
+    if name in ("conv_b", "conv_c"):
+        return S(None, None)
+    if name in ("wo", "out_proj"):
+        if len(shp) == 3:  # moe (E, ff, d)
+            if profile.moe_mode == "tp":
+                return S(None, _tp(profile, mesh, shp[1]),
+                         _fsdp(profile, mesh, shp[2]))
+            return S(_tp(profile, mesh, shp[0]), None,
+                     _fsdp(profile, mesh, shp[2]))
+        if name == "wo" and not profile.tp_attention:
+            return S(None, _fsdp(profile, mesh, shp[1]))
+        return S(_tp(profile, mesh, shp[0]), _fsdp(profile, mesh, shp[1]))
+    if name == "in_proj":  # ssd: channel concat stays unsharded on tp
+        return S(_fsdp(profile, mesh, shp[0]), None)
+    if name == "conv_w":
+        return S(None, None)
+    if name == "router":
+        return S(None, None)
+    return S(*([None] * len(shp)))
+
+
+def param_specs(params, cfg, profile: ShardingProfile, mesh):
+    """PartitionSpec pytree matching ``init_params`` structure."""
+
+    def walk_named(tree, stacked, name):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, dict) and set(v) <= {"w", "b"}:
+                    # dense param: spec by the *outer* name
+                    entry = {"w": _leaf_spec(k, v["w"].shape, cfg, profile,
+                                             mesh, stacked)}
+                    if "b" in v:
+                        bs = _leaf_spec("bias_tp", v["b"].shape, cfg, profile,
+                                        mesh, stacked)
+                        # bias follows output dim only for tp-sharded outputs
+                        entry["b"] = bs if k in ("wq", "wk", "wv", "wi", "wg") else P(*(((None,) if stacked else ()) + (None,)))
+                    out[k] = entry
+                else:
+                    out[k] = walk_named(v, stacked, k)
+            return out
+        if isinstance(tree, list):
+            return [walk_named(v, stacked, name) for v in tree]
+        if isinstance(tree, tuple):
+            return tuple(walk_named(v, stacked, name) for v in tree)
+        return _leaf_spec(name, tree.shape, cfg, profile, mesh, stacked)
+
+    specs = {}
+    for key, val in params.items():
+        if key == "embed":
+            # vocab-parallel when divisible; NEVER shard the d_model dim —
+            # it is the contraction dim of the first matmul and of the
+            # embedding gather, and GSPMD then all-reduces activation-sized
+            # tensors every layer (measured: +4s collective on mamba2).
+            v, d = val.shape
+            specs[key] = P(_tp(profile, mesh, v), None)
+        elif key == "lm_head":
+            v = val["w"].shape[1]
+            tp_v = _tp(profile, mesh, v)
+            specs[key] = {"w": P(_fsdp(profile, mesh, val["w"].shape[0]), tp_v)}
+            if "b" in val:
+                specs[key]["b"] = P(tp_v)
+        elif key in ("units", "enc_units"):
+            specs[key] = [walk_named(u, True, "") for u in val]
+        elif key == "rem":
+            specs[key] = [walk_named(u, False, "") for u in val]
+        elif key in ("final_norm", "enc_norm"):
+            specs[key] = P(None)
+        else:
+            specs[key] = jax.tree.map(lambda _: P(), val)
+    return specs
+
+
+def batch_specs(profile: ShardingProfile, batch_tree):
+    """Input batch specs: leading (batch) dim over dp axes."""
+    dp = profile.dp
+
+    def spec(leaf):
+        shape = leaf.shape if hasattr(leaf, "shape") else tuple(leaf)
+        return P(dp, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(caches, profile: ShardingProfile, dp_size: int = 0):
+    """Decode-cache specs. 'batch' shards dim 0 of each block cache ('sp'
+    shards the largest divisible dim instead — cache length for KV caches,
+    state dims for recurrent states — for batch < dp-size decode)."""
+    dp = profile.dp
+
+    def spec(stacked, leaf):
+        nd = leaf.ndim
+        lead = (None,) if stacked else ()
+        body = nd - len(lead)
+        if profile.decode_cache == "sp":
+            # shard the largest body dim (past batch) that divides dp_size
+            dims = [None] * body
+            sizes = leaf.shape[len(lead):]
+            order = sorted(range(1, body), key=lambda i: -sizes[i])
+            for i in order:
+                if dp_size and sizes[i] % dp_size == 0 and sizes[i] >= dp_size:
+                    dims[i] = dp
+                    break
+            return P(*(lead + tuple(dims)))
+        return P(*(lead + (dp,) + (None,) * (body - 1)))
+
+    out = {}
+    for k, v in caches.items():
+        if k == "units":
+            out[k] = [jax.tree.map(lambda l: spec(True, l), u) for u in v]
+        elif k == "rem":
+            out[k] = [jax.tree.map(lambda l: spec(False, l), u) for u in v]
+        elif k == "pos":
+            out[k] = P(dp) if profile.decode_cache != "sp" else P(None)
+        elif k == "cross" and v is not None:
+            out[k] = {
+                "units": [
+                    jax.tree.map(lambda l: spec(True, l), u)
+                    if u is not None else None for u in v["units"]
+                ],
+                "rem": [
+                    jax.tree.map(lambda l: spec(False, l), u)
+                    if u is not None else None for u in v["rem"]
+                ],
+            }
+        else:
+            out[k] = None
+    return out
+
+
+def named_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def use_shardings(params_struct, cfg, profile: ShardingProfile, mesh):
+    """Per-use sharding constraints implementing streaming ZeRO-3.
+
+    FSDP stores weights sharded over the data axes; at *use* they must be
+    all-gathered (cheap: one weight per layer per step) — otherwise GSPMD
+    is free to shard the matmul **contraction** dim instead, which
+    all-reduces activation-sized tensors (observed: 38 GB logit
+    all-reduces vs 0.3 GB weight gathers on qwen1.5-0.5b).  The returned
+    tree holds NamedShardings with the fsdp axes stripped, to be applied
+    with ``jax.lax.with_sharding_constraint`` inside the scan body — so
+    weights stream layer-by-layer (memory stays O(1 layer), the ZeRO-3
+    contract).
+    """
+    nofsdp = dataclasses.replace(profile, fsdp_axes=None)
+    full = param_specs(params_struct, cfg, nofsdp, mesh)
+
+    def strip_lead(spec):
+        return P(*spec[1:]) if len(spec) > 0 else spec
+
+    isP = lambda x: isinstance(x, P)
+    out = {
+        "units": [
+            jax.tree.map(strip_lead, u, is_leaf=isP) for u in full["units"]
+        ],
+        "rem": full["rem"],
+    }
+    if "lm_head" in full:
+        out["lm_head"] = full["lm_head"]
+    if "enc_units" in full:
+        out["enc_units"] = [
+            jax.tree.map(strip_lead, u, is_leaf=isP) for u in full["enc_units"]
+        ]
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), out, is_leaf=isP
+    )

@@ -1,0 +1,101 @@
+"""AdamW with fp32 master weights and sharded optimizer state (ZeRO-style:
+state shards inherit the parameter sharding, which under FSDP profiles
+already spreads them over the data axis)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw_init(params):
+    """State: fp32 master copy + first/second moments + step."""
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, param_dtype="bfloat16"):
+    """Returns (new_params_in_param_dtype, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w)
+        return m, v, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    new = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    mu = jax.tree.unflatten(treedef, [n[0] for n in new])
+    nu = jax.tree.unflatten(treedef, [n[1] for n in new])
+    master = jax.tree.unflatten(treedef, [n[2] for n in new])
+    params = jax.tree.map(lambda w: w.astype(jnp.dtype(param_dtype)), master)
+    return params, {"step": step, "master": master, "mu": mu, "nu": nu}, {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Make src/ importable without installation.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+# The md/ suite needs 8 virtual devices (XLA_FLAGS must be set before jax
+# initializes), so it runs in a subprocess spawned by test_multidevice.py.
+# Exclude it from normal collection; the subprocess sets KAMPING_MD=1.
+collect_ignore = [] if os.environ.get("KAMPING_MD") else ["md"]
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

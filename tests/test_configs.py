@@ -1,0 +1,59 @@
+"""Config registry + shape-cell applicability rules."""
+import pytest
+
+from repro.configs import get_config, get_profile, list_configs
+from repro.configs.shapes import SHAPES, cell_skip_reason, input_specs
+
+
+def test_registry_complete():
+    assert len(list_configs()) == 10
+    for n in list_configs():
+        cfg = get_config(n)
+        assert cfg.name == n
+        assert get_config(n, smoke=True).d_model <= 128
+        assert isinstance(get_profile(n), dict)
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-17")
+
+
+def test_long_context_skip_rules():
+    runs_long = {"mamba2-370m", "recurrentgemma-9b", "mixtral-8x22b"}
+    for n in list_configs():
+        reason = cell_skip_reason(get_config(n), "long_500k")
+        if n in runs_long:
+            assert reason is None, n
+        else:
+            assert reason is not None, n
+        # all other shapes always run
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_skip_reason(get_config(n), s) is None
+
+
+def test_cell_matrix_is_40():
+    cells = [(a, s) for a in list_configs() for s in SHAPES]
+    assert len(cells) == 40
+    skips = sum(
+        1 for a, s in cells if cell_skip_reason(get_config(a), s)
+    )
+    assert skips == 7  # 7 full-attention archs skip long_500k
+
+
+def test_input_specs_shapes():
+    cfg = get_config("qwen1.5-0.5b")
+    tr = input_specs(cfg, "train_4k")
+    assert tr["batch"]["tokens"].shape == (256, 4096)
+    de = input_specs(cfg, "decode_32k")
+    assert de["tokens"].shape == (128,)
+    assert de["caches"]["pos"].shape == (128,)
+    # whisper decode carries cross KV; vlm train carries patches
+    wd = input_specs(get_config("whisper-medium"), "decode_32k")
+    assert wd["caches"]["cross"] is not None
+    vt = input_specs(get_config("internvl2-76b"), "train_4k")
+    assert vt["batch"]["patches"].shape == (256, 256, 8192)
+    # mixtral ring cache: SWA window bounds the physical cache
+    md = input_specs(get_config("mixtral-8x22b"), "long_500k")
+    k = md["caches"]["units"][0]["k"]
+    assert k.shape[2] == 4096  # (units, B, window, KV, D)

@@ -1,0 +1,68 @@
+"""Leveled assertions (paper §III-G) and ULFM world semantics (§V-B)."""
+import pytest
+
+from repro.core import (
+    AssertionLevel,
+    DeviceFailureDetected,
+    RevokedError,
+    WorldComm,
+    assertion_level,
+    set_assertion_level,
+)
+
+
+def test_assertion_levels_ordered_and_settable():
+    prev = set_assertion_level("heavy")
+    try:
+        assert assertion_level() == AssertionLevel.HEAVY
+        assert AssertionLevel.NONE < AssertionLevel.LIGHT < \
+               AssertionLevel.NORMAL < AssertionLevel.HEAVY
+        set_assertion_level(AssertionLevel.NONE)
+        assert assertion_level() == AssertionLevel.NONE
+    finally:
+        set_assertion_level(prev)
+
+
+def test_world_health_and_failure_injection():
+    class D:  # minimal device stub
+        def __init__(self, i):
+            self.id = i
+
+    world = WorldComm(devices=[D(i) for i in range(8)])
+    world.check_health()  # healthy: no raise
+    world.inject_failure([2, 3])
+    with pytest.raises(DeviceFailureDetected) as e:
+        world.check_health()
+    assert e.value.failed == [2, 3]
+
+
+def test_world_revoke_then_shrink():
+    class D:
+        def __init__(self, i):
+            self.id = i
+
+    world = WorldComm(devices=[D(i) for i in range(4)],
+                      mesh_factory=lambda devs: ("mesh", len(devs)))
+    assert not world.is_revoked()
+    world.revoke()
+    with pytest.raises(RevokedError):
+        world.check_health()
+    with pytest.raises(RevokedError):
+        world.mesh()
+    survivor = world.shrink([0, 1])
+    assert survivor.size() == 2
+    assert survivor.generation == world.generation + 1
+    assert not survivor.is_revoked()
+    assert survivor.mesh() == ("mesh", 2)
+
+
+def test_shrink_all_failed_raises():
+    class D:
+        def __init__(self, i):
+            self.id = i
+
+    world = WorldComm(devices=[D(0)])
+    from repro.core import KampingError
+
+    with pytest.raises(KampingError):
+        world.shrink([0])

@@ -1,0 +1,55 @@
+"""with_flattened / bucketize (paper Fig. 9 helper) — property-based."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bucketize_by_destination, flatten_buckets, with_flattened
+
+
+@given(
+    st.dictionaries(
+        st.integers(0, 7),
+        st.lists(st.integers(-1000, 1000), min_size=0, max_size=9),
+        max_size=8,
+    )
+)
+def test_flatten_buckets_roundtrip(messages):
+    msgs = {k: np.asarray(v, np.int32) for k, v in messages.items()}
+    buckets, counts = flatten_buckets(msgs, 8)
+    assert buckets.shape[0] == 8 and counts.shape == (8,)
+    for r in range(8):
+        expect = msgs.get(r, np.zeros((0,), np.int32))
+        assert counts[r] == len(expect)
+        np.testing.assert_array_equal(buckets[r, : counts[r]], expect)
+
+
+def test_with_flattened_call_protocol():
+    fc = with_flattened({0: [1, 2], 2: [3]}, 4)
+    got = fc.call(lambda sb, sc: (sb.value.shape, list(sc.value)))
+    assert got == ((4, 2), [2, 0, 1, 0])
+
+
+@given(
+    st.integers(1, 50).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.integers(0, 3), min_size=n, max_size=n),
+        )
+    )
+)
+@settings(max_examples=20)
+def test_bucketize_property(args):
+    """Every non-dropped element lands in the bucket of its destination,
+    in stable order; counts are clipped to capacity."""
+    n, dests = args
+    p, cap = 4, 8
+    data = np.arange(n, dtype=np.int32).reshape(n, 1)
+    buckets, counts = bucketize_by_destination(data, np.asarray(dests), p, cap)
+    buckets, counts = np.asarray(buckets), np.asarray(counts)
+    for r in range(p):
+        expect = np.asarray([i for i, d in enumerate(dests) if d == r])[:cap]
+        assert counts[r] == min(len(expect) if expect.size else 0, cap) or (
+            expect.size == 0 and counts[r] == 0
+        )
+        got = buckets[r, : counts[r], 0]
+        np.testing.assert_array_equal(got, expect[: counts[r]])

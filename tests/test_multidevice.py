@@ -1,0 +1,28 @@
+"""Spawns the multi-device suite (tests/md) in a subprocess with 8 virtual
+CPU devices — XLA device count is fixed at first jax init, so these cannot
+run in the main pytest process (which must see 1 device for the smoke
+tests)."""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def test_run_multidevice_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["KAMPING_MD"] = "1"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(HERE, "..", "src"), env.get("PYTHONPATH", "")]
+    )
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", os.path.join(HERE, "md"), "-q",
+         "-p", "no:cacheprovider", "--rootdir", os.path.join(HERE, "md")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=2400,
+    )
+    tail = "\n".join((r.stdout + r.stderr).splitlines()[-25:])
+    assert r.returncode == 0, f"multidevice suite failed:\n{tail}"

@@ -1,0 +1,45 @@
+"""Non-blocking result / request-pool semantics (paper §III-E)."""
+import pytest
+
+from repro.core import NonBlockingResult, PendingRequestError, RequestPool
+from repro.core.params import send_buf, move
+
+
+def test_value_hidden_until_wait():
+    r = NonBlockingResult(42)
+    with pytest.raises(PendingRequestError):
+        _ = r.value
+    assert r.wait() == 42
+    with pytest.raises(PendingRequestError):
+        r.wait()  # single completion
+
+
+def test_moved_buffers_returned_on_wait():
+    buf = [1, 2, 3]
+    p = send_buf(move(buf))
+    r = NonBlockingResult("recv", moved_params=[p])
+    val, orig = r.wait()
+    assert val == "recv" and orig is buf
+
+
+def test_test_returns_ready_value():
+    r = NonBlockingResult(7)
+    ready, val = r.test()
+    assert ready and val == 7
+
+
+def test_pool_unbounded():
+    pool = RequestPool()
+    for i in range(5):
+        pool.submit(NonBlockingResult(i))
+    assert pool.wait_all() == [0, 1, 2, 3, 4]
+    assert len(pool) == 0
+
+
+def test_pool_fixed_slots_backpressure():
+    pool = RequestPool(slots=2)
+    assert pool.submit(NonBlockingResult(0)) is None
+    assert pool.submit(NonBlockingResult(1)) is None
+    evicted = pool.submit(NonBlockingResult(2))
+    assert evicted == 0  # oldest completed to make room
+    assert pool.wait_all() == [1, 2]

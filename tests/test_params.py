@@ -1,0 +1,81 @@
+"""Trace-time named-parameter machinery (paper §III-A/B/G semantics)."""
+import pytest
+
+from repro.core import (
+    KampingError,
+    MissingParameterError,
+    MovedBufferError,
+    ParameterConflictError,
+    UnsupportedParameterError,
+    grow_only,
+    move,
+    no_resize,
+    op,
+    recv_counts_out,
+    resize_to_fit,
+    send_buf,
+    send_counts,
+    send_recv_buf,
+)
+from repro.core.params import ParamKind, collect_params
+
+
+def test_collect_requires_parameters():
+    with pytest.raises(MissingParameterError) as e:
+        collect_params("allgatherv", [], required=(ParamKind.SEND_BUF,))
+    assert "send_buf" in str(e.value)
+    assert "allgatherv" in str(e.value)
+
+
+def test_collect_rejects_duplicates():
+    with pytest.raises(ParameterConflictError):
+        collect_params(
+            "x",
+            [send_buf([1]), send_buf([2])],
+            required=(ParamKind.SEND_BUF,),
+        )
+
+
+def test_collect_rejects_unknown():
+    with pytest.raises(UnsupportedParameterError) as e:
+        collect_params("bcast", [send_buf([1]), op(max)],
+                       required=(ParamKind.SEND_BUF,))
+    assert "op" in str(e.value)
+
+
+def test_any_of_group():
+    pack = collect_params(
+        "allreduce",
+        [send_recv_buf([1]), op(max)],
+        required=((ParamKind.SEND_BUF, ParamKind.SEND_RECV_BUF), ParamKind.OP),
+    )
+    assert ParamKind.SEND_RECV_BUF in pack
+
+
+def test_in_place_ignored_params_rejected():
+    """Paper §III-G: passing an argument the in-place call ignores is a
+    (trace-time) compile error."""
+    with pytest.raises(ParameterConflictError):
+        collect_params(
+            "allgather",
+            [send_recv_buf([1]), send_counts([1])],
+            required=((ParamKind.SEND_BUF, ParamKind.SEND_RECV_BUF),),
+            accepted=(ParamKind.SEND_COUNTS,),
+            in_place_ignored=(ParamKind.SEND_COUNTS,),
+        )
+
+
+def test_move_semantics_single_consumption():
+    m = move([1, 2, 3])
+    p = send_buf(m)
+    assert p.moved and p.value == [1, 2, 3]
+    with pytest.raises(MovedBufferError):
+        m.take()
+
+
+def test_policies():
+    assert resize_to_fit.kind == "resize_to_fit"
+    assert no_resize.kind == "no_resize"
+    assert grow_only(128).capacity == 128
+    p = recv_counts_out()
+    assert p.is_out
