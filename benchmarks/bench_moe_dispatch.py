@@ -53,6 +53,21 @@ def run():
     out["ep_flat"] = time_fn(fn, p_ep, x)
     csv_row("moe_dispatch_ep_flat", out["ep_flat"] * 1e6, "2x alltoall")
 
+    # EP flat with the reduce_scatter combine: the return alltoall and the
+    # top-k weighted sum fuse into one reduce-scatter (DESIGN.md §2).
+    def ep_rs_body(px, xx):
+        n = xx.shape[0] * xx.shape[1]
+        o, _ = moe_forward_ep_local(px, xx.reshape(n, CFG.d_model), CFG,
+                                    "model", combine="reduce_scatter")
+        return o.reshape(xx.shape)
+
+    fn = jax.jit(jax.shard_map(ep_rs_body, mesh=mesh, in_specs=in_specs_ep,
+                               out_specs=P("data", "model", None),
+                               check_vma=False))
+    out["ep_flat_rs"] = time_fn(fn, p_ep, x)
+    csv_row("moe_dispatch_ep_flat_rs", out["ep_flat_rs"] * 1e6,
+            "2x alltoall fwd (tokens+meta) + 1x reduce-scatter combine")
+
     # EP grid (2-hop over both axes; experts over all 8 ranks)
     p_ep8 = init_moe(jax.random.PRNGKey(1), CFG, ep_size=8)
 

@@ -83,4 +83,35 @@ buf2, rc2, rd2 = shard(handrolled, (P("ranks"), P("ranks")),
                        (P(None), P(None), P(None)))(v, counts)
 assert (np.asarray(rc) == np.asarray(rc2)).all()
 print("v3  hand-rolled parity  -> identical counts/displs, 3x the code")
+
+# --------------------------------------------------------------------------
+# (4) the completed surface, same named-parameter style: reduce_scatter,
+#     root-bucketed scatterv, and an auto-generated non-blocking variant —
+#     all rows of the same op-spec table (DESIGN.md §3)
+# --------------------------------------------------------------------------
+import operator
+
+from repro.core import op, recv_count_out, root, send_counts
+
+
+def version4(contrib, rootbuf, sc):
+    comm = Communicator("ranks")
+    reduced = comm.reduce_scatter(send_buf(contrib), op(operator.add))
+    r = comm.scatterv(send_buf(rootbuf), send_counts(sc),
+                      recv_count_out(), root(0))
+    req = comm.iallgatherv(send_buf(reduced))  # non-blocking, from the table
+    return reduced, r.recv_buf, r.recv_count[None], req.wait()
+
+
+contrib = np.ones((8, 8, 2), np.float32)          # slot j -> rank j
+rootbuf = np.tile(np.arange(24.0, dtype=np.float32).reshape(1, 8, 3), (8, 1, 1))
+sc = np.tile(np.asarray([1, 2, 3, 1, 2, 3, 1, 2], np.int32), (8, 1))
+red, mine, cnt, gathered = shard(
+    version4,
+    (P("ranks"), P("ranks"), P("ranks")),
+    (P("ranks"), P("ranks"), P("ranks"), P(None)),
+)(contrib.reshape(64, 2), rootbuf.reshape(64, 3), sc.reshape(64))
+assert (np.asarray(red) == 8).all()               # sum of 8 ranks' ones
+print("v4  reduce_scatter/scatterv/iallgatherv ->",
+      np.asarray(red).shape, np.asarray(mine).shape, list(np.asarray(cnt)))
 print("quickstart OK")

@@ -1,0 +1,97 @@
+"""Forward-compat backfill for the jax API surface this repo targets.
+
+The codebase is written against the current jax API (``jax.shard_map``,
+``jax.lax.axis_size``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``).  Older runtimes (e.g. jax 0.4.x, where shard_map
+still lives in ``jax.experimental.shard_map`` and takes ``check_rep``)
+lack parts of that surface.  :func:`install` backfills the missing
+attributes onto the jax namespace so every call site — src, tests,
+examples, benchmarks — works unmodified on both.  On a new-enough jax
+``install`` is a no-op.
+
+Importing :mod:`repro` installs the backfill automatically.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+__all__ = ["install", "axis_size", "shard_map"]
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis (or product over a tuple of axes).
+
+    ``lax.psum`` of a Python literal constant-folds to ``literal *
+    axis_size`` without staging any communication, so this is exact and
+    free on every jax version — the idiom ``jax.lax.axis_size`` wraps.
+    """
+    if hasattr(jax.lax, "axis_size") and not getattr(
+        jax.lax.axis_size, "_repro_backfill", False
+    ):
+        return jax.lax.axis_size(axis_name)
+    if isinstance(axis_name, (tuple, list)):
+        n = 1
+        for a in axis_name:
+            n *= axis_size(a)
+        return n
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, check_vma=None,
+              axis_names=None, **kwargs):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    Maps ``check_vma`` to the legacy ``check_rep`` and ``axis_names``
+    (the set of axes the body is manual over) to the legacy ``auto``
+    complement when running on a jax that predates them.
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None and not getattr(native, "_repro_backfill", False):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return native(f, **kw)
+    from jax.experimental.shard_map import shard_map as _legacy
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _legacy(f, **kw)
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _wrap_make_mesh(make_mesh):
+    @functools.wraps(make_mesh)
+    def wrapped(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        return make_mesh(axis_shapes, axis_names, *args, **kw)
+
+    wrapped._repro_backfill = True
+    return wrapped
+
+
+def install():
+    """Backfill missing modern-API attributes onto the jax namespace."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+        jax.shard_map._repro_backfill = True
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = axis_size
+        jax.lax.axis_size._repro_backfill = True
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is not None and not getattr(make_mesh, "_repro_backfill", False):
+        if "axis_types" not in inspect.signature(make_mesh).parameters:
+            jax.make_mesh = _wrap_make_mesh(make_mesh)

@@ -19,6 +19,7 @@ from .errors import (
 from .flatten import bucketize_by_destination, flatten_buckets, with_flattened
 from .grid import GridCommunicator
 from .nonblocking import NonBlockingResult, RequestPool
+from .opspec import OP_TABLE, OpSpec
 from .params import (
     Param,
     ResizePolicy,
@@ -29,6 +30,8 @@ from .params import (
     no_resize,
     op,
     recv_buf,
+    recv_count,
+    recv_count_out,
     recv_counts,
     recv_counts_out,
     recv_displs,
@@ -45,7 +48,7 @@ from .params import (
     source,
     tag,
 )
-from .plugins import Plugin, register_parameter
+from .plugins import Plugin, attach_ops, register_parameter
 from .reproducible import ReproducibleReduce, tree_reduce_canonical
 from .result import Result
 from .serialization import (
@@ -63,9 +66,11 @@ from .ulfm import DeviceFailureDetected, RevokedError, WorldComm
 __all__ = [
     "Communicator", "GridCommunicator", "SparseAlltoall",
     "ReproducibleReduce", "Plugin", "register_parameter",
+    "OpSpec", "OP_TABLE", "attach_ops",
     "NonBlockingResult", "RequestPool", "Result", "WorldComm",
     "DeviceFailureDetected", "RevokedError",
     "send_buf", "recv_buf", "send_recv_buf", "send_count", "send_counts",
+    "recv_count", "recv_count_out",
     "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
     "send_displs_out", "recv_displs", "recv_displs_out", "op", "root",
     "dest", "source", "tag", "axis", "move", "neighbors",

@@ -9,6 +9,14 @@ would stage otherwise (paper §III-A: "only required code paths are
 generated at compile time", with trace time playing the role of compile
 time).
 
+Every collective is one row of the declarative op-spec table
+(:mod:`repro.core.opspec`): the spec names the parameter interface and
+count-inference rules, a small ``lower`` function stages the data
+movement, and the shared engine provides parameter collection, the
+static/traced count paths, capacity policies, leveled assertions, result
+packing, and the auto-generated non-blocking ``i*`` variants.  Plugins
+(grid/sparse) extend the same table — see DESIGN.md §3.
+
 Variable collectives (``*v``) use *capacity policies* in place of the
 paper's resize policies because XLA shapes are static: buffers are
 fixed-capacity, counts are (possibly traced) element counts.  See
@@ -19,25 +27,20 @@ from __future__ import annotations
 import builtins
 import functools
 import operator
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from . import params as kp
-from .errors import (
-    AssertionLevel,
-    KampingError,
-    check_enabled,
-)
-from .nonblocking import NonBlockingResult
+from ..compat import axis_size as _axis_size
+from .errors import KampingError
+from .opspec import OpSpec, Lowering, attach_ops, is_static, static_int
 from .params import ParamKind as K
-from .params import collect_params
-from .result import Result, make_result
+from .result import Result
 
-__all__ = ["Communicator"]
+__all__ = ["Communicator", "CORE_SPECS"]
 
 
 # --------------------------------------------------------------------------
@@ -66,6 +69,10 @@ class Communicator:
         def step(x):
             comm = Communicator("data")
             return comm.allreduce(send_buf(x), op(operator.add))
+
+    The collective methods (``allgather`` ... ``scatterv``) and their
+    non-blocking ``i*`` variants are generated from ``CORE_SPECS`` at
+    class-creation time — see :func:`repro.core.opspec.attach_ops`.
     """
 
     def __init__(self, axis: Any = "data"):
@@ -77,7 +84,7 @@ class Communicator:
         """Communicator size. Static at trace time (cf. MPI_Comm_size)."""
         n = 1
         for a in self._axes:
-            n *= lax.axis_size(a)
+            n *= _axis_size(a)
         return n
 
     def rank(self):
@@ -90,7 +97,8 @@ class Communicator:
 
         Plugins may override collectives and add new named parameters —
         the mechanism KaMPIng uses for grid/sparse all-to-all, ULFM, and
-        reproducible reduce.
+        reproducible reduce.  Plugin collectives are rows of the same
+        op-spec table as the core ones.
         """
         bases = tuple(plugin_classes) + (type(self),)
         cls = type("+".join(c.__name__ for c in bases), bases, {})
@@ -102,218 +110,19 @@ class Communicator:
                 init(ext)
         return ext
 
-    # ----------------------------------------------------------------------
-    # Collectives
-    # ----------------------------------------------------------------------
-    def allgather(self, *args):
-        """MPI_Allgather. Accepts send_buf or send_recv_buf (in-place)."""
-        pack = collect_params(
-            "allgather",
-            args,
-            required=((K.SEND_BUF, K.SEND_RECV_BUF),),
-            accepted=(K.RECV_BUF,),
-            in_place_ignored=(K.SEND_COUNT,),
-        )
-        if K.SEND_RECV_BUF in pack:
-            # Simplified MPI_IN_PLACE (paper §III-G): buffer holds one
-            # slot per rank, this rank's slot at index `rank`.
-            x = pack[K.SEND_RECV_BUF].value
-            p = self.size()
-            if x.shape[0] != p:
-                raise KampingError(
-                    f"kamping.allgather(send_recv_buf): leading dim "
-                    f"{x.shape[0]} != communicator size {p}"
-                )
-            mine = lax.dynamic_index_in_dim(x, self.rank(), 0, keepdims=False)
-            out = lax.all_gather(mine, self.axis, axis=0, tiled=False)
-            return out.reshape(x.shape)
-        x = pack[K.SEND_BUF].value
-        return lax.all_gather(x, self.axis, axis=0, tiled=True)
-
-    def allgatherv(self, *args):
-        """MPI_Allgatherv with parameter inference (paper Fig. 1/3).
-
-        ``send_buf(x)`` — x has static capacity ``cap = x.shape[0]``;
-        ``send_count(n)`` — valid prefix length (default: cap, static);
-        ``recv_counts(c)`` / ``recv_counts_out()`` — supplied or inferred
-        (inference stages one all-gather of the scalar count — exactly the
-        exchange in paper Fig. 2);
-        ``recv_displs(...)`` / ``recv_displs_out()``.
-
-        With static counts the result is the exact concatenation and *no*
-        extra communication is staged (the zero-overhead path).  With
-        traced counts the result uses the padded layout: rank i's data at
-        displacement ``i*cap``.
-        """
-        pack = collect_params(
-            "allgatherv",
-            args,
-            required=(K.SEND_BUF,),
-            accepted=(K.SEND_COUNT, K.RECV_COUNTS, K.RECV_DISPLS, K.RECV_BUF),
-        )
-        x = pack[K.SEND_BUF].value
-        cap = x.shape[0]
-        p = self.size()
-        n = pack[K.SEND_COUNT].value if K.SEND_COUNT in pack else cap
-        static_count = isinstance(n, (int, np.integer))
-
-        out_fields = []
-        if static_count:
-            # Zero-overhead path: counts known at trace time -> exact
-            # concat, inferred counts/displs are compile-time constants.
-            buf = lax.all_gather(x[:n], self.axis, axis=0, tiled=True)
-            rc = jnp.full((p,), n, dtype=jnp.int32)
-            rd = jnp.arange(p, dtype=jnp.int32) * n
-        else:
-            buf = lax.all_gather(x, self.axis, axis=0, tiled=True)
-            rc_param = pack.get(K.RECV_COUNTS)
-            if rc_param is not None and not rc_param.is_out and rc_param.value is not None:
-                rc = rc_param.value  # user-supplied: nothing staged
-            else:
-                need_counts = (
-                    (rc_param is not None and rc_param.is_out)
-                    or K.RECV_DISPLS in pack
-                )
-                rc = (
-                    lax.all_gather(jnp.asarray(n, jnp.int32), self.axis)
-                    if need_counts
-                    else None
-                )
-            rd = jnp.arange(p, dtype=jnp.int32) * cap  # padded layout
-
-        out_fields.append(("recv_buf", buf))
-        if K.RECV_COUNTS in pack and pack[K.RECV_COUNTS].is_out:
-            out_fields.append(("recv_counts", rc))
-        if K.RECV_DISPLS in pack and pack[K.RECV_DISPLS].is_out:
-            out_fields.append(("recv_displs", rd))
-        return make_result(out_fields)
-
-    def alltoall(self, *args):
-        """MPI_Alltoall: send_buf shaped (p, chunk, ...)."""
-        pack = collect_params(
-            "alltoall", args, required=(K.SEND_BUF,), accepted=(K.RECV_BUF,)
-        )
-        x = pack[K.SEND_BUF].value
-        p = self.size()
-        if x.shape[0] != p:
-            raise KampingError(
-                f"kamping.alltoall: send_buf leading dim {x.shape[0]} must "
-                f"equal communicator size {p}"
-            )
-        return self._dense_alltoall(x)
-
+    # -- transports ---------------------------------------------------------
     def _dense_alltoall(self, x):
         """One dense (flat, single-hop) all_to_all over the communicator's
         axis or axes — rank order is row-major over the axis tuple."""
         ax = self._axes[0] if len(self._axes) == 1 else self._axes
         return lax.all_to_all(x, ax, split_axis=0, concat_axis=0, tiled=True)
 
-    def alltoallv(self, *args):
-        """MPI_Alltoallv with capacity policies (the MoE-dispatch workhorse).
-
-        ``send_buf(x)`` — bucketed layout ``(p, cap, ...)``: ``x[j]`` is
-        the (padded) bucket destined for rank ``j``;
-        ``send_counts(sc)`` — (p,) valid element counts per destination
-        (static np arrays take the zero-overhead path);
-        ``recv_counts(...)``/``recv_counts_out()`` — supplied, or inferred
-        with one staged counts all_to_all (paper's default-parameter
-        communication);
-        ``recv_buf(policy)`` — capacity policy for the receive side.
-
-        Returns recv_buf ``(p, cap_r, ...)`` (+ requested outs); entry
-        ``[j]`` is what rank j sent here.
-        """
-        pack = collect_params(
-            "alltoallv",
-            args,
-            required=(K.SEND_BUF,),
-            accepted=(
-                K.SEND_COUNTS,
-                K.RECV_COUNTS,
-                K.RECV_DISPLS,
-                K.SEND_DISPLS,
-                K.RECV_BUF,
-            ),
-        )
-        x = pack[K.SEND_BUF].value
-        p = self.size()
-        if x.ndim < 2 or x.shape[0] != p:
-            raise KampingError(
-                f"kamping.alltoallv: send_buf must be bucketed (p, cap, ...) "
-                f"with p={p}; got shape {x.shape}. Use with_flattened(...) "
-                f"to build buckets from destination->data mappings."
-            )
-        cap = x.shape[1]
-        sc = pack[K.SEND_COUNTS].value if K.SEND_COUNTS in pack else None
-
-        rb = pack.get(K.RECV_BUF)
-        policy = rb.policy if rb is not None else kp.resize_to_fit
-        if isinstance(policy, kp.grow_only):
-            cap_r = policy.capacity
-            if cap_r > cap:
-                pad = [(0, 0)] * x.ndim
-                pad[1] = (0, cap_r - cap)
-                x = jnp.pad(x, pad)
-            elif cap_r < cap:
-                if check_enabled(AssertionLevel.NORMAL) and sc is not None:
-                    x = _check_counts_fit(x, sc, cap_r, "alltoallv")
-                x = x[:, :cap_r]
-        # resize_to_fit / no_resize: symmetric capacity (= send capacity).
-
-        buf = self._dense_alltoall(x)
-
-        out_fields = [("recv_buf", buf)]
-        rc_param = pack.get(K.RECV_COUNTS)
-        if rc_param is not None:
-            if rc_param.is_out:
-                if sc is None:
-                    raise KampingError(
-                        "kamping.alltoallv: recv_counts_out() requires "
-                        "send_counts(...) to infer from"
-                    )
-                # Staged counts exchange — only because it was requested.
-                rc = self._counts_transpose(sc)
-                out_fields.append(("recv_counts", rc))
-            # else: user-supplied, nothing staged, nothing returned.
-        if K.RECV_DISPLS in pack and pack[K.RECV_DISPLS].is_out:
-            out_fields.append(
-                ("recv_displs", jnp.arange(p, dtype=jnp.int32) * buf.shape[1])
-            )
-
-        if check_enabled(AssertionLevel.HEAVY) and sc is not None:
-            # Communication-level assertion (paper §III-G): total elements
-            # sent == total elements received, verified globally.
-            sent = jnp.sum(jnp.asarray(sc))
-            total_sent = lax.psum(sent, self.axis)
-            rc_chk = self._counts_transpose(jnp.asarray(sc))
-            total_recv = lax.psum(jnp.sum(rc_chk), self.axis)
-            buf = _stage_equal_check(buf, total_sent, total_recv, "alltoallv")
-            out_fields[0] = ("recv_buf", buf)
-
-        return make_result(out_fields)
-
     def _counts_transpose(self, sc):
         """recv_counts[j] = send_counts of rank j towards me."""
         sc = jnp.asarray(sc, jnp.int32).reshape(self.size(), 1)
         return self._dense_alltoall(sc).reshape(self.size())
 
-    # -- reductions ---------------------------------------------------------
-    def allreduce(self, *args):
-        """MPI_Allreduce with functor mapping / reduction-via-lambda."""
-        pack = collect_params(
-            "allreduce",
-            args,
-            required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
-            accepted=(K.RECV_BUF,),
-        )
-        x = pack.get(K.SEND_BUF, pack.get(K.SEND_RECV_BUF)).value
-        return self._reduce_impl(x, pack[K.OP])
-
-    def allreduce_single(self, *args):
-        """Scalar allreduce (used by the paper's BFS termination check)."""
-        out = self.allreduce(*args)
-        return out if not isinstance(out, Result) else out.recv_buf
-
+    # -- reduction kernel ----------------------------------------------------
     def _reduce_impl(self, x, op_param):
         fn = op_param.value
         x = jnp.asarray(x)
@@ -330,72 +139,14 @@ class Communicator:
         # Reduction via lambda: left fold in rank order (deterministic,
         # supports non-commutative ops). Staged as gather + lax.scan.
         gathered = lax.all_gather(x, self.axis, axis=0, tiled=False)
+
         def body(acc, v):
             return fn(acc, v), None
+
         acc, _ = lax.scan(body, gathered[0], gathered[1:])
         return acc
 
-    def reduce(self, *args):
-        """MPI_Reduce: like allreduce; `root(...)` kept for API parity.
-
-        Under SPMD every rank computes the value (documented deviation:
-        there is no cheaper root-only reduction on a TPU mesh).
-        """
-        pack = collect_params(
-            "reduce",
-            args,
-            required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
-            accepted=(K.ROOT, K.RECV_BUF),
-        )
-        x = pack.get(K.SEND_BUF, pack.get(K.SEND_RECV_BUF)).value
-        return self._reduce_impl(x, pack[K.OP])
-
-    def exscan(self, *args):
-        """MPI_Exscan (exclusive prefix) over ranks."""
-        pack = collect_params(
-            "exscan", args, required=(K.SEND_BUF, K.OP), accepted=()
-        )
-        x = jnp.asarray(pack[K.SEND_BUF].value)
-        fn = pack[K.OP].value
-        gathered = lax.all_gather(x, self.axis, axis=0, tiled=False)
-        if _try_hash_lookup(fn, _SUM_FNS):
-            csum = jnp.cumsum(gathered, axis=0)
-            excl = jnp.concatenate([jnp.zeros_like(gathered[:1]), csum[:-1]], 0)
-        else:
-            def body(acc, v):
-                nxt = fn(acc, v)
-                return nxt, acc
-            _, excl = lax.scan(body, jnp.zeros_like(gathered[0]), gathered)
-        return lax.dynamic_index_in_dim(excl, self.rank(), 0, keepdims=False)
-
-    def scan(self, *args):
-        """MPI_Scan (inclusive prefix) over ranks."""
-        pack = collect_params("scan", args, required=(K.SEND_BUF, K.OP), accepted=())
-        x = jnp.asarray(pack[K.SEND_BUF].value)
-        fn = pack[K.OP].value
-        gathered = lax.all_gather(x, self.axis, axis=0, tiled=False)
-        if _try_hash_lookup(fn, _SUM_FNS):
-            incl = jnp.cumsum(gathered, axis=0)
-        else:
-            def body(acc, v):
-                nxt = fn(acc, v)
-                return nxt, nxt
-            _, incl = lax.scan(body, jnp.zeros_like(gathered[0]), gathered)
-        return lax.dynamic_index_in_dim(incl, self.rank(), 0, keepdims=False)
-
-    # -- rooted ops ----------------------------------------------------------
-    def bcast(self, *args):
-        """MPI_Bcast. ``send_recv_buf`` on all ranks; ``root`` defaults 0."""
-        pack = collect_params(
-            "bcast",
-            args,
-            required=(K.SEND_RECV_BUF,),
-            accepted=(K.ROOT,),
-        )
-        x = pack[K.SEND_RECV_BUF].value
-        r = pack[K.ROOT].value if K.ROOT in pack else 0
-        return self._bcast_value(x, r)
-
+    # -- rooted value distribution -------------------------------------------
     def _bcast_value(self, x, r):
         from .serialization import Serialized, deserialize_like
 
@@ -406,6 +157,7 @@ class Communicator:
         if (
             isinstance(r, (int, np.integer))
             and len(self._axes) == 1
+            and hasattr(lax, "pbroadcast")
             and jax.default_backend() == "tpu"
         ):
             # Static root -> the hardware-optimized CollectiveBroadcast HLO.
@@ -419,91 +171,462 @@ class Communicator:
             return lax.pmax(masked.astype(jnp.int32), self.axis).astype(jnp.bool_)
         return lax.psum(x * mask.astype(x.dtype), self.axis)
 
-    def gather(self, *args):
-        """MPI_Gather — SPMD note: result materializes on *all* ranks
-        (an all-gather); `root` kept for API parity."""
-        pack = collect_params(
-            "gather", args, required=(K.SEND_BUF,), accepted=(K.ROOT, K.RECV_BUF)
-        )
-        return lax.all_gather(pack[K.SEND_BUF].value, self.axis, axis=0, tiled=True)
+    # -- conveniences over the generated surface ------------------------------
+    def allreduce_single(self, *args):
+        """Scalar allreduce (used by the paper's BFS termination check)."""
+        out = self.allreduce(*args)
+        return out if not isinstance(out, Result) else out.recv_buf
 
-    def gatherv(self, *args):
-        return self.allgatherv(*args)
 
-    def scatter(self, *args):
-        """MPI_Scatter: root's (p, chunk, ...) buffer; each rank gets [rank]."""
-        pack = collect_params(
-            "scatter", args, required=(K.SEND_BUF,), accepted=(K.ROOT,)
-        )
-        x = pack[K.SEND_BUF].value
-        r = pack[K.ROOT].value if K.ROOT in pack else 0
-        x = self._bcast_value(x, r)
-        return lax.dynamic_index_in_dim(x, self.rank(), 0, keepdims=False)
+# --------------------------------------------------------------------------
+# Lowerings: the data movement of each op, one small function per row.
+# Everything else (packs, counts, policies, assertions, results, i*) is
+# the engine.
+# --------------------------------------------------------------------------
+def _lower_allgather(low: Lowering):
+    if low.has(K.SEND_RECV_BUF):
+        # Simplified MPI_IN_PLACE (paper §III-G): buffer holds one slot
+        # per rank, this rank's slot at index `rank`.
+        x = low.value(K.SEND_RECV_BUF)
+        p = low.p
+        if x.shape[0] != p:
+            raise KampingError(
+                f"kamping.{low.spec.name}(send_recv_buf): leading dim "
+                f"{x.shape[0]} != communicator size {p}"
+            )
+        mine = lax.dynamic_index_in_dim(x, low.rank(), 0, keepdims=False)
+        out = low.all_gather(mine, tiled=False)
+        return out.reshape(x.shape)
+    return low.all_gather(low.value(K.SEND_BUF))
 
-    def barrier(self):
-        """Semantic no-op under SPMD bulk-synchronous execution; stages a
-        trivial psum so program order is preserved where it matters."""
-        return lax.psum(jnp.zeros((), jnp.int32), self.axis)
 
-    # -- point-to-point -------------------------------------------------------
-    def send_recv(self, *args, perm: Optional[Sequence[Tuple[int, int]]] = None):
-        """Combined send+recv (SPMD p2p = collective_permute).
+def _lower_gatherv(low: Lowering):
+    """Shared allgatherv/gatherv lowering: three count regimes.
 
-        Either pass ``perm=[(src, dst), ...]`` or ``dest(fn)`` where fn maps
-        rank -> destination rank (a static schedule).
-        """
-        pack = collect_params(
-            "send_recv", args, required=(K.SEND_BUF,), accepted=(K.DEST, K.TAG)
-        )
-        x = pack[K.SEND_BUF].value
-        if perm is None:
-            if K.DEST not in pack:
+    * static uniform ``send_count`` (default: capacity) — exact concat,
+      inferred counts/displs are compile-time constants, nothing staged;
+    * static per-rank ``recv_counts`` (numpy array) — the true
+      variable-count path: exact *ragged* concatenation with exclusive
+      prefix displacements, still nothing staged;
+    * traced ``send_count`` — padded layout (rank i's data at
+      displacement ``i*cap``); the counts gather is staged only when
+      ``recv_counts_out()`` asked for it (paper Fig. 2's exchange).
+    """
+    x = low.value(K.SEND_BUF)
+    cap, p = x.shape[0], low.p
+    n = low.value(K.SEND_COUNT, cap)
+
+    rc_param = low.pack.get(K.RECV_COUNTS)
+    rc_in = rc_param.value if (rc_param is not None and not rc_param.is_out) else None
+    if rc_in is not None and is_static(rc_in):
+        counts = np.asarray(rc_in, np.int64).reshape(-1)
+        if counts.shape[0] != p:
+            raise KampingError(
+                f"kamping.{low.spec.name}: recv_counts must have one entry "
+                f"per rank (p={p}); got {counts.shape[0]}"
+            )
+        if (counts < 0).any() or (counts > cap).any():
+            raise KampingError(
+                f"kamping.{low.spec.name}: static recv_counts must lie in "
+                f"[0, capacity={cap}]; got {counts.tolist()}"
+            )
+        if low.has(K.SEND_COUNT):
+            n_static = static_int(n)
+            if n_static is None:
                 raise KampingError(
-                    "kamping.send_recv: pass perm=[(src,dst),...] or dest(fn)"
+                    f"kamping.{low.spec.name}: traced send_count cannot be "
+                    f"combined with static recv_counts (the exact ragged "
+                    f"path is resolved at trace time); drop send_count or "
+                    f"supply it statically"
                 )
-            dfn = pack[K.DEST].value
-            p = self.size()
-            perm = [(i, int(dfn(i)) % p) for i in range(p)]
-        return lax.ppermute(x, self.axis, perm)
+            if (counts > n_static).any():
+                # MPI: recvcounts[i] must match sender i's declared count;
+                # exceeding it would deliver data beyond the valid prefix.
+                raise KampingError(
+                    f"kamping.{low.spec.name}: recv_counts "
+                    f"{counts.tolist()} exceed send_count({n_static}) — "
+                    f"data beyond the sender's declared valid prefix"
+                )
+        total = int(counts.sum())
+        if total:
+            # Gather only up to the largest count — counts are static, so
+            # the slice is trace-time and the wire volume is max(counts),
+            # not the full capacity.
+            g = low.all_gather(x[: int(counts.max())], tiled=False)
+            buf = jnp.concatenate(
+                [g[i, : int(c)] for i, c in enumerate(counts) if c], axis=0
+            )
+        else:
+            buf = x[:0]
+        displs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        low.emit("recv_counts", lambda: jnp.asarray(counts, jnp.int32))
+        low.emit("recv_displs", lambda: jnp.asarray(displs, jnp.int32))
+        return buf
 
-    # -- non-blocking variants (paper §III-E) ----------------------------------
-    def _nb(self, fn, *args, **kw) -> NonBlockingResult:
-        moved = [a for a in args if isinstance(a, kp.Param) and a.moved]
-        value = fn(*args, **kw)
-        return NonBlockingResult(value, moved_params=moved)
+    n_static = static_int(n)
+    if n_static is not None:
+        # Zero-overhead path: counts known at trace time -> exact concat,
+        # inferred counts/displs are compile-time constants.
+        buf = low.all_gather(x[:n_static])
+        low.emit("recv_counts", lambda: jnp.full((p,), n_static, jnp.int32))
+        low.emit(
+            "recv_displs", lambda: jnp.arange(p, dtype=jnp.int32) * n_static
+        )
+        return buf
 
-    def iallgather(self, *args) -> NonBlockingResult:
-        return self._nb(self.allgather, *args)
+    buf = low.all_gather(x)  # padded layout
+    low.emit(
+        "recv_counts",
+        lambda: lax.all_gather(jnp.asarray(n, jnp.int32), low.comm.axis),
+    )
+    low.emit("recv_displs", lambda: jnp.arange(p, dtype=jnp.int32) * cap)
+    return buf
 
-    def iallgatherv(self, *args) -> NonBlockingResult:
-        return self._nb(self.allgatherv, *args)
 
-    def ialltoallv(self, *args) -> NonBlockingResult:
-        return self._nb(self.alltoallv, *args)
+def _lower_gather(low: Lowering):
+    return low.all_gather(low.value(K.SEND_BUF))
 
-    def iallreduce(self, *args) -> NonBlockingResult:
-        return self._nb(self.allreduce, *args)
 
-    def isend_recv(self, *args, perm=None) -> NonBlockingResult:
-        return self._nb(self.send_recv, *args, perm=perm)
+def _lower_alltoall(low: Lowering):
+    x = low.value(K.SEND_BUF)
+    p = low.p
+    if x.shape[0] != p:
+        raise KampingError(
+            f"kamping.{low.spec.name}: send_buf leading dim {x.shape[0]} "
+            f"must equal communicator size {p}"
+        )
+    return low.alltoall(x)
+
+
+def _lower_alltoallv(low: Lowering):
+    x = low.value(K.SEND_BUF)
+    buf = low.alltoall(x)
+    low.emit(
+        "recv_displs",
+        lambda: jnp.arange(low.p, dtype=jnp.int32) * buf.shape[1],
+    )
+    low.emit(
+        "send_displs",
+        lambda: jnp.arange(low.p, dtype=jnp.int32) * x.shape[1],
+    )
+    if low.value(K.SEND_COUNTS) is not None:  # supplied, not *_out()
+        # Staged counts exchange — evaluated only if requested (the
+        # paper's default-parameter communication).
+        low.emit(
+            "recv_counts",
+            lambda: low.counts_transpose(low.value(K.SEND_COUNTS)),
+        )
+    return buf
+
+
+def _lower_allreduce(low: Lowering):
+    x = low.value(K.SEND_BUF, low.value(K.SEND_RECV_BUF))
+    return low.comm._reduce_impl(x, low.pack[K.OP])
+
+
+def _lower_reduce_scatter(low: Lowering):
+    """MPI_Reduce_scatter_block: send_buf (p, chunk, ...) — slot j is this
+    rank's contribution to rank j; each rank receives the op-reduction of
+    its slot over all ranks.  Sum on a single axis lowers to the
+    hardware ``reduce-scatter`` HLO (lax.psum_scatter); other functors
+    fall back to reduce + block extraction."""
+    x = jnp.asarray(low.value(K.SEND_BUF, low.value(K.SEND_RECV_BUF)))
+    p = low.p
+    if x.ndim < 1 or x.shape[0] != p:
+        raise KampingError(
+            f"kamping.{low.spec.name}: send_buf leading dim "
+            f"{x.shape[0] if x.ndim else 0} must equal communicator size {p} "
+            f"(slot j holds this rank's contribution to rank j)"
+        )
+    comm = low.comm
+    fn = low.pack[K.OP].value
+    if _try_hash_lookup(fn, _SUM_FNS) and len(comm._axes) == 1:
+        return lax.psum_scatter(
+            x, comm._axes[0], scatter_dimension=0, tiled=False
+        )
+    red = comm._reduce_impl(x, low.pack[K.OP])
+    return lax.dynamic_index_in_dim(red, comm.rank(), 0, keepdims=False)
+
+
+def _lower_scan(low: Lowering, inclusive: bool):
+    x = jnp.asarray(low.value(K.SEND_BUF))
+    fn = low.pack[K.OP].value
+    gathered = lax.all_gather(x, low.comm.axis, axis=0, tiled=False)
+    if _try_hash_lookup(fn, _SUM_FNS):
+        csum = jnp.cumsum(gathered, axis=0)
+        pref = (
+            csum
+            if inclusive
+            else jnp.concatenate([jnp.zeros_like(gathered[:1]), csum[:-1]], 0)
+        )
+    else:
+        # True rank-order fold (no identity seed, so non-commutative /
+        # non-zero-identity functors follow textbook MPI_Scan semantics;
+        # exscan's rank-0 value — undefined in MPI — is zeros).
+        def body(acc, v):
+            nxt = fn(acc, v)
+            return nxt, (nxt if inclusive else acc)
+
+        _, tail = lax.scan(body, gathered[0], gathered[1:])
+        head = gathered[:1] if inclusive else jnp.zeros_like(gathered[:1])
+        pref = jnp.concatenate([head, tail], 0)
+    return lax.dynamic_index_in_dim(pref, low.rank(), 0, keepdims=False)
+
+
+def _lower_bcast(low: Lowering):
+    x = low.value(K.SEND_RECV_BUF)
+    r = low.value(K.ROOT, 0)
+    return low.comm._bcast_value(x, r)
+
+
+def _lower_scatter(low: Lowering):
+    x = low.value(K.SEND_BUF)
+    r = low.value(K.ROOT, 0)
+    x = low.comm._bcast_value(x, r)
+    return lax.dynamic_index_in_dim(x, low.rank(), 0, keepdims=False)
+
+
+def _lower_scatterv(low: Lowering):
+    """Root's bucketed (p, cap, ...) buffer + per-rank counts; rank i
+    receives bucket i (capacity-policy semantics matching alltoallv)."""
+    x = low.value(K.SEND_BUF)  # capacity policy already applied
+    r = low.value(K.ROOT, 0)
+    comm = low.comm
+    x = comm._bcast_value(x, r)
+    mine = lax.dynamic_index_in_dim(x, comm.rank(), 0, keepdims=False)
+
+    def _recv_count():
+        sc = low.value(K.SEND_COUNTS)
+        if sc is None:
+            raise KampingError(
+                f"kamping.{low.spec.name}: recv_count_out() requires "
+                f"send_counts(...) to infer from"
+            )
+        if is_static(sc):
+            # Zero-overhead path: static counts are trace-time identical
+            # on all ranks (MPI: counts significant only at root), so the
+            # lookup is a local gather from a constant — nothing staged.
+            scb = jnp.asarray(sc, jnp.int32)
+        else:
+            scb = comm._bcast_value(jnp.asarray(sc, jnp.int32), r)
+        return lax.dynamic_index_in_dim(scb, comm.rank(), 0, keepdims=False)
+
+    low.emit("recv_count", _recv_count)
+    return mine
+
+
+def _lower_barrier(low: Lowering):
+    return lax.psum(jnp.zeros((), jnp.int32), low.comm.axis)
+
+
+def _lower_send_recv(low: Lowering):
+    x = low.value(K.SEND_BUF)
+    perm = low.kw.get("perm")
+    if perm is None:
+        if not low.has(K.DEST):
+            raise KampingError(
+                f"kamping.{low.spec.name}: pass perm=[(src,dst),...] or dest(fn)"
+            )
+        dfn = low.value(K.DEST)
+        p = low.p
+        perm = [(i, int(dfn(i)) % p) for i in range(p)]
+    return lax.ppermute(x, low.comm.axis, perm)
 
 
 # --------------------------------------------------------------------------
-# staged runtime checks
+# The core table.  One row per collective; the surface (blocking methods,
+# i* variants, result packing, assertions) is generated from it.
 # --------------------------------------------------------------------------
-def _check_counts_fit(x, counts, cap, opname):
-    """NORMAL-level staged assertion: counts <= capacity (overflow check)."""
-    ok = jnp.all(jnp.asarray(counts) <= cap)
-    # Poison the buffer with NaN/sentinel on failure so the error is
-    # observable without host callbacks (which don't exist on TPU fast
-    # paths). Debug builds can use jax.debug.check instead.
-    if jnp.issubdtype(x.dtype, jnp.floating):
-        return jnp.where(ok, x, jnp.nan)
-    return jnp.where(ok, x, jnp.iinfo(x.dtype).max)
+_ALLTOALLV_HINT = (
+    "Use with_flattened(...) to build buckets from destination->data "
+    "mappings."
+)
 
+CORE_SPECS: Tuple[OpSpec, ...] = (
+    OpSpec(
+        name="allgather",
+        lower=_lower_allgather,
+        required=((K.SEND_BUF, K.SEND_RECV_BUF),),
+        accepted=(K.RECV_BUF,),
+        in_place_ignored=(K.SEND_COUNT,),
+        doc="MPI_Allgather. Accepts send_buf or send_recv_buf (in-place).",
+    ),
+    OpSpec(
+        name="allgatherv",
+        lower=_lower_gatherv,
+        required=(K.SEND_BUF,),
+        accepted=(K.SEND_COUNT, K.RECV_COUNTS, K.RECV_DISPLS, K.RECV_BUF),
+        doc=(
+            "MPI_Allgatherv with parameter inference (paper Fig. 1/3).\n\n"
+            "``send_buf(x)`` — x has static capacity ``cap = x.shape[0]``;\n"
+            "``send_count(n)`` — valid prefix length (default: cap, static);\n"
+            "``recv_counts(c)`` / ``recv_counts_out()`` — supplied or "
+            "inferred (inference stages one all-gather of the scalar count "
+            "— exactly the exchange in paper Fig. 2);\n"
+            "``recv_displs(...)`` / ``recv_displs_out()``.\n\n"
+            "With static counts the result is the exact concatenation and "
+            "*no* extra communication is staged (the zero-overhead path); "
+            "a static per-rank ``recv_counts`` array gives the exact "
+            "*ragged* concatenation.  With traced counts the result uses "
+            "the padded layout: rank i's data at displacement ``i*cap``."
+        ),
+    ),
+    OpSpec(
+        name="gather",
+        lower=_lower_gather,
+        required=(K.SEND_BUF,),
+        accepted=(K.ROOT, K.RECV_BUF),
+        doc=(
+            "MPI_Gather — SPMD note: result materializes on *all* ranks "
+            "(an all-gather); `root` kept for API parity."
+        ),
+    ),
+    OpSpec(
+        name="gatherv",
+        lower=_lower_gatherv,
+        required=(K.SEND_BUF,),
+        accepted=(
+            K.SEND_COUNT, K.RECV_COUNTS, K.RECV_DISPLS, K.RECV_BUF, K.ROOT,
+        ),
+        doc=(
+            "MPI_Gatherv: true variable-count gather. Same count regimes "
+            "as allgatherv — in particular a static per-rank "
+            "``recv_counts(np.array([...]))`` yields the exact ragged "
+            "concatenation with exclusive-prefix displacements, with zero "
+            "staged count communication.  SPMD note: the result "
+            "materializes on all ranks; ``root`` kept for API parity."
+        ),
+    ),
+    OpSpec(
+        name="alltoall",
+        lower=_lower_alltoall,
+        required=(K.SEND_BUF,),
+        accepted=(K.RECV_BUF,),
+        doc="MPI_Alltoall: send_buf shaped (p, chunk, ...).",
+    ),
+    OpSpec(
+        name="alltoallv",
+        lower=_lower_alltoallv,
+        required=(K.SEND_BUF,),
+        accepted=(
+            K.SEND_COUNTS, K.RECV_COUNTS, K.RECV_DISPLS, K.SEND_DISPLS,
+            K.RECV_BUF,
+        ),
+        bucketed=True,
+        bucket_hint=_ALLTOALLV_HINT,
+        heavy_count_check=True,
+        doc=(
+            "MPI_Alltoallv with capacity policies (the MoE-dispatch "
+            "workhorse).\n\n"
+            "``send_buf(x)`` — bucketed layout ``(p, cap, ...)``: ``x[j]`` "
+            "is the (padded) bucket destined for rank ``j``;\n"
+            "``send_counts(sc)`` — (p,) valid element counts per "
+            "destination (static np arrays take the zero-overhead path);\n"
+            "``recv_counts(...)``/``recv_counts_out()`` — supplied, or "
+            "inferred with one staged counts all_to_all (paper's "
+            "default-parameter communication);\n"
+            "``recv_buf(policy)`` — capacity policy for the receive side.\n\n"
+            "Returns recv_buf ``(p, cap_r, ...)`` (+ requested outs); entry "
+            "``[j]`` is what rank j sent here."
+        ),
+    ),
+    OpSpec(
+        name="allreduce",
+        lower=_lower_allreduce,
+        required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
+        accepted=(K.RECV_BUF,),
+        doc="MPI_Allreduce with functor mapping / reduction-via-lambda.",
+    ),
+    OpSpec(
+        name="reduce",
+        lower=_lower_allreduce,
+        required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
+        accepted=(K.ROOT, K.RECV_BUF),
+        doc=(
+            "MPI_Reduce: like allreduce; `root(...)` kept for API parity.\n\n"
+            "Under SPMD every rank computes the value (documented deviation: "
+            "there is no cheaper root-only reduction on a TPU mesh)."
+        ),
+    ),
+    OpSpec(
+        name="reduce_scatter",
+        lower=_lower_reduce_scatter,
+        required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
+        accepted=(K.RECV_BUF,),
+        doc=(
+            "MPI_Reduce_scatter_block: ``send_buf(x)`` with x shaped "
+            "``(p, chunk, ...)`` — slot j is this rank's contribution to "
+            "rank j; returns the op-reduction of this rank's slot over all "
+            "ranks, shaped ``(chunk, ...)``.  ``op(operator.add)`` on a "
+            "single axis lowers to the hardware reduce-scatter "
+            "(lax.psum_scatter); other functors reduce then extract."
+        ),
+    ),
+    OpSpec(
+        name="scan",
+        lower=functools.partial(_lower_scan, inclusive=True),
+        required=(K.SEND_BUF, K.OP),
+        doc="MPI_Scan (inclusive prefix) over ranks.",
+    ),
+    OpSpec(
+        name="exscan",
+        lower=functools.partial(_lower_scan, inclusive=False),
+        required=(K.SEND_BUF, K.OP),
+        doc="MPI_Exscan (exclusive prefix) over ranks.",
+    ),
+    OpSpec(
+        name="bcast",
+        lower=_lower_bcast,
+        required=(K.SEND_RECV_BUF,),
+        accepted=(K.ROOT,),
+        doc="MPI_Bcast. ``send_recv_buf`` on all ranks; ``root`` defaults 0.",
+    ),
+    OpSpec(
+        name="scatter",
+        lower=_lower_scatter,
+        required=(K.SEND_BUF,),
+        accepted=(K.ROOT,),
+        doc=(
+            "MPI_Scatter: root's (p, chunk, ...) buffer; each rank gets "
+            "[rank]."
+        ),
+    ),
+    OpSpec(
+        name="scatterv",
+        lower=_lower_scatterv,
+        required=(K.SEND_BUF,),
+        accepted=(K.ROOT, K.SEND_COUNTS, K.RECV_COUNT, K.RECV_BUF),
+        bucketed=True,
+        doc=(
+            "MPI_Scatterv: root's bucketed ``(p, cap, ...)`` buffer + "
+            "per-rank ``send_counts``; rank i receives bucket i "
+            "(``(cap_r, ...)``) with capacity-policy semantics matching "
+            "alltoallv (``recv_buf(grow_only(c))`` resizes, NORMAL-level "
+            "overflow assertion on shrink).  ``recv_count_out()`` returns "
+            "this rank's valid element count; ``root`` defaults 0."
+        ),
+    ),
+    OpSpec(
+        name="barrier",
+        lower=_lower_barrier,
+        nonblocking=False,
+        doc=(
+            "Semantic no-op under SPMD bulk-synchronous execution; stages a "
+            "trivial psum so program order is preserved where it matters."
+        ),
+    ),
+    OpSpec(
+        name="send_recv",
+        lower=_lower_send_recv,
+        required=(K.SEND_BUF,),
+        accepted=(K.DEST, K.TAG),
+        kw_accepted=("perm",),
+        doc=(
+            "Combined send+recv (SPMD p2p = collective_permute).\n\n"
+            "Either pass ``perm=[(src, dst), ...]`` or ``dest(fn)`` where "
+            "fn maps rank -> destination rank (a static schedule)."
+        ),
+    ),
+)
 
-def _stage_equal_check(buf, a, b, opname):
-    ok = a == b
-    if jnp.issubdtype(buf.dtype, jnp.floating):
-        return jnp.where(ok, buf, jnp.nan)
-    return jnp.where(ok, buf, jnp.iinfo(buf.dtype).max)
+attach_ops(Communicator, CORE_SPECS)

@@ -10,17 +10,24 @@ the other, so both hops are contention-free on ICI.
 
 Requires a communicator over exactly two axes ``(rows, cols)``; global
 rank order is row-major (matching ``Communicator`` over the same tuple).
+
+``grid_alltoall`` / ``grid_alltoallv`` are not re-implementations: they
+are the *same op-spec rows* as the flat ``alltoall`` / ``alltoallv``,
+re-registered with the 2-hop routing kernel as their transport (the
+``transport_attr`` spec column).  Parameter collection, capacity
+policies, count inference (which therefore also rides the 2-hop route),
+assertions, result packing, and the ``i*`` variants all come from the
+shared lowering engine.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size as _axis_size
 from .errors import KampingError
-from .params import ParamKind as K
-from .params import collect_params
+from .opspec import OP_TABLE, attach_ops
 from .plugins import Plugin
-from .result import make_result
 
 __all__ = ["GridCommunicator"]
 
@@ -36,41 +43,7 @@ class GridCommunicator(Plugin):
             )
         return axes
 
-    def grid_alltoall(self, *args):
-        """Dense 2-hop all-to-all: send_buf shaped (p, chunk, ...)."""
-        pack = collect_params(
-            "grid_alltoall", args, required=(K.SEND_BUF,), accepted=()
-        )
-        return self._two_hop(pack[K.SEND_BUF].value)
-
-    def grid_alltoallv(self, *args):
-        """2-hop variant of alltoallv: same bucketed (p, cap, ...) layout
-        and capacity-policy semantics as ``Communicator.alltoallv``."""
-        pack = collect_params(
-            "grid_alltoallv",
-            args,
-            required=(K.SEND_BUF,),
-            accepted=(K.SEND_COUNTS, K.RECV_COUNTS, K.RECV_DISPLS, K.RECV_BUF),
-        )
-        x = pack[K.SEND_BUF].value
-        buf = self._two_hop(x)
-        out_fields = [("recv_buf", buf)]
-        rc_param = pack.get(K.RECV_COUNTS)
-        if rc_param is not None and rc_param.is_out:
-            if K.SEND_COUNTS not in pack:
-                raise KampingError(
-                    "grid_alltoallv: recv_counts_out() requires send_counts(...)"
-                )
-            sc = jnp.asarray(pack[K.SEND_COUNTS].value, jnp.int32)
-            rc = self._two_hop(sc.reshape(self.size(), 1)).reshape(self.size())
-            out_fields.append(("recv_counts", rc))
-        if K.RECV_DISPLS in pack and pack[K.RECV_DISPLS].is_out:
-            out_fields.append(
-                ("recv_displs", jnp.arange(self.size(), dtype=jnp.int32) * buf.shape[1])
-            )
-        return make_result(out_fields)
-
-    # -- the 2-hop routing kernel -------------------------------------------
+    # -- the 2-hop routing kernel (the grid specs' transport) ---------------
     def _two_hop(self, x):
         """x: (p, cap, ...) buckets by global dest rank -> same layout, 2 hops.
 
@@ -79,7 +52,7 @@ class GridCommunicator(Plugin):
         identical to the flat all_to_all, with 2·(√p) messages.
         """
         rows_ax, cols_ax = self._grid_axes()
-        sr, sc = lax.axis_size(rows_ax), lax.axis_size(cols_ax)
+        sr, sc = _axis_size(rows_ax), _axis_size(cols_ax)
         p = sr * sc
         if x.shape[0] != p:
             raise KampingError(
@@ -99,3 +72,25 @@ class GridCommunicator(Plugin):
                             tiled=False)
         # h2[k1, k2, ...] = bucket from global rank (k1, k2) to me.
         return h2.reshape((p,) + rest)
+
+
+attach_ops(
+    GridCommunicator,
+    (
+        OP_TABLE["alltoall"].renamed(
+            "grid_alltoall",
+            transport_attr="_two_hop",
+            doc="Dense 2-hop all-to-all: send_buf shaped (p, chunk, ...).",
+        ),
+        OP_TABLE["alltoallv"].renamed(
+            "grid_alltoallv",
+            transport_attr="_two_hop",
+            doc=(
+                "2-hop variant of alltoallv: same bucketed (p, cap, ...) "
+                "layout, capacity-policy semantics, count inference, and "
+                "assertion staging as ``Communicator.alltoallv`` — the "
+                "identical op-spec row, routed over the grid transport."
+            ),
+        ),
+    ),
+)

@@ -29,10 +29,17 @@ __all__ = ["NonBlockingResult", "RequestPool"]
 
 
 class NonBlockingResult:
-    def __init__(self, value: Any, moved_params: Sequence = ()):
+    def __init__(self, value: Any, moved_params: Sequence = (),
+                 op_name: str = ""):
         self._value = value
         self._moved = list(moved_params)
         self._completed = False
+        self.op_name = op_name  # originating collective (i* variants)
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        state = "completed" if self._completed else "pending"
+        op = f" {self.op_name}" if self.op_name else ""
+        return f"<NonBlockingResult{op} {state}>"
 
     # -- paper API -----------------------------------------------------------
     def wait(self):

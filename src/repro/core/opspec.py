@@ -1,0 +1,349 @@
+"""Declarative collective op specs + the single lowering engine (tentpole).
+
+Every collective in the library is described ONCE by an :class:`OpSpec`:
+its named-parameter interface (required / accepted / in-place-ignored
+kinds), how receive counts and displacements are inferred, which
+assertion tiers it participates in, and a ``lower`` function that stages
+*only the data movement*.  One engine — :func:`execute` — implements
+everything that used to be hand-rolled per collective in
+``communicator.py``:
+
+* trace-time parameter-pack collection and validation,
+* the zero-overhead static-count path vs. the traced-count padded path
+  (a lowering emits out-fields lazily; nothing is staged unless the
+  corresponding ``*_out()`` parameter was requested),
+* capacity (resize) policies on bucketed ``(p, cap, ...)`` send buffers,
+  with the NORMAL-level overflow assertion,
+* the HEAVY-level communication assertion (global sent == received),
+* :class:`~repro.core.result.Result` packing in request order,
+* auto-generation of the non-blocking ``i*`` variant (paper §III-E).
+
+Specs are attached to a class with :func:`attach_ops`; plugins register
+their ops through exactly the same table (paper §III-F), optionally
+swapping the *transport* (e.g. the grid communicator reuses the
+``alltoallv`` spec verbatim with a 2-hop transport).  ``OP_TABLE`` is
+the global registry: "every public collective is defined via the
+op-spec table" is a testable property (tests/test_opspec.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import params as kp
+from .errors import AssertionLevel, KampingError, check_enabled
+from .nonblocking import NonBlockingResult
+from .params import ParamKind as K
+from .params import collect_params
+from .result import make_result
+
+__all__ = [
+    "OpSpec", "Lowering", "OP_TABLE", "attach_ops", "execute",
+    "is_static", "static_int",
+]
+
+
+# Method-name -> spec, across the core communicator and every plugin.
+OP_TABLE: Dict[str, "OpSpec"] = {}
+
+# Out-requestable parameter kinds and the result field each one fills.
+_OUT_FIELDS = {
+    K.RECV_COUNTS: "recv_counts",
+    K.RECV_COUNT: "recv_count",
+    K.RECV_DISPLS: "recv_displs",
+    K.SEND_COUNTS: "send_counts",
+    K.SEND_DISPLS: "send_displs",
+}
+
+
+def is_static(value) -> bool:
+    """True when a count-like value is known at trace time."""
+    return isinstance(value, (int, np.integer, np.ndarray))
+
+
+def static_int(value) -> Optional[int]:
+    return int(value) if isinstance(value, (int, np.integer)) else None
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One row of the collective table.
+
+    ``lower`` stages the data movement for the op and returns the receive
+    buffer; side information (counts, displacements) is *emitted* on the
+    :class:`Lowering` as lazily-evaluated thunks so it is only staged
+    when the caller requested it.
+    """
+
+    name: str
+    lower: Callable[["Lowering"], Any]
+    required: Tuple = ()
+    accepted: Tuple = ()
+    in_place_ignored: Tuple = ()
+    # (p, cap, ...) bucketed send layout: engine validates the shape and
+    # applies the recv_buf capacity policy (+ NORMAL overflow assertion).
+    bucketed: bool = False
+    bucket_hint: str = ""
+    # HEAVY tier: stage the global sent==received check when send_counts
+    # are available (costs one counts transpose + two psums).
+    heavy_count_check: bool = False
+    # Auto-generate the non-blocking ``i<name>`` variant.
+    nonblocking: bool = True
+    # Attribute name on the communicator providing the dense-exchange
+    # transport; None selects Communicator._dense_alltoall.  Plugins remap
+    # this to reuse a spec over a different routing kernel.
+    transport_attr: Optional[str] = None
+    # Python keyword arguments the generated method accepts (everything
+    # else is a trace-time TypeError, like a hand-written signature).
+    kw_accepted: Tuple[str, ...] = ()
+    doc: str = ""
+
+    def renamed(self, name: str, *, transport_attr=None, doc=None) -> "OpSpec":
+        """A plugin-facing copy of this spec under a new method name."""
+        return dataclasses.replace(
+            self,
+            name=name,
+            transport_attr=transport_attr or self.transport_attr,
+            doc=doc or self.doc,
+        )
+
+
+class Lowering:
+    """Per-call context handed to a spec's ``lower``.
+
+    Exposes the collected parameter pack, topology, transport-aware
+    collective helpers, and the out-field emit machinery.
+    """
+
+    def __init__(self, comm, spec: OpSpec, pack, kw):
+        self.comm = comm
+        self.spec = spec
+        self.pack = pack
+        self.kw = kw
+        self._transport = (
+            getattr(comm, spec.transport_attr)
+            if spec.transport_attr is not None
+            else comm._dense_alltoall
+        )
+        self._emitted: Dict[str, Any] = {}
+        self._overrides: Dict[Any, Any] = {}
+
+    # -- topology ----------------------------------------------------------
+    @property
+    def p(self) -> int:
+        return self.comm.size()
+
+    def rank(self):
+        return self.comm.rank()
+
+    @property
+    def axis(self):
+        return self.comm.axis
+
+    # -- parameter access --------------------------------------------------
+    def has(self, kind) -> bool:
+        return kind in self.pack
+
+    def value(self, kind, default=None):
+        if kind in self._overrides:
+            return self._overrides[kind]
+        p = self.pack.get(kind)
+        return p.value if p is not None else default
+
+    def override(self, kind, value):
+        """Replace a parameter's value for the rest of this lowering
+        (used by the engine's capacity-policy resize)."""
+        self._overrides[kind] = value
+
+    def requested(self, kind) -> bool:
+        p = self.pack.get(kind)
+        return p is not None and p.is_out
+
+    # -- transport-aware collective helpers --------------------------------
+    def alltoall(self, x):
+        """The op's dense personalized exchange (flat, grid, ... — the
+        transport is a spec column, not per-op code)."""
+        return self._transport(x)
+
+    def all_gather(self, x, tiled=True):
+        return lax.all_gather(x, self.comm.axis, axis=0, tiled=tiled)
+
+    def counts_transpose(self, sc):
+        """recv_counts[j] = send_counts of rank j towards me (staged with
+        the op's own transport so grid counts ride the 2-hop route)."""
+        sc = jnp.asarray(sc, jnp.int32).reshape(self.p, 1)
+        return self.alltoall(sc).reshape(self.p)
+
+    # -- out-field machinery ------------------------------------------------
+    def emit(self, field: str, thunk: Callable[[], Any]):
+        """Offer an out-field; ``thunk`` is evaluated only if requested —
+        this is how the static path stays zero-overhead."""
+        self._emitted[field] = thunk
+
+    def resolve(self, field: str):
+        thunk = self._emitted.get(field)
+        if thunk is None:
+            if field in ("recv_counts", "recv_count"):
+                raise KampingError(
+                    f"kamping.{self.spec.name}: {field}_out() requires "
+                    f"send_counts(...) to infer from"
+                )
+            raise KampingError(
+                f"kamping.{self.spec.name}: {field}_out() is not inferable "
+                f"for this operation; pass {field}(...) as an input instead"
+            )
+        return thunk()
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+def execute(comm, spec: OpSpec, args, kw=None):
+    """Collect the pack, lower the op, pack the result — for every op."""
+    if kw:
+        unknown = set(kw) - set(spec.kw_accepted)
+        if unknown:
+            raise TypeError(
+                f"kamping.{spec.name}: unexpected keyword argument(s) "
+                f"{sorted(unknown)}; collective arguments are the named "
+                f"parameter objects (send_buf(...), send_counts(...), ...)"
+                + (
+                    f" — accepted keywords: {sorted(spec.kw_accepted)}"
+                    if spec.kw_accepted
+                    else ""
+                )
+            )
+    pack = collect_params(
+        spec.name,
+        args,
+        required=spec.required,
+        accepted=spec.accepted,
+        in_place_ignored=spec.in_place_ignored,
+    )
+    low = Lowering(comm, spec, pack, kw or {})
+
+    if spec.bucketed:
+        _validate_and_resize_buckets(low)
+
+    buf = spec.lower(low)
+
+    out_fields = [("recv_buf", buf)]
+    for param in pack.values():  # request order == result unpack order
+        field = _OUT_FIELDS.get(param.kind)
+        if field is not None and param.is_out:
+            out_fields.append((field, low.resolve(field)))
+
+    if (
+        spec.heavy_count_check
+        and check_enabled(AssertionLevel.HEAVY)
+        and low.has(K.SEND_COUNTS)
+    ):
+        buf = _stage_global_count_check(low, buf)
+        out_fields[0] = ("recv_buf", buf)
+
+    return make_result(out_fields)
+
+
+def _validate_and_resize_buckets(low: Lowering):
+    """Shared bucketed-layout validation + capacity-policy application."""
+    spec, p = low.spec, low.p
+    x = low.value(K.SEND_BUF)
+    if x is None:
+        return  # in-place variant; lowering handles layout itself
+    if x.ndim < 2 or x.shape[0] != p:
+        hint = f" {low.spec.bucket_hint}" if spec.bucket_hint else ""
+        raise KampingError(
+            f"kamping.{spec.name}: send_buf must be bucketed (p, cap, ...) "
+            f"with p={p}; got shape {x.shape}.{hint}"
+        )
+    rb = low.pack.get(K.RECV_BUF)
+    policy = rb.policy if rb is not None else kp.resize_to_fit
+    if isinstance(policy, kp.grow_only):
+        cap, cap_r = x.shape[1], policy.capacity
+        sc = low.value(K.SEND_COUNTS)
+        if cap_r > cap:
+            pad = [(0, 0)] * x.ndim
+            pad[1] = (0, cap_r - cap)
+            x = jnp.pad(x, pad)
+        elif cap_r < cap:
+            if check_enabled(AssertionLevel.NORMAL) and sc is not None:
+                x = _check_counts_fit(x, sc, cap_r)
+            x = x[:, :cap_r]
+        low.override(K.SEND_BUF, x)
+    # resize_to_fit / no_resize: symmetric capacity (= send capacity).
+
+
+def _stage_global_count_check(low: Lowering, buf):
+    """Communication-level assertion (paper §III-G): total elements sent
+    == total elements received, verified globally over the axis."""
+    sc = jnp.asarray(low.value(K.SEND_COUNTS))
+    total_sent = lax.psum(jnp.sum(sc), low.comm.axis)
+    total_recv = lax.psum(jnp.sum(low.counts_transpose(sc)), low.comm.axis)
+    return _stage_equal_check(buf, total_sent, total_recv)
+
+
+# --------------------------------------------------------------------------
+# staged runtime checks (NORMAL / HEAVY tiers)
+# --------------------------------------------------------------------------
+def _check_counts_fit(x, counts, cap):
+    """NORMAL-level staged assertion: counts <= capacity (overflow check).
+
+    Poisons the buffer with NaN/sentinel on failure so the error is
+    observable without host callbacks (which don't exist on TPU fast
+    paths). Debug builds can use jax.debug.check instead.
+    """
+    ok = jnp.all(jnp.asarray(counts) <= cap)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.where(ok, x, jnp.nan)
+    return jnp.where(ok, x, jnp.iinfo(x.dtype).max)
+
+
+def _stage_equal_check(buf, a, b):
+    ok = a == b
+    if jnp.issubdtype(buf.dtype, jnp.floating):
+        return jnp.where(ok, buf, jnp.nan)
+    return jnp.where(ok, buf, jnp.iinfo(buf.dtype).max)
+
+
+# --------------------------------------------------------------------------
+# Method generation (the "composable surface is generated from the core")
+# --------------------------------------------------------------------------
+def _make_op_method(spec: OpSpec):
+    def method(self, *args, **kw):
+        return execute(self, spec, args, kw)
+
+    method.__name__ = method.__qualname__ = spec.name
+    method.__doc__ = spec.doc
+    return method
+
+
+def _make_nb_method(spec: OpSpec):
+    def method(self, *args, **kw):
+        moved = [a for a in args if isinstance(a, kp.Param) and a.moved]
+        value = execute(self, spec, args, kw)
+        return NonBlockingResult(value, moved_params=moved, op_name=spec.name)
+
+    method.__name__ = method.__qualname__ = "i" + spec.name
+    method.__doc__ = (
+        f"Non-blocking {spec.name} (auto-generated from the op-spec "
+        f"table; paper §III-E). Returns a NonBlockingResult."
+    )
+    return method
+
+
+def attach_ops(cls, specs):
+    """Register ``specs`` in OP_TABLE and attach the generated blocking
+    method + non-blocking ``i*`` variant to ``cls``."""
+    for spec in specs:
+        existing = OP_TABLE.get(spec.name)
+        if existing is not None and existing is not spec:
+            raise KampingError(f"collective '{spec.name}' already registered")
+        OP_TABLE[spec.name] = spec
+        setattr(cls, spec.name, _make_op_method(spec))
+        if spec.nonblocking:
+            setattr(cls, "i" + spec.name, _make_nb_method(spec))
+    return cls

@@ -37,6 +37,7 @@ __all__ = [
     # parameter factories
     "send_buf", "recv_buf", "send_recv_buf",
     "send_counts", "recv_counts", "send_displs", "recv_displs", "send_count",
+    "recv_count", "recv_count_out",
     "send_counts_out", "recv_counts_out", "send_displs_out", "recv_displs_out",
     "op", "root", "dest", "source", "tag", "axis",
     # policies
@@ -51,6 +52,7 @@ class ParamKind(enum.Enum):
     RECV_BUF = "recv_buf"
     SEND_RECV_BUF = "send_recv_buf"
     SEND_COUNT = "send_count"
+    RECV_COUNT = "recv_count"
     SEND_COUNTS = "send_counts"
     RECV_COUNTS = "recv_counts"
     SEND_DISPLS = "send_displs"
@@ -61,6 +63,7 @@ class ParamKind(enum.Enum):
     SOURCE = "source"
     TAG = "tag"
     AXIS = "axis"
+    NEIGHBORS = "neighbors"  # plugin-defined (sparse neighborhoods)
 
 
 # --------------------------------------------------------------------------
@@ -176,6 +179,16 @@ def send_recv_buf(data) -> Param:
 def send_count(n) -> Param:
     """Number of valid elements in ``send_buf`` (default: its capacity)."""
     return _mk(ParamKind.SEND_COUNT, n)
+
+
+def recv_count(n) -> Param:
+    """Number of valid elements this rank receives (scatterv-style ops)."""
+    return _mk(ParamKind.RECV_COUNT, n)
+
+
+def recv_count_out() -> Param:
+    """Ask the library to compute & return this rank's receive count."""
+    return Param(ParamKind.RECV_COUNT, is_out=True)
 
 
 def send_counts(c) -> Param:

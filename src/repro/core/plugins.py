@@ -5,6 +5,13 @@ all-to-all, reproducible reduce, fault tolerance) are plugins that extend a
 communicator with new member functions — and may define *new named
 parameters* participating in the same trace-time checking machinery.
 
+Plugins register their collectives as rows of the shared op-spec table
+(:func:`repro.core.opspec.attach_ops`, re-exported here): the lowering
+engine then provides parameter collection, count inference, capacity
+policies, assertion staging, result packing, and the non-blocking ``i*``
+variants — a plugin only writes the data movement (or just remaps the
+transport of an existing spec, as the grid communicator does).
+
 Usage::
 
     comm = Communicator("data").extend(GridCommunicator, ReproducibleReduce)
@@ -14,9 +21,10 @@ from __future__ import annotations
 
 from typing import Callable, Dict
 
+from .opspec import OP_TABLE, OpSpec, attach_ops  # noqa: F401  (plugin API)
 from .params import Param, ParamKind
 
-__all__ = ["Plugin", "register_parameter"]
+__all__ = ["Plugin", "register_parameter", "attach_ops", "OpSpec", "OP_TABLE"]
 
 _EXTRA_PARAMS: Dict[str, Callable] = {}
 

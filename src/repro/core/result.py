@@ -44,6 +44,13 @@ class Result:
     def fields(self):
         return tuple(self._fields)
 
+    def __contains__(self, name) -> bool:
+        return name in self._values
+
+    def items(self):
+        """(field, value) pairs in request order (receive buffer first)."""
+        return tuple((f, self._values[f]) for f in self._fields)
+
     def __repr__(self):  # pragma: no cover - cosmetic
         return f"Result({', '.join(self._fields)})"
 

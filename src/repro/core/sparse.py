@@ -1,8 +1,9 @@
 """SparseAlltoall plugin (paper §V-A, NBX by Hoefler et al.).
 
 MPI's NBX discovers unknown communication partners with nondeterministic
-probes — a mechanism with no SPMD/TPU analogue (documented in DESIGN.md).
-What *does* transfer is the insight: **a sparse exchange must not pay Θ(p)**.
+probes — a mechanism with no SPMD/TPU analogue (documented in DESIGN.md
+§5).  What *does* transfer is the insight: **a sparse exchange must not
+pay Θ(p)**.
 
 Here sparsity is expressed as a static set of rank *offsets* (destination =
 (rank + offset) mod p), the natural form for SPMD programs (halo exchanges,
@@ -11,9 +12,16 @@ offset stages exactly one ``collective_permute`` — cost ∝ |neighborhood|,
 not p, and offsets unused by the program are pruned at trace time (the
 KaMPIng zero-overhead move).
 
-A *masked* dynamic variant supports traced per-peer validity: the schedule
-is still the static offset list, but payload slots carry a validity count
-so receivers can ignore empty messages — the price of static shapes.
+Both collectives are rows of the shared op-spec table; ``neighbors`` is a
+plugin-defined named parameter (paper §III-F) that participates in the
+same trace-time pack checking as the core parameters.
+
+* ``alltoallv_sparse`` — personalized payloads, slot i holds the bucket
+  for neighbor ``offsets[i]``; slot i of the result holds the payload
+  *from* rank ``(rank - offsets[i]) % p`` (the mirrored neighborhood).
+* ``neighbor_allgather`` — MPI_Neighbor_allgather: one payload sent to
+  *every* neighbor; result slot i is the payload from the mirrored
+  in-neighbor ``(rank - offsets[i]) % p``.
 """
 from __future__ import annotations
 
@@ -23,106 +31,115 @@ import jax.numpy as jnp
 from jax import lax
 
 from .errors import KampingError
-from .params import Param, ParamKind
+from .opspec import Lowering, OpSpec, attach_ops
+from .params import Param, ParamKind as K
 from .plugins import Plugin, register_parameter
-from .result import make_result
+from .result import make_result  # noqa: F401  (re-export compat)
 
 __all__ = ["SparseAlltoall", "neighbors"]
 
 
-# A plugin-defined named parameter (paper §III-F lets plugins add these).
-_NEIGHBORS = ParamKind  # reuse enum namespace is not possible; use factory
+def neighbors(offsets: Sequence[int]) -> Param:
+    """Static neighborhood: destination ranks = (rank + off) % p, per off.
 
-
-class _NeighborsParam(Param):
-    pass
-
-
-def neighbors(offsets: Sequence[int]) -> _NeighborsParam:
-    """Static neighborhood: destination ranks = (rank + off) % p, per off."""
-    p = _NeighborsParam.__new__(_NeighborsParam)
-    Param.__init__(p, ParamKind.DEST, tuple(int(o) for o in offsets))
-    return p
+    A plugin-defined named parameter (paper §III-F lets plugins define
+    these); checked by the same trace-time machinery as core parameters.
+    """
+    return Param(K.NEIGHBORS, tuple(int(o) for o in offsets))
 
 
 register_parameter("neighbors", neighbors)
 
 
-class SparseAlltoall(Plugin):
-    def alltoallv_sparse(self, *args):
-        """Sparse personalized exchange over a static neighborhood.
-
-        Parameters: ``send_buf(x)`` with x shaped ``(k, cap, ...)`` — slot i
-        holds the payload for neighbor ``offsets[i]``; ``neighbors([...])``;
-        optional ``send_counts((k,))`` -> returned ``recv_counts`` when
-        requested via ``recv_counts_out()``.
-
-        Returns recv_buf ``(k, cap, ...)`` where slot i holds the payload
-        *from* rank ``(rank - offsets[i]) % p`` (the mirrored neighborhood),
-        matching MPI neighborhood-collective semantics on a symmetric
-        topology.
-        """
-        neigh = None
-        rest = []
-        for a in args:
-            if isinstance(a, _NeighborsParam):
-                if neigh is not None:
-                    raise KampingError("alltoallv_sparse: neighbors(...) given twice")
-                neigh = a.value
-            else:
-                rest.append(a)
-        if neigh is None:
-            raise KampingError(
-                "alltoallv_sparse: missing neighbors([...]) parameter "
-                "(the static offset list defining the sparse topology)"
-            )
-        from .params import collect_params, ParamKind as K
-
-        pack = collect_params(
-            "alltoallv_sparse",
-            rest,
-            required=(K.SEND_BUF,),
-            accepted=(K.SEND_COUNTS, K.RECV_COUNTS, K.RECV_BUF),
+def _offset_permutes(low: Lowering):
+    """Validate the sparse call shape and yield (index, offset mod p)."""
+    comm = low.comm
+    if len(comm._axes) != 1:
+        raise KampingError(
+            f"{low.spec.name} requires a single-axis communicator "
+            "(collective_permute schedules are per-axis)"
         )
-        x = pack[K.SEND_BUF].value
-        if x.shape[0] != len(neigh):
-            raise KampingError(
-                f"alltoallv_sparse: send_buf leading dim {x.shape[0]} != "
-                f"len(neighbors)={len(neigh)}"
-            )
-        if len(self._axes) != 1:
-            raise KampingError(
-                "alltoallv_sparse requires a single-axis communicator "
-                "(collective_permute schedules are per-axis)"
-            )
-        axis = self._axes[0]
-        p = self.size()
+    return comm._axes[0], low.p, low.value(K.NEIGHBORS)
 
-        received = []
-        for i, off in enumerate(neigh):
-            off = off % p
-            if off == 0:
-                received.append(x[i])  # self-message: no wire traffic staged
-                continue
-            perm = [(r, (r + off) % p) for r in range(p)]
-            received.append(lax.ppermute(x[i], axis, perm))
-        buf = jnp.stack(received, axis=0)
 
-        out_fields = [("recv_buf", buf)]
-        rc_param = pack.get(K.RECV_COUNTS)
-        if rc_param is not None and rc_param.is_out:
-            if K.SEND_COUNTS not in pack:
-                raise KampingError(
-                    "alltoallv_sparse: recv_counts_out() requires send_counts(...)"
-                )
-            sc = jnp.asarray(pack[K.SEND_COUNTS].value, jnp.int32)
-            rcs = []
-            for i, off in enumerate(neigh):
-                off = off % p
-                if off == 0:
-                    rcs.append(sc[i])
-                    continue
-                perm = [(r, (r + off) % p) for r in range(p)]
-                rcs.append(lax.ppermute(sc[i], axis, perm))
-            out_fields.append(("recv_counts", jnp.stack(rcs)))
-        return make_result(out_fields)
+def _permute_from_neighbors(values_for, axis, p, offs):
+    """Stage one ppermute per non-self offset; slot i of the result is the
+    value from rank (rank - offs[i]) % p.  Self-messages stage nothing."""
+    received = []
+    for i, off in enumerate(offs):
+        off = off % p
+        v = values_for(i)
+        if off == 0:
+            received.append(v)  # self-message: no wire traffic staged
+            continue
+        perm = [(r, (r + off) % p) for r in range(p)]
+        received.append(lax.ppermute(v, axis, perm))
+    return jnp.stack(received, axis=0)
+
+
+def _lower_alltoallv_sparse(low: Lowering):
+    axis, p, offs = _offset_permutes(low)
+    x = low.value(K.SEND_BUF)
+    if x.shape[0] != len(offs):
+        raise KampingError(
+            f"{low.spec.name}: send_buf leading dim {x.shape[0]} != "
+            f"len(neighbors)={len(offs)}"
+        )
+    buf = _permute_from_neighbors(lambda i: x[i], axis, p, offs)
+
+    if low.value(K.SEND_COUNTS) is not None:  # supplied, not *_out()
+        def _recv_counts():
+            sc = jnp.asarray(low.value(K.SEND_COUNTS), jnp.int32)
+            return _permute_from_neighbors(lambda i: sc[i], axis, p, offs)
+
+        low.emit("recv_counts", _recv_counts)
+    return buf
+
+
+def _lower_neighbor_allgather(low: Lowering):
+    axis, p, offs = _offset_permutes(low)
+    x = low.value(K.SEND_BUF)
+    return _permute_from_neighbors(lambda i: x, axis, p, offs)
+
+
+class SparseAlltoall(Plugin):
+    pass
+
+
+attach_ops(
+    SparseAlltoall,
+    (
+        OpSpec(
+            name="alltoallv_sparse",
+            lower=_lower_alltoallv_sparse,
+            required=(K.SEND_BUF, K.NEIGHBORS),
+            accepted=(K.SEND_COUNTS, K.RECV_COUNTS, K.RECV_BUF),
+            doc=(
+                "Sparse personalized exchange over a static neighborhood.\n\n"
+                "Parameters: ``send_buf(x)`` with x shaped ``(k, cap, ...)`` "
+                "— slot i holds the payload for neighbor ``offsets[i]``; "
+                "``neighbors([...])``; optional ``send_counts((k,))`` -> "
+                "returned ``recv_counts`` when requested via "
+                "``recv_counts_out()``.\n\n"
+                "Returns recv_buf ``(k, cap, ...)`` where slot i holds the "
+                "payload *from* rank ``(rank - offsets[i]) % p`` (the "
+                "mirrored neighborhood), matching MPI "
+                "neighborhood-collective semantics on a symmetric topology."
+            ),
+        ),
+        OpSpec(
+            name="neighbor_allgather",
+            lower=_lower_neighbor_allgather,
+            required=(K.SEND_BUF, K.NEIGHBORS),
+            accepted=(K.RECV_BUF,),
+            doc=(
+                "MPI_Neighbor_allgather over a static offset neighborhood: "
+                "this rank's ``send_buf`` payload is sent to every neighbor "
+                "``(rank + offsets[i]) % p``; returns ``(k, ...)`` where "
+                "slot i is the payload from the mirrored in-neighbor "
+                "``(rank - offsets[i]) % p``.  Cost ∝ |neighborhood| "
+                "collective_permutes, not p."
+            ),
+        ),
+    ),
+)

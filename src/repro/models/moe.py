@@ -20,11 +20,13 @@ from __future__ import annotations
 import math
 from functools import partial
 
+import operator
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Communicator, send_buf
+from repro.core import Communicator, op, send_buf
 from .layers import dense, init_dense, gated_mlp, init_mlp
 
 __all__ = [
@@ -137,13 +139,23 @@ def _dispatch_slots(experts, gates, e_pad: int, cap_e: int):
     return inv  # (n*k,) flat slot per routing pair
 
 
-def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False):
+def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
+                         combine="gather"):
     """EP MoE body — call INSIDE shard_map.
 
     p_local: expert bank sharded over ``ep_axis`` -> local (E_local, d, ff);
     router/shared replicated.  x_local: (n_loc, d) local tokens.
     Dispatch = paper-style alltoallv with grow_only capacity: fully static,
     no counts exchanged; empty slots are zeros and vanish at combine.
+
+    ``combine`` selects the return path (DESIGN.md §2):
+
+    * ``"gather"`` — alltoallv the expert outputs back to their source
+      ranks, then gather each routing pair's slot and weight/sum locally.
+    * ``"reduce_scatter"`` — ship each pair's (index, gate) with the
+      payload; expert ranks scatter-add gate-weighted outputs into
+      per-source-token rows and a single ``reduce_scatter`` both returns
+      *and* top-k-combines them — the combine rides inside the collective.
     """
     comm = Communicator(ep_axis)
     if use_grid:
@@ -160,16 +172,24 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False):
     gates, experts, aux = router_topk(p_local, x_local, cfg)
     slots = _dispatch_slots(experts, gates, e_pad, cap_e)  # (n_loc*k,)
 
+    def dispatch(buckets):
+        return (
+            comm.grid_alltoallv(send_buf(buckets))
+            if use_grid
+            else comm.alltoallv(send_buf(buckets))
+        )
+
+    def to_buckets(flat_vals, fill):
+        """Scatter per-pair values into the (ep, e_local*cap_e, ...) slot
+        layout; overflowed pairs land in the dropped sentinel row."""
+        rest = flat_vals.shape[1:]
+        send = jnp.full((e_pad * cap_e + 1,) + rest, fill, flat_vals.dtype)
+        send = send.at[slots].set(flat_vals, mode="drop")
+        return send[:-1].reshape((ep, e_local * cap_e) + rest)
+
     # scatter tokens into (e_pad*cap_e [+1 overflow], d) send buckets
     xt = jnp.repeat(x_local, k, axis=0)  # (n_loc*k, d) one copy per route
-    send = jnp.zeros((e_pad * cap_e + 1, d), x_local.dtype)
-    send = send.at[slots].set(xt, mode="drop")
-    send_buckets = send[:-1].reshape(ep, e_local * cap_e, d)
-
-    if use_grid:
-        recv = comm.grid_alltoallv(send_buf(send_buckets))
-    else:
-        recv = comm.alltoallv(send_buf(send_buckets))
+    recv = dispatch(to_buckets(xt, 0))
     # recv: (ep, e_local*cap_e, d) — tokens from every source rank for my
     # local experts; reorder to (e_local, ep*cap_e, d) batched per expert
     recv = recv.reshape(ep, e_local, cap_e, d).transpose(1, 0, 2, 3)
@@ -181,13 +201,41 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False):
     )
     y = jnp.einsum("ecf,efd->ecd", h, p_local["wo"])
 
-    # return path: inverse layout transform + alltoallv back
+    # inverse layout transform: back to (source rank, slot) bucket layout
     y = y.reshape(e_local, ep, cap_e, d).transpose(1, 0, 2, 3)
     y = y.reshape(ep, e_local * cap_e, d)
-    if use_grid:
-        back = comm.grid_alltoallv(send_buf(y))
-    else:
-        back = comm.alltoallv(send_buf(y))
+
+    if combine == "reduce_scatter":
+        # Pair metadata travels with the dispatch: for every slot, the
+        # source pair index (-1 = empty/dropped) and the routing gate,
+        # fused into one (.., 2) float32 exchange.  The gate channel must
+        # stay float so the router gradient flows back through the
+        # collective; pair ids are exact in f32 below 2^24.
+        if n_loc * k >= 1 << 24:
+            raise ValueError(
+                "combine='reduce_scatter': n_loc*top_k must be < 2**24 "
+                "(pair ids travel in a float32 channel); use "
+                "combine='gather' for larger local batches"
+            )
+        pair_ids = jnp.arange(n_loc * k, dtype=jnp.float32)
+        meta = jnp.stack(
+            [pair_ids, gates.reshape(-1).astype(jnp.float32)], axis=-1
+        )
+        recv_meta = dispatch(to_buckets(meta, -1.0))
+        recv_pair = recv_meta[..., 0].astype(jnp.int32)
+        recv_gate = jnp.where(recv_pair >= 0, recv_meta[..., 1], 0.0)
+        weighted = y * recv_gate[..., None].astype(y.dtype)
+        rows = jnp.where(recv_pair >= 0, recv_pair // k, n_loc)
+        contrib = jnp.zeros((ep, n_loc + 1, d), y.dtype)
+        contrib = contrib.at[jnp.arange(ep)[:, None], rows].add(weighted)
+        out = comm.reduce_scatter(
+            send_buf(contrib[:, :n_loc]), op(operator.add)
+        )
+        return out + _shared_out(p_local, x_local, cfg), aux
+    if combine != "gather":
+        raise ValueError(f"unknown combine mode {combine!r}")
+
+    back = dispatch(y)
     back_flat = jnp.concatenate(
         [back.reshape(e_pad * cap_e, d), jnp.zeros((1, d), back.dtype)], 0
     )

@@ -1,0 +1,132 @@
+"""`hypothesis` if available, else a deterministic offline fallback.
+
+The tier-1 suite must collect and run in offline environments where
+`hypothesis` is not installed.  Property-based tests import `given`,
+`settings`, and `strategies` from this module: with the real library on
+the path they get the real thing; without it, `given` degrades to a
+fixed number of seeded random examples per test (no shrinking, no
+database) and `strategies` implements just the combinators this suite
+uses.  Draws are seeded per-example, so failures reproduce exactly.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import types as _types
+
+    import numpy as _np
+
+    _MAX_EXAMPLES = 15
+
+    class _Strategy:
+        """A draw function rng -> value, plus the combinators tests use."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def flatmap(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)).draw(rng))
+
+    def _integers(min_value=0, max_value=100):
+        return _Strategy(
+            lambda rng: int(rng.randint(min_value, max_value + 1))
+        )
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.randint(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def _dictionaries(keys, values, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.randint(min_size, max_size + 1))
+            out = {}
+            for _ in range(n):
+                out[keys.draw(rng)] = values.draw(rng)
+            return out
+
+        return _Strategy(draw)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.randint(0, len(seq)))])
+
+    def _tuples(*ss):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in ss))
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    def _text(alphabet="abcdefghij", min_size=0, max_size=10):
+        alphabet = list(alphabet)
+
+        def draw(rng):
+            n = int(rng.randint(min_size, max_size + 1))
+            return "".join(
+                alphabet[int(rng.randint(0, len(alphabet)))] for _ in range(n)
+            )
+
+        return _Strategy(draw)
+
+    def _composite(fn):
+        def make(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda s: s.draw(rng), *args, **kwargs)
+            )
+
+        return make
+
+    strategies = _types.SimpleNamespace(
+        integers=_integers,
+        lists=_lists,
+        dictionaries=_dictionaries,
+        sampled_from=_sampled_from,
+        tuples=_tuples,
+        just=_just,
+        text=_text,
+        composite=_composite,
+    )
+
+    def given(*strats, **kw_strats):
+        def deco(fn):
+            def wrapper():
+                for i in range(_MAX_EXAMPLES):
+                    rng = _np.random.RandomState(1234 + i)
+                    args = [s.draw(rng) for s in strats]
+                    kwargs = {k: s.draw(rng) for k, s in kw_strats.items()}
+                    fn(*args, **kwargs)
+
+            # NOTE: no functools.wraps — pytest must see the zero-arg
+            # signature, not the original's strategy parameters.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.hypothesis_fallback = True
+            return wrapper
+
+        return deco
+
+    class settings:  # noqa: N801 - mirrors the hypothesis API
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass

@@ -243,3 +243,62 @@ def test_zero_overhead_hlo_parity(mesh8):
             txt))
 
     assert colls(kamping) == colls(handrolled)
+
+
+def test_reduce_scatter_lowering_and_semantics(mesh8):
+    """New op: sum lowers to the hardware reduce-scatter; values match the
+    rank-block reduction."""
+    def f(x):
+        return Communicator("x").reduce_scatter(send_buf(x), op(operator.add))
+
+    x = np.arange(8 * 8 * 2, dtype=np.float32).reshape(8, 8, 2)
+    out = jax.jit(smap(f, mesh8, P("x"), P("x")))(x.reshape(64, 2))
+    out = np.asarray(out).reshape(8, 2)
+    for me in range(8):
+        np.testing.assert_allclose(out[me], x.sum(0)[me], rtol=1e-6)
+
+    xs = jax.ShapeDtypeStruct((64, 2), jnp.float32)
+    txt = jax.jit(smap(f, mesh8, P("x"), P("x"))).lower(xs).as_text()
+    assert "reduce_scatter" in txt or "reduce-scatter" in txt
+    assert "all_reduce" not in txt and "all-reduce" not in txt
+
+
+def test_scatterv_and_gatherv_ragged(mesh8):
+    """New ops: root-bucketed scatterv and true variable-count gatherv."""
+    from repro.core import recv_count_out, recv_counts, root, send_counts
+
+    counts = np.asarray([1, 2, 3, 1, 2, 3, 1, 2], np.int64)
+
+    def f(rootbuf, sc, v):
+        comm = Communicator("x")
+        r = comm.scatterv(send_buf(rootbuf), send_counts(sc),
+                          recv_count_out(), root(2))
+        g = comm.gatherv(send_buf(v), recv_counts(counts))
+        return r.recv_buf, r.recv_count[None], g
+
+    rootbuf = np.arange(8 * 3, dtype=np.float32).reshape(8, 3)
+    rootbufs = np.tile(rootbuf[None], (8, 1, 1))
+    scs = np.tile(counts.astype(np.int32)[None], (8, 1))
+    v = np.arange(8 * 3, dtype=np.float32).reshape(8, 3)
+    mine, cnt, g = jax.jit(
+        smap(f, mesh8, (P("x"), P("x"), P("x")), (P("x"), P("x"), P(None)))
+    )(rootbufs.reshape(64, 3), scs.reshape(64), v.reshape(24))
+    mine = np.asarray(mine).reshape(8, 3)
+    np.testing.assert_array_equal(mine, rootbuf)
+    np.testing.assert_array_equal(np.asarray(cnt).ravel(), counts)
+    want = np.concatenate([v[r, : counts[r]] for r in range(8)])
+    np.testing.assert_array_equal(np.asarray(g), want)
+
+
+def test_neighbor_allgather_md(mesh8):
+    def f(x):
+        comm = Communicator("x").extend(SparseAlltoall)
+        return comm.neighbor_allgather(send_buf(x), neighbors([1, -2, 0]))
+
+    x = np.arange(8 * 2, dtype=np.float32).reshape(8, 2)
+    out = jax.jit(smap(f, mesh8, P("x"), P("x")))(x)
+    out = np.asarray(out).reshape(8, 3, 2)
+    for me in range(8):
+        np.testing.assert_array_equal(out[me, 0], x[(me - 1) % 8])
+        np.testing.assert_array_equal(out[me, 1], x[(me + 2) % 8])
+        np.testing.assert_array_equal(out[me, 2], x[me])

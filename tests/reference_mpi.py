@@ -1,0 +1,200 @@
+"""Pure-NumPy reference oracle: textbook semantics of every collective.
+
+Each function maps per-rank inputs (a list indexed by rank, or an array
+whose leading axis is the rank) to the list of per-rank outputs, using
+this repo's static-shape conventions: variable-count ("v") collectives
+exchange fixed-capacity buckets plus element counts (capacity policies),
+never ragged buffers.  Reductions fold in rank order (the library's
+deterministic lambda-reduction contract), so non-commutative operators
+are meaningful.
+
+Used by the differential tests (test_oracle_differential.py,
+test_plugins_equivalence.py): every `Communicator` op runs under the
+single-process SPMD interpreter for p ∈ {1, 2, 4, 8} and must match
+these functions elementwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _ranks(bufs):
+    return [np.asarray(b) for b in bufs]
+
+
+# -- gathers ----------------------------------------------------------------
+def allgather(send):
+    send = _ranks(send)
+    out = np.concatenate(send, axis=0)
+    return [out] * len(send)
+
+
+def allgather_inplace(bufs):
+    """In-place allgather: bufs[r] is (p, ...) with rank r's contribution
+    in slot r; every rank ends with the slot-r values of every rank."""
+    bufs = _ranks(bufs)
+    p = len(bufs)
+    out = np.stack([bufs[r][r] for r in range(p)], axis=0)
+    return [out] * p
+
+
+def allgatherv_exact(send, count):
+    """Static uniform count: exact concatenation of length-`count` prefixes."""
+    send = _ranks(send)
+    out = np.concatenate([s[:count] for s in send], axis=0)
+    return [out] * len(send)
+
+
+def allgatherv_ragged(send, counts):
+    """Static per-rank counts: exact ragged concatenation + excl displs."""
+    send = _ranks(send)
+    out = np.concatenate(
+        [s[: int(c)] for s, c in zip(send, counts)], axis=0
+    ) if sum(counts) else send[0][:0]
+    displs = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
+    return [out] * len(send), np.asarray(counts, np.int32), displs
+
+
+def allgatherv_padded(send, counts):
+    """Traced counts: padded layout — rank i's data at displacement i*cap,
+    garbage (whatever was in the buffer) beyond its count."""
+    send = _ranks(send)
+    cap = send[0].shape[0]
+    out = np.concatenate(send, axis=0)
+    displs = (np.arange(len(send)) * cap).astype(np.int32)
+    return [out] * len(send), np.asarray(counts, np.int32), displs
+
+
+# -- all-to-alls ------------------------------------------------------------
+def alltoall(send):
+    """send[r]: (p, chunk, ...); recv[me][j] = send[j][me]."""
+    send = _ranks(send)
+    p = len(send)
+    return [np.stack([send[j][me] for j in range(p)], axis=0) for me in range(p)]
+
+
+def alltoallv(send, cap_r=None):
+    """Bucketed (p, cap, ...) exchange with a receive capacity: recv[me][j]
+    is rank j's bucket for `me`, padded/truncated to cap_r."""
+    send = _ranks(send)
+    p = len(send)
+    cap = send[0].shape[1]
+    cap_r = cap if cap_r is None else cap_r
+
+    def resize(bucket):
+        if cap_r <= cap:
+            return bucket[:cap_r]
+        pad = np.zeros((cap_r - cap,) + bucket.shape[1:], bucket.dtype)
+        return np.concatenate([bucket, pad], axis=0)
+
+    return [
+        np.stack([resize(send[j][me]) for j in range(p)], axis=0)
+        for me in range(p)
+    ]
+
+
+def counts_transpose(send_counts):
+    """recv_counts[me][j] = send_counts[j][me]."""
+    sc = np.asarray(send_counts, np.int32)
+    return [sc[:, me] for me in range(sc.shape[0])]
+
+
+# -- reductions -------------------------------------------------------------
+def _fold(send, fn):
+    send = _ranks(send)
+    acc = send[0]
+    for v in send[1:]:
+        acc = fn(acc, v)
+    return acc
+
+
+def allreduce(send, fn):
+    """Left fold in rank order (deterministic; non-commutative ops OK)."""
+    return [_fold(send, fn)] * len(send)
+
+
+def reduce_scatter(send, fn):
+    """send[r]: (p, chunk, ...) — slot j is r's contribution to rank j;
+    recv[me] = fold over ranks of slot `me`."""
+    red = _fold(send, fn)
+    return [red[me] for me in range(len(send))]
+
+
+def scan(send, fn):
+    send = _ranks(send)
+    out, acc = [], None
+    for v in send:
+        acc = v if acc is None else fn(acc, v)
+        out.append(acc)
+    return out
+
+
+def exscan(send, fn, zero=None):
+    send = _ranks(send)
+    zero = np.zeros_like(send[0]) if zero is None else zero
+    incl = scan(send, fn)
+    return [zero] + incl[:-1]
+
+
+# -- rooted ops -------------------------------------------------------------
+def bcast(vals, root=0):
+    vals = _ranks(vals)
+    return [vals[root]] * len(vals)
+
+
+def scatter(bufs, root=0):
+    """bufs[r]: (p, chunk, ...) — root's buffer scattered by slot."""
+    bufs = _ranks(bufs)
+    return [bufs[root][me] for me in range(len(bufs))]
+
+
+def scatterv(bufs, counts, root=0, cap_r=None):
+    """Root's bucketed (p, cap, ...) buffer + per-rank counts; rank i gets
+    bucket i resized to cap_r, plus its own valid count."""
+    bufs = _ranks(bufs)
+    p = len(bufs)
+    cap = bufs[root].shape[1]
+    cap_r = cap if cap_r is None else cap_r
+
+    def resize(bucket):
+        if cap_r <= cap:
+            return bucket[:cap_r]
+        pad = np.zeros((cap_r - cap,) + bucket.shape[1:], bucket.dtype)
+        return np.concatenate([bucket, pad], axis=0)
+
+    recv = [resize(bufs[root][me]) for me in range(p)]
+    return recv, [np.int32(counts[me]) for me in range(p)]
+
+
+# -- point-to-point / neighborhoods -----------------------------------------
+def send_recv(send, perm):
+    """perm: [(src, dst), ...]; recv[dst] = send[src] (else zeros)."""
+    send = _ranks(send)
+    out = [np.zeros_like(s) for s in send]
+    for src, dst in perm:
+        out[dst] = send[src]
+    return out
+
+
+def sparse_alltoallv(send, offsets):
+    """send[r]: (k, cap, ...) — slot i is r's payload for (r+offsets[i])%p;
+    recv[me][i] = payload from the mirrored in-neighbor (me-offsets[i])%p."""
+    send = _ranks(send)
+    p = len(send)
+    return [
+        np.stack(
+            [send[(me - off) % p][i] for i, off in enumerate(offsets)], axis=0
+        )
+        for me in range(p)
+    ]
+
+
+def neighbor_allgather(send, offsets):
+    """send[r]: one payload sent to every neighbor; recv[me][i] = the full
+    payload of in-neighbor (me-offsets[i])%p."""
+    send = _ranks(send)
+    p = len(send)
+    return [
+        np.stack([send[(me - off) % p] for off in offsets], axis=0)
+        for me in range(p)
+    ]

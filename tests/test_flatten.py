@@ -1,7 +1,7 @@
 """with_flattened / bucketize (paper Fig. 9 helper) — property-based."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bucketize_by_destination, flatten_buckets, with_flattened
 

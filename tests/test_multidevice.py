@@ -6,7 +6,11 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 HERE = os.path.dirname(__file__)
+
+pytestmark = [pytest.mark.md, pytest.mark.slow]
 
 
 def test_run_multidevice_suite():

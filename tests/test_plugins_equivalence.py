@@ -1,0 +1,296 @@
+"""Plugin equivalence vs. the flat collectives / the NumPy oracle.
+
+* grid_alltoallv ≡ flat alltoallv (recv_buf + recv_counts outs) on 2-axis
+  meshes — the grid plugin reuses the alltoallv op-spec row with a 2-hop
+  transport, so the observable contract must be identical;
+* alltoallv_sparse / neighbor_allgather mirrored-neighborhood semantics
+  (slot i receives from ``(rank − offsets[i]) % p``) vs. reference_mpi;
+* MoE expert-parallel dispatch vs. a dense oracle that replicates the
+  capacity-drop mask — including forced capacity overflow (dropped
+  tokens) and the reduce_scatter-based combine.
+
+Runs under the same single-process SPMD interpreter as
+test_oracle_differential.py (vmap with named axes; nested vmap gives the
+2-axis meshes).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import reference_mpi as ref
+from repro.core import (
+    Communicator,
+    GridCommunicator,
+    SparseAlltoall,
+    neighbors,
+    recv_counts_out,
+    send_buf,
+    send_counts,
+)
+from repro.models import ModelConfig
+from repro.models.moe import init_moe, moe_forward_ep_local, router_topk
+
+
+def spmd(f, *arrs, in_axes=0):
+    return jax.vmap(f, in_axes=in_axes, axis_name="x")(*arrs)
+
+
+def spmd2(f, *arrs):
+    """2-axis mesh: args shaped (rows, cols, ...)."""
+    return jax.vmap(jax.vmap(f, axis_name="col"), axis_name="row")(*arrs)
+
+
+# -- grid ≡ flat ------------------------------------------------------------
+@pytest.mark.parametrize("rows,cols", [(1, 2), (2, 2), (2, 4), (4, 2)])
+def test_grid_alltoallv_equals_flat(rows, cols):
+    p = rows * cols
+    rng = np.random.RandomState(p)
+    x = rng.randint(-99, 99, size=(rows, cols, p, 3, 2)).astype(np.int32)
+    sc = rng.randint(0, 4, size=(rows, cols, p)).astype(np.int32)
+
+    def f(v, c):
+        comm = Communicator(("row", "col")).extend(GridCommunicator)
+        flat = comm.alltoallv(send_buf(v), send_counts(c), recv_counts_out())
+        grid = comm.grid_alltoallv(
+            send_buf(v), send_counts(c), recv_counts_out()
+        )
+        return flat.recv_buf, flat.recv_counts, grid.recv_buf, grid.recv_counts
+
+    fb, fc, gb, gc = spmd2(f, x, sc)
+    np.testing.assert_array_equal(np.asarray(fb), np.asarray(gb))
+    np.testing.assert_array_equal(np.asarray(fc), np.asarray(gc))
+    # ... and both match the oracle (row-major global rank order).
+    want = ref.alltoallv(x.reshape(p, p, 3, 2))
+    want_rc = ref.counts_transpose(sc.reshape(p, p))
+    got_b = np.asarray(fb).reshape(p, p, 3, 2)
+    got_c = np.asarray(fc).reshape(p, p)
+    for r in range(p):
+        np.testing.assert_array_equal(got_b[r], want[r])
+        np.testing.assert_array_equal(got_c[r], want_rc[r])
+
+
+def test_grid_alltoall_equals_flat():
+    rows, cols = 2, 4
+    p = rows * cols
+    x = np.arange(rows * cols * p * 2, dtype=np.int32).reshape(rows, cols, p, 2)
+
+    def f(v):
+        comm = Communicator(("row", "col")).extend(GridCommunicator)
+        return comm.alltoall(send_buf(v)), comm.grid_alltoall(send_buf(v))
+
+    flat, grid = spmd2(f, x)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(grid))
+
+
+# -- sparse mirrored neighborhoods ------------------------------------------
+@pytest.mark.parametrize("p", (2, 4, 8))
+def test_sparse_alltoallv_mirrored(p):
+    offsets = [1, -2, 0, 5]
+    rng = np.random.RandomState(p)
+    x = rng.randn(p, len(offsets), 3, 1).astype(np.float32)
+    sc = rng.randint(0, 4, size=(p, len(offsets))).astype(np.int32)
+
+    def f(v, c):
+        comm = Communicator("x").extend(SparseAlltoall)
+        r = comm.alltoallv_sparse(
+            send_buf(v), neighbors(offsets), send_counts(c), recv_counts_out()
+        )
+        return r.recv_buf, r.recv_counts
+
+    buf, rc = spmd(f, x, sc)
+    want = ref.sparse_alltoallv(x, offsets)
+    want_rc = ref.sparse_alltoallv(sc[..., None], offsets)
+    for r in range(p):
+        np.testing.assert_array_equal(np.asarray(buf)[r], want[r])
+        np.testing.assert_array_equal(
+            np.asarray(rc)[r], want_rc[r][..., 0]
+        )
+
+
+@pytest.mark.parametrize("p", (1, 2, 4, 8))
+def test_neighbor_allgather(p):
+    offsets = [0, 1, -1]
+    x = np.arange(p * 4, dtype=np.float32).reshape(p, 4)
+
+    def f(v):
+        comm = Communicator("x").extend(SparseAlltoall)
+        return comm.neighbor_allgather(send_buf(v), neighbors(offsets))
+
+    buf = spmd(f, x)
+    want = ref.neighbor_allgather(x, offsets)
+    for r in range(p):
+        np.testing.assert_array_equal(np.asarray(buf)[r], want[r])
+
+
+def test_sparse_cost_proportional_to_neighborhood():
+    """NBX insight at the jaxpr level: staged ppermutes ∝ |neighborhood|."""
+    offsets = [1, -1]
+
+    def f(v):
+        comm = Communicator("x").extend(SparseAlltoall)
+        return comm.alltoallv_sparse(send_buf(v), neighbors(offsets))
+
+    jaxpr = jax.make_jaxpr(f, axis_env=[("x", 8)])(
+        np.zeros((2, 4), np.float32)
+    )
+    txt = str(jaxpr)
+    assert txt.count("ppermute") == len(offsets)
+    assert "all_to_all" not in txt
+
+
+# -- MoE expert-parallel vs dense oracle (dropped-token edge case) ----------
+def _moe_cfg(capacity_factor):
+    return ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=4, top_k=2,
+        moe_d_ff=32, capacity_factor=capacity_factor, dtype="float32",
+        param_dtype="float32",
+    )
+
+
+def _shard_experts(full, p):
+    e_pad = full["wi"].shape[0]
+    e_local = e_pad // p
+
+    def shard(w):
+        return np.asarray(w).reshape((p, e_local) + w.shape[1:])
+
+    p_sharded = {
+        "router": full["router"],
+        "wi": shard(full["wi"]),
+        "wg": shard(full["wg"]),
+        "wo": shard(full["wo"]),
+    }
+    in_axes = ({"router": None, "wi": 0, "wg": 0, "wo": 0}, 0)
+    return p_sharded, in_axes
+
+
+def _np_keep_mask(experts, e_pad, cap_e):
+    """Replicates _dispatch_slots' capacity-drop rule in NumPy: pair kept
+    iff its stable-sort position within its expert bucket is < cap_e."""
+    flat_e = np.asarray(experts).reshape(-1)
+    order = np.argsort(flat_e, kind="stable")
+    sorted_e = flat_e[order]
+    counts = np.bincount(sorted_e, minlength=e_pad)
+    displs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos_sorted = np.arange(flat_e.size) - displs[sorted_e]
+    keep = np.empty(flat_e.size, bool)
+    keep[order] = pos_sorted < cap_e
+    return keep.reshape(np.asarray(experts).shape)
+
+
+def _np_dense_with_drops(full, x, cfg, gates, experts, keep):
+    """Dense float64 oracle applying the EP capacity-drop mask."""
+    wi = np.asarray(full["wi"], np.float64)
+    wg = np.asarray(full["wg"], np.float64)
+    wo = np.asarray(full["wo"], np.float64)
+    x64 = np.asarray(x, np.float64)
+    out = np.zeros_like(x64)
+    n, k = experts.shape
+    for t in range(n):
+        for j in range(k):
+            if not keep[t, j]:
+                continue  # dropped token: contributes nothing
+            e = int(experts[t, j])
+            h_g = x64[t] @ wg[e]
+            h_i = x64[t] @ wi[e]
+            silu = h_g / (1.0 + np.exp(-h_g)) * h_i
+            out[t] += float(gates[t, j]) * (silu @ wo[e])
+    return out
+
+
+@pytest.mark.parametrize("p", (1, 2, 4))
+@pytest.mark.parametrize("capacity_factor", (4.0, 0.5), ids=["ample", "overflow"])
+@pytest.mark.parametrize("combine", ("gather", "reduce_scatter"))
+def test_moe_ep_vs_dense_oracle(p, capacity_factor, combine):
+    cfg = _moe_cfg(capacity_factor)
+    n_loc = 8
+    full = init_moe(jax.random.PRNGKey(0), cfg, ep_size=p)
+    p_sharded, in_axes = _shard_experts(full, p)
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (p, n_loc, cfg.d_model)),
+        np.float32,
+    )
+
+    def f(pl, xl):
+        return moe_forward_ep_local(pl, xl, cfg, "ep", combine=combine)[0]
+
+    got = np.asarray(
+        jax.vmap(f, in_axes=in_axes, axis_name="ep")(p_sharded, x)
+    )
+
+    e_pad = full["wi"].shape[0]
+    cap_e = max(1, int(math.ceil(n_loc * cfg.top_k / e_pad * capacity_factor)))
+    if capacity_factor < 1.0:  # the edge case under test must actually drop
+        assert cap_e * e_pad < n_loc * cfg.top_k
+    for r in range(p):
+        # Router runs on identical values/shapes inside and outside vmap,
+        # so gates/experts (and hence the drop mask) match exactly.
+        gates, experts, _ = router_topk(full, jnp.asarray(x[r]), cfg)
+        gates, experts = np.asarray(gates), np.asarray(experts)
+        keep = _np_keep_mask(experts, e_pad, cap_e)
+        if capacity_factor < 1.0:
+            assert not keep.all()
+        want = _np_dense_with_drops(full, x[r], cfg, gates, experts, keep)
+        np.testing.assert_allclose(got[r], want, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("p", (1, 2, 4))
+def test_moe_combine_modes_agree(p):
+    """gather- and reduce_scatter-combine are the same function, including
+    under forced capacity overflow."""
+    cfg = _moe_cfg(0.5)
+    full = init_moe(jax.random.PRNGKey(2), cfg, ep_size=p)
+    p_sharded, in_axes = _shard_experts(full, p)
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(3), (p, 8, cfg.d_model)),
+        np.float32,
+    )
+    outs = {}
+    for mode in ("gather", "reduce_scatter"):
+        def f(pl, xl, mode=mode):
+            return moe_forward_ep_local(pl, xl, cfg, "ep", combine=mode)[0]
+
+        outs[mode] = np.asarray(
+            jax.vmap(f, in_axes=in_axes, axis_name="ep")(p_sharded, x)
+        )
+    np.testing.assert_allclose(
+        outs["gather"], outs["reduce_scatter"], rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("p", (1, 2))
+def test_moe_combine_modes_agree_on_router_gradient(p):
+    """The reduce_scatter combine must not detach the router: gate
+    gradients flow through the metadata collective and match the
+    gather-combine gradients."""
+    cfg = _moe_cfg(4.0)
+    full = init_moe(jax.random.PRNGKey(4), cfg, ep_size=p)
+    p_sharded, in_axes = _shard_experts(full, p)
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(5), (p, 8, cfg.d_model)),
+        np.float32,
+    )
+
+    def loss(router_w, mode):
+        pl = dict(p_sharded)
+        pl["router"] = {"w": router_w}
+
+        def f(pl_, xl):
+            return moe_forward_ep_local(pl_, xl, cfg, "ep", combine=mode)[0]
+
+        out = jax.vmap(
+            f, in_axes=({"router": None, "wi": 0, "wg": 0, "wo": 0}, 0),
+            axis_name="ep",
+        )(pl, x)
+        return jnp.sum(out ** 2)
+
+    g_gather = jax.grad(lambda w: loss(w, "gather"))(full["router"]["w"])
+    g_rs = jax.grad(lambda w: loss(w, "reduce_scatter"))(full["router"]["w"])
+    assert float(jnp.abs(g_rs).max()) > 0.0  # router is not detached
+    np.testing.assert_allclose(
+        np.asarray(g_gather), np.asarray(g_rs), rtol=1e-4, atol=1e-5
+    )

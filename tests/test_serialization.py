@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, strategies as st
 
 from repro.core import as_serialized, deserialize, host_pack, host_unpack
 
