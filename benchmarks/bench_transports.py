@@ -1,0 +1,138 @@
+"""xla vs pallas transport: allgather / reduce_scatter / allreduce.
+
+Two comparisons per (op, payload) cell, over the payload sizes in
+``benchmarks/common.py``:
+
+* **SPMD level** — the table-generated collective under the vmap-as-SPMD
+  interpreter at p=8, once per transport.  On CPU this times the staged
+  semantics (ppermute ring vs XLA collective HLO), the transferable
+  number being the *staged op mix*; on a TPU mesh the same code times
+  the RDMA ring kernels against the XLA collectives.
+* **Kernel level** — the stacked interpret-mode pallas kernel against
+  the stacked NumPy-oracle-backed jnp reference, isolating kernel
+  overhead from the transport plumbing.
+
+Emits the standard report JSON (benchmarks/artifacts/transports.json)
+plus csv_row lines for the console.
+"""
+from __future__ import annotations
+
+import json
+import operator
+import os
+
+import jax
+import numpy as np
+
+from common import PAYLOAD_SIZES, csv_row, time_fn
+from repro.core import Communicator, op, send_buf
+from repro.kernels.collectives import (
+    ring_allgather_stacked,
+    ring_allreduce_stacked,
+    ring_reduce_scatter_stacked,
+)
+
+P_RANKS = 8
+TRANSPORTS = ("xla", "pallas")
+
+
+def _spmd(f):
+    return jax.jit(jax.vmap(f, axis_name="x"))
+
+
+def _ops(t, n):
+    """(name, spmd callable, per-rank input) for payload of n elements."""
+    chunk = max(1, n // P_RANKS)
+    return (
+        (
+            "allgather",
+            _spmd(lambda v: Communicator("x", transport=t).allgather(
+                send_buf(v))),
+            np.random.RandomState(0).randn(P_RANKS, chunk).astype(np.float32),
+        ),
+        (
+            "reduce_scatter",
+            _spmd(lambda v: Communicator("x", transport=t).reduce_scatter(
+                send_buf(v), op(operator.add))),
+            np.random.RandomState(1)
+            .randn(P_RANKS, P_RANKS, chunk)
+            .astype(np.float32),
+        ),
+        (
+            "allreduce",
+            _spmd(lambda v: Communicator("x", transport=t).allreduce(
+                send_buf(v), op(operator.add))),
+            np.random.RandomState(2).randn(P_RANKS, n).astype(np.float32),
+        ),
+    )
+
+
+def run():
+    rows = []
+    for n in PAYLOAD_SIZES:
+        payload_bytes = n * 4
+        for t in TRANSPORTS:
+            for name, fn, x in _ops(t, n):
+                us = time_fn(fn, x) * 1e6
+                csv_row(
+                    f"transport_{name}_{t}", us,
+                    f"p={P_RANKS};payload_bytes={payload_bytes}",
+                )
+                rows.append(
+                    {
+                        "level": "spmd",
+                        "op": name,
+                        "transport": t,
+                        "p": P_RANKS,
+                        "payload_bytes": payload_bytes,
+                        "us": us,
+                    }
+                )
+        # kernel level: interpret-mode pallas vs jnp reference
+        chunk = max(1, n // P_RANKS)
+        ag_in = np.random.RandomState(3).randn(P_RANKS, chunk).astype(
+            np.float32
+        )
+        rs_in = np.random.RandomState(4).randn(
+            P_RANKS, P_RANKS, chunk
+        ).astype(np.float32)
+        ar_in = np.random.RandomState(5).randn(P_RANKS, n).astype(np.float32)
+        for name, fn, x in (
+            ("allgather", ring_allgather_stacked, ag_in),
+            ("reduce_scatter", ring_reduce_scatter_stacked, rs_in),
+            ("allreduce", ring_allreduce_stacked, ar_in),
+        ):
+            # The kernel variant is jitted (time_fn's contract) so the
+            # timing excludes re-tracing; the ref variant is the plain
+            # NumPy oracle baseline and runs as-is.
+            variants = (
+                ("pallas_kernel", jax.jit(lambda v, fn=fn: fn(v))),
+                ("ref", lambda v, fn=fn: fn(v, force_ref=True)),
+            )
+            for variant, timed in variants:
+                us = time_fn(timed, x) * 1e6
+                csv_row(
+                    f"kernel_{name}_{variant}", us,
+                    f"p={P_RANKS};payload_bytes={payload_bytes}",
+                )
+                rows.append(
+                    {
+                        "level": "kernel",
+                        "op": name,
+                        "transport": variant,
+                        "p": P_RANKS,
+                        "payload_bytes": payload_bytes,
+                        "us": us,
+                    }
+                )
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    out_path = os.path.join(art, "transports.json")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

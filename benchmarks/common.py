@@ -7,6 +7,11 @@ import time
 import jax
 import numpy as np
 
+# Per-rank payload sizes (float32 elements) shared by the communication
+# benchmarks (bench_transports.py): 4 KiB latency-bound, 64 KiB mixed,
+# 1 MiB bandwidth-bound.
+PAYLOAD_SIZES = (1 << 10, 1 << 14, 1 << 18)
+
 
 def time_fn(fn, *args, warmup=2, iters=10):
     """Median wall time (s) of a jitted callable."""

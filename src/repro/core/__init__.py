@@ -47,8 +47,17 @@ from .params import (
     send_recv_buf,
     source,
     tag,
+    transport,
 )
 from .plugins import Plugin, attach_ops, register_parameter
+from .transports import (
+    PallasTransport,
+    Transport,
+    XlaTransport,
+    available_transports,
+    get_transport,
+    register_transport,
+)
 from .reproducible import ReproducibleReduce, tree_reduce_canonical
 from .result import Result
 from .serialization import (
@@ -73,7 +82,9 @@ __all__ = [
     "recv_count", "recv_count_out",
     "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
     "send_displs_out", "recv_displs", "recv_displs_out", "op", "root",
-    "dest", "source", "tag", "axis", "move", "neighbors",
+    "dest", "source", "tag", "axis", "move", "neighbors", "transport",
+    "Transport", "XlaTransport", "PallasTransport", "register_transport",
+    "get_transport", "available_transports",
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     "as_serialized", "as_deserializable", "deserialize", "deserialize_like",
     "Serialized", "host_pack", "host_unpack",

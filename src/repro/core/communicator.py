@@ -39,6 +39,7 @@ from .errors import KampingError
 from .opspec import OpSpec, Lowering, attach_ops, is_static, static_int
 from .params import ParamKind as K
 from .result import Result
+from .transports import get_transport, resolve_transport
 
 __all__ = ["Communicator", "CORE_SPECS"]
 
@@ -73,11 +74,24 @@ class Communicator:
     The collective methods (``allgather`` ... ``scatterv``) and their
     non-blocking ``i*`` variants are generated from ``CORE_SPECS`` at
     class-creation time — see :func:`repro.core.opspec.attach_ops`.
+
+    ``transport`` selects the default collective backend for every op on
+    this communicator (``"xla"`` | ``"pallas"`` | any registered name,
+    DESIGN.md §7); a per-call ``transport(...)`` parameter overrides it::
+
+        comm = Communicator("data", transport="pallas")   # ring kernels
+        comm.allgather(send_buf(x), transport("xla"))     # per-call
     """
 
-    def __init__(self, axis: Any = "data"):
+    def __init__(self, axis: Any = "data", transport: Optional[str] = None):
         self.axis = axis
         self._axes: Tuple = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+        # Default collective backend for every op on this communicator
+        # (DESIGN.md §7); a per-call transport(...) parameter overrides it.
+        # Validated eagerly so a typo is a construction-time error.
+        if transport is not None:
+            get_transport(transport)
+        self.transport_name = transport
 
     # -- topology ----------------------------------------------------------
     def size(self) -> int:
@@ -117,17 +131,17 @@ class Communicator:
         ax = self._axes[0] if len(self._axes) == 1 else self._axes
         return lax.all_to_all(x, ax, split_axis=0, concat_axis=0, tiled=True)
 
-    def _counts_transpose(self, sc):
-        """recv_counts[j] = send_counts of rank j towards me."""
-        sc = jnp.asarray(sc, jnp.int32).reshape(self.size(), 1)
-        return self._dense_alltoall(sc).reshape(self.size())
-
     # -- reduction kernel ----------------------------------------------------
-    def _reduce_impl(self, x, op_param):
+    def _reduce_impl(self, x, op_param, transport=None):
+        t = transport if transport is not None else resolve_transport(self)
         fn = op_param.value
         x = jnp.asarray(x)
         if _try_hash_lookup(fn, _SUM_FNS):
-            return lax.psum(x, self.axis)
+            return t.allreduce_sum(self, x)
+        # Non-sum well-known functors stay on the XLA scalar collectives
+        # under every transport: pmax/pmin are latency-bound and have no
+        # ring-bandwidth advantage, and keeping one lowering makes them
+        # bitwise transport-invariant by construction.
         if _try_hash_lookup(fn, _MAX_FNS):
             return lax.pmax(x, self.axis)
         if _try_hash_lookup(fn, _MIN_FNS):
@@ -137,8 +151,10 @@ class Communicator:
         if _try_hash_lookup(fn, _OR_FNS):
             return lax.pmax(x.astype(jnp.int32), self.axis).astype(x.dtype)
         # Reduction via lambda: left fold in rank order (deterministic,
-        # supports non-commutative ops). Staged as gather + lax.scan.
-        gathered = lax.all_gather(x, self.axis, axis=0, tiled=False)
+        # supports non-commutative ops). Staged as gather + lax.scan; the
+        # gather is pure data movement, so the result is bitwise identical
+        # whichever transport moved it.
+        gathered = t.all_gather(self, x, tiled=False)
 
         def body(acc, v):
             return fn(acc, v), None
@@ -277,7 +293,7 @@ def _lower_gatherv(low: Lowering):
     buf = low.all_gather(x)  # padded layout
     low.emit(
         "recv_counts",
-        lambda: lax.all_gather(jnp.asarray(n, jnp.int32), low.comm.axis),
+        lambda: low.all_gather(jnp.asarray(n, jnp.int32), tiled=False),
     )
     low.emit("recv_displs", lambda: jnp.arange(p, dtype=jnp.int32) * cap)
     return buf
@@ -321,7 +337,7 @@ def _lower_alltoallv(low: Lowering):
 
 def _lower_allreduce(low: Lowering):
     x = low.value(K.SEND_BUF, low.value(K.SEND_RECV_BUF))
-    return low.comm._reduce_impl(x, low.pack[K.OP])
+    return low.reduce(x, low.pack[K.OP])
 
 
 def _lower_reduce_scatter(low: Lowering):
@@ -340,18 +356,16 @@ def _lower_reduce_scatter(low: Lowering):
         )
     comm = low.comm
     fn = low.pack[K.OP].value
-    if _try_hash_lookup(fn, _SUM_FNS) and len(comm._axes) == 1:
-        return lax.psum_scatter(
-            x, comm._axes[0], scatter_dimension=0, tiled=False
-        )
-    red = comm._reduce_impl(x, low.pack[K.OP])
+    if _try_hash_lookup(fn, _SUM_FNS):
+        return low.reduce_scatter_sum(x)
+    red = low.reduce(x, low.pack[K.OP])
     return lax.dynamic_index_in_dim(red, comm.rank(), 0, keepdims=False)
 
 
 def _lower_scan(low: Lowering, inclusive: bool):
     x = jnp.asarray(low.value(K.SEND_BUF))
     fn = low.pack[K.OP].value
-    gathered = lax.all_gather(x, low.comm.axis, axis=0, tiled=False)
+    gathered = low.all_gather(x, tiled=False)
     if _try_hash_lookup(fn, _SUM_FNS):
         csum = jnp.cumsum(gathered, axis=0)
         pref = (

@@ -45,9 +45,16 @@ class NonBlockingResult:
     def wait(self):
         """Complete the request and release the value (+ moved buffers)."""
         if self._completed:
+            op = f" i{self.op_name}" if self.op_name else ""
+            what = (
+                "the value and the moved buffers were"
+                if self._moved
+                else "the value was"
+            )
             raise PendingRequestError(
-                "non-blocking result already completed; the value was "
-                "moved out by the previous wait()"
+                f"non-blocking{op} result already completed: wait() / "
+                f"test() complete a request exactly once; {what} already "
+                "released by the first completion"
             )
         self._completed = True
         if self._moved:

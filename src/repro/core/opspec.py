@@ -20,8 +20,11 @@ everything that used to be hand-rolled per collective in
 
 Specs are attached to a class with :func:`attach_ops`; plugins register
 their ops through exactly the same table (paper §III-F), optionally
-swapping the *transport* (e.g. the grid communicator reuses the
-``alltoallv`` spec verbatim with a 2-hop transport).  ``OP_TABLE`` is
+swapping the *routing* (e.g. the grid communicator reuses the
+``alltoallv`` spec verbatim with a 2-hop route).  Orthogonally, every
+row accepts the ``transport(...)`` parameter selecting the collective
+*backend* (``xla`` HLOs vs. ``pallas`` ring kernels — see
+:mod:`repro.core.transports` and DESIGN.md §7).  ``OP_TABLE`` is
 the global registry: "every public collective is defined via the
 op-spec table" is a testable property (tests/test_opspec.py).
 """
@@ -40,6 +43,7 @@ from .nonblocking import NonBlockingResult
 from .params import ParamKind as K
 from .params import collect_params
 from .result import make_result
+from .transports import resolve_transport
 
 __all__ = [
     "OpSpec", "Lowering", "OP_TABLE", "attach_ops", "execute",
@@ -94,8 +98,10 @@ class OpSpec:
     # Auto-generate the non-blocking ``i<name>`` variant.
     nonblocking: bool = True
     # Attribute name on the communicator providing the dense-exchange
-    # transport; None selects Communicator._dense_alltoall.  Plugins remap
-    # this to reuse a spec over a different routing kernel.
+    # routing; None routes through the resolved transport backend's
+    # all_to_all.  Plugins remap this to reuse a spec over a different
+    # routing kernel (e.g. the grid 2-hop route); it is an op-level
+    # override and wins over the per-call/per-communicator transport.
     transport_attr: Optional[str] = None
     # Python keyword arguments the generated method accepts (everything
     # else is a trace-time TypeError, like a hand-written signature).
@@ -124,10 +130,17 @@ class Lowering:
         self.spec = spec
         self.pack = pack
         self.kw = kw
-        self._transport = (
+        # Backend resolution (DESIGN.md §7): per-call transport(...) param
+        # > communicator default > "xla".  Resolved once, at trace time.
+        tparam = pack.get(K.TRANSPORT)
+        self.transport = resolve_transport(
+            comm, tparam.value if tparam is not None else None
+        )
+        # Op-level routing override (grid 2-hop): wins over the transport.
+        self._routing = (
             getattr(comm, spec.transport_attr)
             if spec.transport_attr is not None
-            else comm._dense_alltoall
+            else None
         )
         self._emitted: Dict[str, Any] = {}
         self._overrides: Dict[Any, Any] = {}
@@ -165,12 +178,22 @@ class Lowering:
 
     # -- transport-aware collective helpers --------------------------------
     def alltoall(self, x):
-        """The op's dense personalized exchange (flat, grid, ... — the
-        transport is a spec column, not per-op code)."""
-        return self._transport(x)
+        """The op's dense personalized exchange.  A spec-level routing
+        override (grid 2-hop) wins; otherwise the resolved transport
+        backend moves the buckets."""
+        if self._routing is not None:
+            return self._routing(x)
+        return self.transport.all_to_all(self.comm, x)
 
     def all_gather(self, x, tiled=True):
-        return lax.all_gather(x, self.comm.axis, axis=0, tiled=tiled)
+        return self.transport.all_gather(self.comm, x, tiled=tiled)
+
+    def reduce(self, x, op_param):
+        """Functor-mapped reduction over the resolved transport."""
+        return self.comm._reduce_impl(x, op_param, transport=self.transport)
+
+    def reduce_scatter_sum(self, x):
+        return self.transport.reduce_scatter_sum(self.comm, x)
 
     def counts_transpose(self, sc):
         """recv_counts[j] = send_counts of rank j towards me (staged with
@@ -221,7 +244,10 @@ def execute(comm, spec: OpSpec, args, kw=None):
         spec.name,
         args,
         required=spec.required,
-        accepted=spec.accepted,
+        # transport(...) is an engine-level parameter: every table row
+        # accepts it (it selects how the engine moves bytes, not what the
+        # op means).  Permute-only lowerings are transport-invariant.
+        accepted=tuple(spec.accepted) + (K.TRANSPORT,),
         in_place_ignored=spec.in_place_ignored,
     )
     low = Lowering(comm, spec, pack, kw or {})

@@ -39,7 +39,7 @@ __all__ = [
     "send_counts", "recv_counts", "send_displs", "recv_displs", "send_count",
     "recv_count", "recv_count_out",
     "send_counts_out", "recv_counts_out", "send_displs_out", "recv_displs_out",
-    "op", "root", "dest", "source", "tag", "axis",
+    "op", "root", "dest", "source", "tag", "axis", "transport",
     # policies
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     # machinery
@@ -64,6 +64,7 @@ class ParamKind(enum.Enum):
     TAG = "tag"
     AXIS = "axis"
     NEIGHBORS = "neighbors"  # plugin-defined (sparse neighborhoods)
+    TRANSPORT = "transport"  # collective backend selector (DESIGN.md §7)
 
 
 # --------------------------------------------------------------------------
@@ -256,6 +257,16 @@ def tag(t: int) -> Param:
 
 def axis(name) -> Param:
     return _mk(ParamKind.AXIS, name)
+
+
+def transport(name) -> Param:
+    """Collective backend for this call (DESIGN.md §7): ``"xla"`` (the
+    default), ``"pallas"`` (ring kernels), or any backend registered via
+    :func:`repro.core.transports.register_transport`.  Accepted by every
+    table-generated collective; resolution is explicit parameter >
+    communicator default (``Communicator(axis, transport=...)``) >
+    ``"xla"``, checked at trace time."""
+    return _mk(ParamKind.TRANSPORT, name)
 
 
 # --------------------------------------------------------------------------

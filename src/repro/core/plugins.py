@@ -23,8 +23,18 @@ from typing import Callable, Dict
 
 from .opspec import OP_TABLE, OpSpec, attach_ops  # noqa: F401  (plugin API)
 from .params import Param, ParamKind
+from .transports import (  # noqa: F401  (plugin API: custom backends)
+    Transport,
+    available_transports,
+    get_transport,
+    register_transport,
+)
 
-__all__ = ["Plugin", "register_parameter", "attach_ops", "OpSpec", "OP_TABLE"]
+__all__ = [
+    "Plugin", "register_parameter", "attach_ops", "OpSpec", "OP_TABLE",
+    "Transport", "register_transport", "get_transport",
+    "available_transports",
+]
 
 _EXTRA_PARAMS: Dict[str, Callable] = {}
 

@@ -1,0 +1,202 @@
+"""Transport registry: interchangeable collective backends (DESIGN.md §7).
+
+KaMPIng's layering separates *what* a collective means (the op-spec row:
+parameter interface, count inference, assertions, result packing) from
+*how* bytes move (the transport).  A :class:`Transport` supplies the four
+data-movement primitives every lowering is written against:
+
+* ``all_gather``      — gather one chunk per rank,
+* ``all_to_all``      — dense personalized exchange of (p, ...) buckets,
+* ``reduce_scatter_sum`` / ``allreduce_sum`` — the sum reductions.
+
+The engine resolves the transport per call: the ``transport("name")``
+named parameter wins, then the communicator's constructor default
+(``Communicator(axis, transport="pallas")``), then ``"xla"`` — so any
+spec row can be re-targeted without touching the op table or user code.
+A spec's ``transport_attr`` (the grid plugin's 2-hop route) remains an
+*op-level* routing override and takes precedence for ``all_to_all``.
+
+Backends:
+
+* ``xla`` — the default: XLA's collective HLOs (``lax.all_gather``,
+  ``lax.psum_scatter``, ``lax.all_to_all``, ``lax.psum``), scheduled by
+  the XLA runtime.
+* ``pallas`` — ring algorithms from ``repro.kernels.collectives``: the
+  per-device RDMA kernels on TPU, and the ppermute ring references (the
+  interpret-mode execution of the same schedule) elsewhere — so the
+  transport is exercisable under the vmap-as-SPMD test interpreter and
+  on CPU CI.  Requires a single-axis communicator (a ring needs one
+  axis); reductions accumulate in the canonical ring order, so sums are
+  bitwise-reproducible for a fixed p and bitwise transport-invariant
+  whenever the payload sums exactly (pure data movement always is).
+
+Plugins may register additional transports with
+:func:`register_transport`; the name becomes valid everywhere the
+``transport`` parameter is accepted.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+import jax.numpy as jnp
+from jax import lax
+
+from .errors import KampingError
+
+__all__ = [
+    "Transport",
+    "XlaTransport",
+    "PallasTransport",
+    "register_transport",
+    "get_transport",
+    "available_transports",
+    "resolve_transport",
+]
+
+
+class Transport:
+    """Abstract collective backend: the data-movement primitives the
+    op-spec lowerings are written against."""
+
+    name: str = "abstract"
+
+    def all_gather(self, comm, x, *, tiled: bool = True):
+        """Gather ``x`` from every rank.  ``tiled=True`` concatenates
+        along axis 0 (lax.all_gather convention); ``tiled=False`` stacks
+        a new leading rank axis."""
+        raise NotImplementedError
+
+    def all_to_all(self, comm, x):
+        """Dense personalized exchange: (p, ...) buckets by destination
+        -> (p, ...) buckets by source."""
+        raise NotImplementedError
+
+    def reduce_scatter_sum(self, comm, x):
+        """Sum-reduce (p, chunk...) contributions; return this rank's
+        reduced chunk."""
+        raise NotImplementedError
+
+    def allreduce_sum(self, comm, x):
+        """Sum-reduce ``x`` over the communicator; same value on all
+        ranks."""
+        raise NotImplementedError
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"<transport {self.name}>"
+
+
+class XlaTransport(Transport):
+    """XLA collective HLOs — the zero-overhead default."""
+
+    name = "xla"
+
+    def all_gather(self, comm, x, *, tiled: bool = True):
+        return lax.all_gather(x, comm.axis, axis=0, tiled=tiled)
+
+    def all_to_all(self, comm, x):
+        return comm._dense_alltoall(x)
+
+    def reduce_scatter_sum(self, comm, x):
+        if len(comm._axes) == 1:
+            return lax.psum_scatter(
+                x, comm._axes[0], scatter_dimension=0, tiled=False
+            )
+        red = lax.psum(x, comm.axis)
+        return lax.dynamic_index_in_dim(red, comm.rank(), 0, keepdims=False)
+
+    def allreduce_sum(self, comm, x):
+        return lax.psum(x, comm.axis)
+
+
+class PallasTransport(Transport):
+    """Ring kernels (repro.kernels.collectives): RDMA rings on TPU,
+    ppermute rings under the SPMD interpreter / CPU."""
+
+    name = "pallas"
+
+    def _axis(self, comm):
+        if len(comm._axes) != 1:
+            raise KampingError(
+                "transport('pallas') requires a single-axis communicator "
+                f"(the ring order is defined over one mesh axis); got axes "
+                f"{comm._axes!r}. Use transport('xla') or a per-axis "
+                "communicator."
+            )
+        return comm._axes[0]
+
+    def all_gather(self, comm, x, *, tiled: bool = True):
+        from ..kernels.collectives import spmd_ring_allgather
+
+        x = jnp.asarray(x)
+        out = spmd_ring_allgather(x, self._axis(comm), comm.size())
+        if tiled:
+            # match lax.all_gather(tiled=True): concat along axis 0
+            return out.reshape((-1,) + x.shape[1:])
+        return out
+
+    def all_to_all(self, comm, x):
+        from ..kernels.collectives import spmd_ring_alltoall
+
+        return spmd_ring_alltoall(jnp.asarray(x), self._axis(comm), comm.size())
+
+    def reduce_scatter_sum(self, comm, x):
+        from ..kernels.collectives import spmd_ring_reduce_scatter
+
+        return spmd_ring_reduce_scatter(
+            jnp.asarray(x), self._axis(comm), comm.size()
+        )
+
+    def allreduce_sum(self, comm, x):
+        from ..kernels.collectives import spmd_ring_allreduce
+
+        return spmd_ring_allreduce(
+            jnp.asarray(x), self._axis(comm), comm.size()
+        )
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+_TRANSPORTS: Dict[str, Transport] = {}
+
+
+def register_transport(transport: Transport, *, name: Optional[str] = None):
+    """Register a transport backend; its name becomes valid everywhere the
+    ``transport(...)`` parameter is accepted (the plugin mechanism of
+    paper §III-F applied to the backend axis)."""
+    name = name or transport.name
+    existing = _TRANSPORTS.get(name)
+    if existing is not None and existing is not transport:
+        raise KampingError(f"transport '{name}' already registered")
+    _TRANSPORTS[name] = transport
+    return transport
+
+
+def available_transports():
+    return tuple(sorted(_TRANSPORTS))
+
+
+def get_transport(name: Union[str, Transport]) -> Transport:
+    """Trace-time lookup with a readable diagnostic (paper §III-G)."""
+    if isinstance(name, Transport):
+        return name
+    t = _TRANSPORTS.get(name)
+    if t is None:
+        raise KampingError(
+            f"unknown transport {name!r}; registered transports: "
+            f"{', '.join(available_transports())}"
+        )
+    return t
+
+
+def resolve_transport(comm, override=None) -> Transport:
+    """Per-call resolution: explicit parameter > communicator default >
+    ``xla``."""
+    if override is not None:
+        return get_transport(override)
+    default = getattr(comm, "transport_name", None)
+    return get_transport(default if default is not None else "xla")
+
+
+register_transport(XlaTransport())
+register_transport(PallasTransport())

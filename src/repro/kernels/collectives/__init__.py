@@ -1,0 +1,26 @@
+"""Ring collective kernels backing the ``pallas`` transport.
+
+See DESIGN.md §7 (transport layer) and core/transports.py for how these
+are selected; ops.py for the public entry points.
+"""
+from .ops import (
+    ring_allgather_stacked,
+    ring_allreduce_stacked,
+    ring_alltoall_stacked,
+    ring_reduce_scatter_stacked,
+    spmd_ring_allgather,
+    spmd_ring_allreduce,
+    spmd_ring_alltoall,
+    spmd_ring_reduce_scatter,
+)
+
+__all__ = [
+    "ring_allgather_stacked",
+    "ring_reduce_scatter_stacked",
+    "ring_allreduce_stacked",
+    "ring_alltoall_stacked",
+    "spmd_ring_allgather",
+    "spmd_ring_reduce_scatter",
+    "spmd_ring_allreduce",
+    "spmd_ring_alltoall",
+]

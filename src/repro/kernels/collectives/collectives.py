@@ -1,0 +1,316 @@
+"""Pallas ring-collective kernels (DESIGN.md §7).
+
+Two tiers, one ring schedule (shared with ``ref.py``):
+
+* **Emulation kernels** (`ring_allgather_pallas`, ...) — one
+  ``pallas_call`` over the globally stacked ``(p, ...)`` array with
+  ``grid=(p,)``: program r *is* rank r, and the arrival of a neighbor's
+  chunk at ring step s is emulated by an async DMA from the stacked HBM
+  buffer — the same per-step data movement and accumulation order as the
+  multi-chip kernel, minus the interconnect.  These run under
+  ``interpret=True`` on CPU (the CI leg) and compile for a single chip.
+* **Device kernels** (`device_ring_allgather`, `device_ring_reduce_scatter`)
+  — the true multi-chip path: called per device inside ``shard_map`` on a
+  TPU mesh, moving chunks with ``make_async_remote_copy`` over ICI.
+  They are selected by the pallas transport only when the backend is TPU;
+  CPU CI pins their semantics through the shared-schedule emulation
+  kernels and SPMD references instead.
+
+Ring schedule contract (shared with ref.py): allgather step s delivers
+the chunk of the s-th left neighbor; reduce-scatter chunk j starts at
+rank (j+1) % p and accumulates left-fold in source order j+1, ..., j.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import allreduce_chunk as ref_chunk
+
+# Renamed upstream (TPUCompilerParams -> CompilerParams in newer jax).
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+__all__ = [
+    "ring_allgather_pallas",
+    "ring_reduce_scatter_pallas",
+    "ring_allreduce_pallas",
+    "ring_alltoall_pallas",
+    "device_ring_allgather",
+    "device_ring_reduce_scatter",
+]
+
+
+# --------------------------------------------------------------------------
+# Emulation kernels: grid=(p,) over the stacked global array
+# --------------------------------------------------------------------------
+def _allgather_kernel(x_hbm, out_ref, chunk, sem):
+    r = pl.program_id(0)
+    p = pl.num_programs(0)
+
+    def step(s, carry):
+        src = lax.rem(r - s + p, p)  # ring step s: s-th left neighbor
+        cp = pltpu.make_async_copy(x_hbm.at[src], chunk, sem)
+        cp.start()
+        cp.wait()
+        out_ref[0, src] = chunk[:]
+        return carry
+
+    lax.fori_loop(0, p, step, 0)
+
+
+def ring_allgather_pallas(xs, *, interpret=None):
+    """xs: (p, m) stacked per-rank rows -> (p, p, m); out[r] is rank r's
+    ring all-gather result."""
+    xs = jnp.asarray(xs)
+    p, m = xs.shape[0], int(math.prod(xs.shape[1:]))
+    x2 = xs.reshape(p, m)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = pl.pallas_call(
+        _allgather_kernel,
+        grid=(p,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(
+            (1, p, m), lambda r: (r, 0, 0), memory_space=pltpu.VMEM
+        ),
+        out_shape=jax.ShapeDtypeStruct((p, p, m), x2.dtype),
+        scratch_shapes=[pltpu.VMEM((m,), x2.dtype), pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(x2)
+    return out.reshape((p, p) + xs.shape[1:])
+
+
+def _reduce_scatter_kernel(x_hbm, out_ref, chunk, acc, sem):
+    r = pl.program_id(0)
+    p = pl.num_programs(0)
+
+    def step(k, carry):
+        # chunk r starts at rank (r+1) % p; after k hops the partial has
+        # accumulated sources (r+1) ... (r+1+k), left fold.
+        src = lax.rem(r + 1 + k, p)
+        cp = pltpu.make_async_copy(x_hbm.at[src, r], chunk, sem)
+        cp.start()
+        cp.wait()
+
+        @pl.when(k == 0)
+        def _():
+            acc[:] = chunk[:]
+
+        @pl.when(k > 0)
+        def _():
+            acc[:] = acc[:] + chunk[:]
+
+        return carry
+
+    lax.fori_loop(0, p, step, 0)
+    out_ref[0] = acc[:]
+
+
+def ring_reduce_scatter_pallas(xs, *, interpret=None):
+    """xs: (p, p, m) — xs[src, j] is src's contribution to rank j; returns
+    (p, m): out[r] = ring-order sum of xs[:, r]."""
+    xs = jnp.asarray(xs)
+    p = xs.shape[0]
+    m = int(math.prod(xs.shape[2:]))
+    x3 = xs.reshape(p, p, m)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = pl.pallas_call(
+        _reduce_scatter_kernel,
+        grid=(p,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(
+            (1, m), lambda r: (r, 0), memory_space=pltpu.VMEM
+        ),
+        out_shape=jax.ShapeDtypeStruct((p, m), x3.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m,), x3.dtype),
+            pltpu.VMEM((m,), x3.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(x3)
+    return out.reshape((p,) + xs.shape[2:])
+
+
+def ring_allreduce_pallas(xs, *, interpret=None):
+    """xs: (p, ...) per-rank payloads -> (p, ...): every rank's ring
+    allreduce (reduce-scatter + allgather composition, like the SPMD
+    lowering)."""
+    xs = jnp.asarray(xs)
+    p = xs.shape[0]
+    shape = xs.shape[1:]
+    n = int(math.prod(shape)) if shape else 1
+    chunk = ref_chunk(n, p)
+    flat = xs.reshape(p, -1)
+    blocks = jnp.zeros((p, p * chunk), flat.dtype).at[:, :n].set(flat)
+    blocks = blocks.reshape(p, p, chunk)
+    reduced = ring_reduce_scatter_pallas(blocks, interpret=interpret)
+    gathered = ring_allgather_pallas(reduced, interpret=interpret)
+    return gathered.reshape(p, -1)[:, :n].reshape((p,) + shape)
+
+
+def _alltoall_kernel(x_hbm, out_ref, chunk, sem):
+    r = pl.program_id(0)
+    p = pl.num_programs(0)
+
+    def step(s, carry):
+        src = lax.rem(r - s + p, p)  # offset-s hop: s-th left neighbor
+        cp = pltpu.make_async_copy(x_hbm.at[src, r], chunk, sem)
+        cp.start()
+        cp.wait()
+        out_ref[0, src] = chunk[:]
+        return carry
+
+    lax.fori_loop(0, p, step, 0)
+
+
+def ring_alltoall_pallas(xs, *, interpret=None):
+    """xs: (p, p, m) buckets by (source, dest) -> (p, p, m) by (dest,
+    source), moved with the offset-scheduled ring exchange."""
+    xs = jnp.asarray(xs)
+    p = xs.shape[0]
+    m = int(math.prod(xs.shape[2:]))
+    x3 = xs.reshape(p, p, m)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = pl.pallas_call(
+        _alltoall_kernel,
+        grid=(p,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(
+            (1, p, m), lambda r: (r, 0, 0), memory_space=pltpu.VMEM
+        ),
+        out_shape=jax.ShapeDtypeStruct((p, p, m), x3.dtype),
+        scratch_shapes=[pltpu.VMEM((m,), x3.dtype), pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(x3)
+    return out.reshape((p, p) + xs.shape[2:])
+
+
+# --------------------------------------------------------------------------
+# Device kernels: per-chip RDMA ring (called inside shard_map on TPU)
+# --------------------------------------------------------------------------
+def _neighbor_barrier(my_id, p):
+    """Block until both ring neighbors reached this point (prevents a fast
+    rank's RDMA from landing before a slow neighbor allocated buffers)."""
+    barrier = pltpu.get_barrier_semaphore()
+    for nbr in (lax.rem(my_id + 1, p), lax.rem(my_id - 1 + p, p)):
+        pltpu.semaphore_signal(
+            barrier, inc=1, device_id=(nbr,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+    pltpu.semaphore_wait(barrier, 2)
+
+
+def _device_allgather_kernel(axis, p, x_ref, out_ref, send_sem, recv_sem):
+    my_id = lax.axis_index(axis)
+    m = x_ref.shape[0]
+    out_ref[pl.ds(my_id * m, m)] = x_ref[:]
+    _neighbor_barrier(my_id, p)
+    right = lax.rem(my_id + 1, p)
+
+    def step(s, carry):
+        src = lax.rem(my_id - s + p, p)  # chunk held after s hops
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=out_ref.at[pl.ds(src * m, m)],
+            dst_ref=out_ref.at[pl.ds(src * m, m)],
+            send_sem=send_sem.at[s % 2],
+            recv_sem=recv_sem.at[s % 2],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        rdma.start()
+        rdma.wait()
+        return carry
+
+    lax.fori_loop(0, p - 1, step, 0)
+
+
+def device_ring_allgather(x, axis, p: int, *, collective_id=7):
+    """Per-device ring all-gather over ``axis`` — call INSIDE shard_map on
+    a TPU mesh.  x: (m,)-flattenable local chunk; returns the (p, ...)
+    stacked gather.  CPU CI covers the schedule via the emulation kernel;
+    this entry point is the ICI fast path."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_device_allgather_kernel, axis, p),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((p * m,), flat.dtype),
+        scratch_shapes=[
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=_CompilerParams(
+            collective_id=collective_id, has_side_effects=True
+        ),
+    )(flat)
+    return out.reshape((p,) + shape)
+
+
+def _device_reduce_scatter_kernel(axis, p, x_ref, out_ref, buf, send_sem,
+                                  recv_sem):
+    my_id = lax.axis_index(axis)
+    m = out_ref.shape[0]
+    # Start the partial for chunk (my_id - 1) % p: own contribution.
+    init = lax.rem(my_id - 1 + p, p)
+    buf[0] = x_ref[pl.ds(init * m, m)]
+    _neighbor_barrier(my_id, p)
+    right = lax.rem(my_id + 1, p)
+
+    def step(s, carry):
+        send_slot = s % 2
+        recv_slot = (s + 1) % 2
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=buf.at[send_slot],
+            dst_ref=buf.at[recv_slot],
+            send_sem=send_sem.at[send_slot],
+            recv_sem=recv_sem.at[recv_slot],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        rdma.start()
+        rdma.wait()
+        # The arrived partial is for chunk (my_id - 2 - s) % p; add ours.
+        dest = lax.rem(my_id - 2 - s + 2 * p, p)
+        buf[recv_slot] = buf[recv_slot] + x_ref[pl.ds(dest * m, m)]
+        return carry
+
+    lax.fori_loop(0, p - 1, step, 0)
+    out_ref[:] = buf[(p - 1) % 2]
+
+
+def device_ring_reduce_scatter(x, axis, p: int, *, collective_id=8):
+    """Per-device streaming ring reduce-scatter (sum) — call INSIDE
+    shard_map on a TPU mesh.  x: (p, chunk...) contributions by
+    destination; returns this rank's reduced chunk, accumulated in the
+    canonical ring order shared with ref.py / the emulation kernel."""
+    shape = x.shape[1:]
+    flat = x.reshape(p, -1)
+    m = flat.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_device_reduce_scatter_kernel, axis, p),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((m,), flat.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, m), flat.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=_CompilerParams(
+            collective_id=collective_id, has_side_effects=True
+        ),
+    )(flat.reshape(-1))
+    return out.reshape(shape)

@@ -1,0 +1,102 @@
+"""Jit'd public wrappers for the ring collectives.
+
+Mirrors the other kernel packages (`flash_attention/ops.py`): the
+stacked entry points pick the Pallas kernel on TPU, interpret-mode
+Pallas for CPU validation, or the pure-JAX reference; the SPMD entry
+points (used by the pallas *transport*, see core/transports.py) pick the
+per-device RDMA kernel on TPU and the ppermute ring reference elsewhere
+— the reference is the interpret-mode execution of the same ring
+schedule, so semantics are identical by construction (and pinned by
+tests/test_collective_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .collectives import (
+    device_ring_allgather,
+    device_ring_reduce_scatter,
+    ring_allgather_pallas,
+    ring_allreduce_pallas,
+    ring_alltoall_pallas,
+    ring_reduce_scatter_pallas,
+)
+
+__all__ = [
+    "ring_allgather_stacked",
+    "ring_reduce_scatter_stacked",
+    "ring_allreduce_stacked",
+    "ring_alltoall_stacked",
+    "spmd_ring_allgather",
+    "spmd_ring_reduce_scatter",
+    "spmd_ring_allreduce",
+    "spmd_ring_alltoall",
+]
+
+
+def _resolve_interpret(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+# -- stacked (single-call emulation) form: kernel tests / benchmarks --------
+def ring_allgather_stacked(xs, *, force_ref=False, interpret=None):
+    if force_ref:
+        return ref.allgather_stacked_ref(xs)
+    return ring_allgather_pallas(xs, interpret=_resolve_interpret(interpret))
+
+
+def ring_reduce_scatter_stacked(xs, *, force_ref=False, interpret=None):
+    if force_ref:
+        return ref.reduce_scatter_stacked_ref(xs)
+    return ring_reduce_scatter_pallas(
+        xs, interpret=_resolve_interpret(interpret)
+    )
+
+
+def ring_allreduce_stacked(xs, *, force_ref=False, interpret=None):
+    if force_ref:
+        return ref.allreduce_stacked_ref(xs)
+    return ring_allreduce_pallas(xs, interpret=_resolve_interpret(interpret))
+
+
+def ring_alltoall_stacked(xs, *, force_ref=False, interpret=None):
+    if force_ref:
+        return ref.alltoall_stacked_ref(xs)
+    return ring_alltoall_pallas(xs, interpret=_resolve_interpret(interpret))
+
+
+# -- SPMD form (inside vmap / shard_map): the pallas transport's lowering ---
+def _use_device_kernel() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmd_ring_allgather(x, axis, p: int):
+    """Ring all-gather of this rank's ``x`` -> stacked (p, ...) result."""
+    if p > 1 and _use_device_kernel():
+        return device_ring_allgather(x, axis, p)
+    return ref.ring_allgather(x, axis, p)
+
+
+def spmd_ring_reduce_scatter(x, axis, p: int):
+    """Streaming ring reduce-scatter (sum) of (p, chunk...) buckets."""
+    if p > 1 and _use_device_kernel():
+        return device_ring_reduce_scatter(x, axis, p)
+    return ref.ring_reduce_scatter(x, axis, p)
+
+
+def spmd_ring_allreduce(x, axis, p: int):
+    """Ring allreduce (sum) = reduce-scatter + allgather composition."""
+    if p == 1 or not _use_device_kernel():
+        return ref.ring_allreduce(x, axis, p)
+    return ref.compose_allreduce(
+        x,
+        p,
+        lambda blocks: device_ring_reduce_scatter(blocks, axis, p),
+        lambda mine: device_ring_allgather(mine, axis, p),
+    )
+
+
+def spmd_ring_alltoall(x, axis, p: int):
+    """Offset-scheduled ring personalized exchange of (p, ...) buckets."""
+    return ref.ring_alltoall(x, axis, p)

@@ -1,0 +1,198 @@
+"""Pure-JAX references for the ring collectives (DESIGN.md §7).
+
+Two families, one schedule:
+
+* **SPMD references** (`ring_allgather`, `ring_reduce_scatter`,
+  `ring_allreduce`, `ring_alltoall`) — the pallas transport's lowering on
+  non-TPU backends.  Each ``lax.ppermute`` hop is one ring step; every
+  primitive has a batching rule, so these run under the vmap-as-SPMD
+  interpreter (tests) and under real ``shard_map`` on CPU devices alike.
+* **Stacked oracles** (`allgather_stacked_ref`, ...) — NumPy-level
+  simulations over the globally stacked ``(p, ...)`` array, used by the
+  kernel unit tests as the bitwise ground truth for the interpret-mode
+  pallas kernels.
+
+The ring *schedule* and the reduction *order* are the contract shared
+with the kernels in ``collectives.py``: chunk ``j`` of a reduce-scatter
+starts at rank ``(j+1) % p`` and accumulates left-fold in source order
+``j+1, j+2, ..., j`` (mod p) as it travels the ring.  Data-movement ops
+(allgather / alltoall) are permutations, so they are bitwise identical
+to any other correct transport; reductions are bitwise identical across
+transports whenever the payload sums exactly (integers, dyadic floats)
+and allclose otherwise — the differential suite pins both.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+__all__ = [
+    "ring_allgather",
+    "ring_reduce_scatter",
+    "ring_allreduce",
+    "ring_alltoall",
+    "allreduce_chunk",
+    "compose_allreduce",
+    "allgather_stacked_ref",
+    "reduce_scatter_stacked_ref",
+    "allreduce_stacked_ref",
+    "alltoall_stacked_ref",
+]
+
+
+def _right_shift_perm(p: int):
+    return [(i, (i + 1) % p) for i in range(p)]
+
+
+def allreduce_chunk(n: int, p: int) -> int:
+    """Per-rank chunk length of the ring-allreduce composition.  Every
+    implementation (SPMD reference, device kernels, emulation kernels,
+    stacked oracle) must chunk identically or the bitwise contract
+    breaks — this is the single definition."""
+    return max(1, math.ceil(n / p))
+
+
+def compose_allreduce(x, p: int, reduce_scatter_fn, allgather_fn):
+    """Ring allreduce = reduce-scatter + allgather over the flattened
+    payload, zero-padded to p equal chunks.  One definition of the
+    pad/chunk/unpad contract, parameterized over the two primitives
+    (ppermute reference or device RDMA kernels)."""
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    chunk = allreduce_chunk(n, p)
+    blocks = jnp.pad(flat, (0, p * chunk - n)).reshape(p, chunk)
+    mine = reduce_scatter_fn(blocks)
+    full = allgather_fn(mine)
+    return full.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# SPMD (inside vmap / shard_map) references
+# --------------------------------------------------------------------------
+def ring_allgather(x, axis, p: int):
+    """Ring all-gather of ``x`` over named ``axis``: returns the stacked
+    ``(p,) + x.shape`` gather, slot ``j`` holding rank j's contribution.
+
+    Step s delivers the chunk of the s-th left neighbor, exactly the
+    per-device RDMA kernel's arrival order.
+    """
+    if p == 1:
+        return x[None]
+    perm = _right_shift_perm(p)
+    r = lax.axis_index(axis)
+    cur = x
+    held = [x]  # after s hops we hold the chunk of rank (r - s) % p
+    for _ in range(p - 1):
+        cur = lax.ppermute(cur, axis, perm)
+        held.append(cur)
+    stacked = jnp.stack(held)
+    # out[j] = chunk of rank j = held[(r - j) % p]
+    return jnp.take(stacked, jnp.mod(r - jnp.arange(p), p), axis=0)
+
+
+def ring_reduce_scatter(x, axis, p: int):
+    """Streaming ring reduce-scatter (sum): ``x`` is ``(p, chunk...)``,
+    slot j = this rank's contribution to rank j; returns rank r's chunk.
+
+    Chunk j starts at rank ``(j+1) % p`` and hops right, each rank adding
+    its own contribution — the left-fold order ``j+1, j+2, ..., j`` (mod
+    p) that the pallas kernels replicate exactly.
+    """
+    if p == 1:
+        return x[0]
+    perm = _right_shift_perm(p)
+    r = lax.axis_index(axis)
+    acc = lax.dynamic_index_in_dim(x, jnp.mod(r - 1, p), 0, keepdims=False)
+    for s in range(1, p):
+        acc = lax.ppermute(acc, axis, perm)
+        acc = acc + lax.dynamic_index_in_dim(
+            x, jnp.mod(r - 1 - s, p), 0, keepdims=False
+        )
+    return acc  # the fully accumulated chunk r
+
+
+def ring_allreduce(x, axis, p: int):
+    """Bandwidth-optimal ring allreduce (sum): reduce-scatter the payload
+    split into p chunks, then ring-allgather the reduced chunks —
+    the composition the paper's layering makes a one-liner."""
+    if p == 1:
+        return x
+    return compose_allreduce(
+        x,
+        p,
+        lambda blocks: ring_reduce_scatter(blocks, axis, p),
+        lambda mine: ring_allgather(mine, axis, p),
+    )
+
+
+def ring_alltoall(x, axis, p: int):
+    """Ring (offset-scheduled) personalized exchange: ``x`` is ``(p, ...)``
+    buckets by destination; returns the same layout with bucket j holding
+    what rank j sent here.  Offset s is one shift-by-s permute, so the
+    exchange is p-1 contention-free hops instead of one dense all-to-all."""
+    if p == 1:
+        return x
+    r = lax.axis_index(axis)
+    pieces = [lax.dynamic_index_in_dim(x, r, 0, keepdims=False)]  # own bucket
+    for s in range(1, p):
+        payload = lax.dynamic_index_in_dim(
+            x, jnp.mod(r + s, p), 0, keepdims=False
+        )
+        recv = lax.ppermute(payload, axis, [(i, (i + s) % p) for i in range(p)])
+        pieces.append(recv)
+    # pieces[s] came from rank (r - s) % p — the same inverse permutation
+    # as ring_allgather: out[j] = pieces[(r - j) % p].
+    stacked = jnp.stack(pieces)
+    return jnp.take(stacked, jnp.mod(r - jnp.arange(p), p), axis=0)
+
+
+# --------------------------------------------------------------------------
+# Stacked oracles (ground truth for the interpret-mode kernels)
+# --------------------------------------------------------------------------
+def allgather_stacked_ref(xs):
+    """xs: (p, ...) stacked per-rank data -> (p, p, ...): out[r] is rank
+    r's gather result (identical for all r)."""
+    xs = np.asarray(xs)
+    return np.broadcast_to(xs[None], (xs.shape[0],) + xs.shape).copy()
+
+
+def reduce_scatter_stacked_ref(xs):
+    """xs: (p, p, chunk...) -> (p, chunk...): out[r] = sum_j xs[j, r] in
+    the ring order (sources r+1, r+2, ..., r mod p, left fold)."""
+    xs = np.asarray(xs)
+    p = xs.shape[0]
+    out = np.empty((p,) + xs.shape[2:], xs.dtype)
+    for r in range(p):
+        acc = xs[(r + 1) % p, r].copy()
+        for k in range(1, p):
+            acc = acc + xs[(r + 1 + k) % p, r]
+        out[r] = acc
+    return out
+
+
+def allreduce_stacked_ref(xs):
+    """xs: (p, ...) -> (p, ...): each rank's ring allreduce result
+    (reduce-scatter in ring order + allgather, chunked like the kernel)."""
+    xs = np.asarray(xs)
+    p = xs.shape[0]
+    shape = xs.shape[1:]
+    n = int(np.prod(shape)) if shape else 1
+    chunk = allreduce_chunk(n, p)
+    flat = xs.reshape(p, -1)
+    blocks = np.zeros((p, p, chunk), xs.dtype)
+    blocks.reshape(p, -1)[:, :n] = flat
+    reduced = reduce_scatter_stacked_ref(blocks)  # (p, chunk)
+    full = reduced.reshape(-1)[: p * chunk]
+    out = full[:n].reshape(shape)
+    return np.broadcast_to(out[None], (p,) + shape).copy()
+
+
+def alltoall_stacked_ref(xs):
+    """xs: (p, p, ...) buckets by (source, dest) -> (p, p, ...) by
+    (dest, source): out[r, j] = xs[j, r]."""
+    xs = np.asarray(xs)
+    return np.swapaxes(xs, 0, 1).copy()

@@ -140,7 +140,7 @@ def _dispatch_slots(experts, gates, e_pad: int, cap_e: int):
 
 
 def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
-                         combine="gather"):
+                         combine="gather", transport=None):
     """EP MoE body — call INSIDE shard_map.
 
     p_local: expert bank sharded over ``ep_axis`` -> local (E_local, d, ff);
@@ -156,8 +156,13 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
       payload; expert ranks scatter-add gate-weighted outputs into
       per-source-token rows and a single ``reduce_scatter`` both returns
       *and* top-k-combines them — the combine rides inside the collective.
+
+    ``transport`` selects the collective backend for dispatch and combine
+    (``None``/"xla" = XLA HLOs, "pallas" = ring kernels; DESIGN.md §7) —
+    the layer's collectives are table rows, so re-targeting them is one
+    constructor argument.
     """
-    comm = Communicator(ep_axis)
+    comm = Communicator(ep_axis, transport=transport)
     if use_grid:
         from repro.core import GridCommunicator
 

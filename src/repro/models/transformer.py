@@ -122,7 +122,8 @@ def _moe_apply(p, x, cfg, runtime):
         def body(px, xx):
             n = xx.shape[0] * xx.shape[1]
             out, aux = moe_mod.moe_forward_ep_local(
-                px, xx.reshape(n, d), cfg, tp, use_grid=runtime.moe_grid
+                px, xx.reshape(n, d), cfg, tp, use_grid=runtime.moe_grid,
+                transport=runtime.moe_transport,
             )
             return out.reshape(xx.shape), aux[None]
 
@@ -245,6 +246,9 @@ class Runtime:
     tp_axis: str = "model"
     batch_spec_axes: Any = "data"  # str or tuple ("pod","data")
     moe_grid: bool = False
+    # Collective backend for the EP dispatch/combine ("xla" | "pallas" |
+    # None = xla; DESIGN.md §7) — threaded into moe_forward_ep_local.
+    moe_transport: Optional[str] = None
     decode_sp: bool = False  # sequence-parallel (flash-decode) cache mode
     force_moe_mode: Optional[str] = None
     # streaming-ZeRO-3 use constraints (sharding.rules.use_shardings):

@@ -6,6 +6,11 @@ training options):
 
 * ``auto``          — GSPMD inserts the DP all-reduce (supports full
                       FSDP/TP/EP; the production default).
+* ``allreduce``     — manual-DP shard_map island; the table-generated
+                      ``Communicator.allreduce`` over a selectable
+                      transport (``TrainConfig.transport``: "xla" HLOs or
+                      "pallas" ring kernels — DESIGN.md §7), making the
+                      kernel-level fast path selectable end-to-end.
 * ``compressed``    — manual-DP shard_map island; int8 + error-feedback
                       all-reduce (4x less DP traffic; see compression.py).
 * ``reproducible``  — manual-DP island; per-microbatch leaf gradients
@@ -20,12 +25,14 @@ import time
 from functools import partial
 from typing import Any, Callable, Dict, Optional
 
+import operator
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import Communicator, ReproducibleReduce, send_buf
+from repro.core import Communicator, ReproducibleReduce, op, send_buf
 from repro.models import Runtime, loss_and_metrics
 from repro.sharding.rules import (
     ShardingProfile,
@@ -42,9 +49,12 @@ __all__ = ["TrainConfig", "Trainer", "make_train_step"]
 @dataclasses.dataclass
 class TrainConfig:
     opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
-    grad_reduce: str = "auto"  # auto | compressed | reproducible
+    grad_reduce: str = "auto"  # auto | allreduce | compressed | reproducible
     microbatches: int = 1  # grad accumulation steps (per device for manual)
     aux_weight: float = 0.01
+    # Collective backend for the manual-DP modes' communicator
+    # (None -> "xla"; "pallas" -> ring kernels; DESIGN.md §7).
+    transport: Optional[str] = None
 
 
 def _split_microbatches(batch, m):
@@ -60,6 +70,13 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
     def loss_fn(params, batch):
         return loss_and_metrics(
             params, batch, cfg, runtime, aux_weight=tcfg.aux_weight
+        )
+
+    if tcfg.grad_reduce not in ("auto", "allreduce", "compressed",
+                                "reproducible"):
+        raise ValueError(
+            f"TrainConfig.grad_reduce={tcfg.grad_reduce!r}: expected one of "
+            "'auto', 'allreduce', 'compressed', 'reproducible'"
         )
 
     if tcfg.grad_reduce == "auto":
@@ -102,6 +119,17 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
     dp_name = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     dp_set = set(dp_axes)
 
+    def microbatch_grads(params, batch):
+        """Per-microbatch fp32 leaf grads + losses (shared by the manual
+        modes that honor grad accumulation)."""
+        mb = _split_microbatches(batch, tcfg.microbatches)
+
+        def one(b):
+            (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+            return jax.tree.map(lambda x: x.astype(jnp.float32), g), l
+
+        return jax.lax.map(one, mb)
+
     def manual_grads(params, batch, err):
         """Runs inside shard_map (manual over dp): local grads + plugin
         reduction. err=None for reproducible mode."""
@@ -112,15 +140,35 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
             grads, new_err = compressed_grad_allreduce(grads, err, dp_name)
             loss = jax.lax.pmean(loss, dp_name)
             return grads, new_err, loss
+        if tcfg.grad_reduce == "allreduce":
+            # The table-generated allreduce over the configured transport
+            # (DESIGN.md §7): the gradient fast path is a backend choice,
+            # not a different training loop.
+            if tcfg.microbatches > 1:
+                stacked, losses = microbatch_grads(params, batch)
+                grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked)
+                loss = jnp.mean(losses)
+            else:
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(params, batch)
+            comm = Communicator(dp_name, transport=tcfg.transport)
+            inv_p = 1.0 / comm.size()
+
+            def reduce_leaf(g):
+                red = comm.allreduce(
+                    send_buf(g.astype(jnp.float32)), op(operator.add)
+                )
+                return red * inv_p
+
+            grads = jax.tree.map(reduce_leaf, grads)
+            loss = jax.lax.pmean(loss, dp_name)
+            return grads, None, loss
         # reproducible: per-microbatch leaf grads -> canonical tree
-        mb = _split_microbatches(batch, tcfg.microbatches)
-
-        def one(b):
-            (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
-            return jax.tree.map(lambda x: x.astype(jnp.float32), g), l
-
-        stacked, losses = jax.lax.map(one, mb)
-        comm = Communicator(dp_name).extend(ReproducibleReduce)
+        stacked, losses = microbatch_grads(params, batch)
+        comm = Communicator(dp_name, transport=tcfg.transport).extend(
+            ReproducibleReduce
+        )
 
         def reduce_leaf(g):
             return comm.reproducible_allreduce(send_buf(g)) / (

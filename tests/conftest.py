@@ -44,6 +44,12 @@ def pytest_configure(config):
         "markers",
         "slow: long-running test (opt-in: --run-md or KAMPING_RUN_MD=1)",
     )
+    config.addinivalue_line(
+        "markers",
+        "pallas: ring-collective kernel / transport-equivalence suites "
+        "(run in tier-1; selectable for the interpret-mode CI leg via "
+        "`-m pallas`)",
+    )
 
 
 def pytest_collection_modifyitems(config, items):

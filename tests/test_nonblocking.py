@@ -1,8 +1,12 @@
 """Non-blocking result / request-pool semantics (paper §III-E)."""
+import operator
+
+import jax
+import numpy as np
 import pytest
 
 from repro.core import NonBlockingResult, PendingRequestError, RequestPool
-from repro.core.params import send_buf, move
+from repro.core.params import move, op, send_buf, transport
 
 
 def test_value_hidden_until_wait():
@@ -43,3 +47,73 @@ def test_pool_fixed_slots_backpressure():
     evicted = pool.submit(NonBlockingResult(2))
     assert evicted == 0  # oldest completed to make room
     assert pool.wait_all() == [1, 2]
+
+
+# -- double-completion diagnostics (regression: the old message claimed the
+# -- value "was moved out" even when no parameters were moved) --------------
+def test_double_wait_message_without_moved_params():
+    r = NonBlockingResult(42, op_name="allgather")
+    r.wait()
+    with pytest.raises(PendingRequestError) as ei:
+        r.wait()
+    msg = str(ei.value)
+    assert "released by the first completion" in msg
+    assert "iallgather" in msg  # names the originating i* call
+    assert "moved" not in msg  # nothing was moved: don't claim it was
+
+
+def test_double_wait_message_with_moved_params():
+    r = NonBlockingResult("recv", moved_params=[send_buf(move([1, 2]))])
+    r.wait()
+    with pytest.raises(PendingRequestError, match="moved buffers were"):
+        r.wait()
+
+
+def test_test_after_wait_raises_once_completed():
+    r = NonBlockingResult(7)
+    assert r.wait() == 7
+    with pytest.raises(PendingRequestError, match="exactly once"):
+        r.test()
+
+
+def test_wait_after_test_does_not_blame_wait():
+    """A request first completed by test() must not claim the value was
+    returned 'by the first wait()' (no wait ever succeeded)."""
+    r = NonBlockingResult(9)
+    ready, val = r.test()
+    assert ready and val == 9
+    with pytest.raises(PendingRequestError) as ei:
+        r.wait()
+    msg = str(ei.value)
+    assert "first completion" in msg
+    assert "first wait" not in msg
+
+
+@pytest.mark.pallas
+def test_istar_double_completion_over_pallas_transport():
+    """i* variants of the pallas transport: double-wait() and
+    test()-after-wait() raise the corrected diagnostic at trace time."""
+    x = np.arange(8, dtype=np.float32).reshape(2, 4)
+    seen = {}
+
+    def f(v):
+        comm_kw = {"transport": "pallas"}
+        from repro.core import Communicator
+
+        comm = Communicator("x", **comm_kw)
+        req = comm.iallreduce(send_buf(v), op(operator.add))
+        out = req.wait()
+        with pytest.raises(PendingRequestError) as ei:
+            req.wait()
+        seen["wait_msg"] = str(ei.value)
+        req2 = comm.iallgather(send_buf(v), transport("pallas"))
+        _ = req2.wait()
+        with pytest.raises(PendingRequestError) as ei2:
+            req2.test()
+        seen["test_msg"] = str(ei2.value)
+        return out
+
+    jax.vmap(f, axis_name="x")(x)
+    assert "moved" not in seen["wait_msg"]
+    assert "iallreduce" in seen["wait_msg"]
+    assert "iallgather" in seen["test_msg"]

@@ -1,0 +1,148 @@
+"""Property-based count-inference tests over both transports.
+
+Hypothesis strategies (with the tests/_hypothesis_compat.py offline
+fallback) generate random send-count vectors and assert, for every
+generated case, that
+
+* op-spec count inference (the staged counts transpose / counts gather)
+  agrees bitwise between ``transport="xla"`` and ``transport="pallas"``
+  and matches the NumPy prediction,
+* Result packing order is a function of the *request*, not the
+  transport,
+* the padded traced-count allgatherv path produces the same layout,
+  counts, and displacements under both backends.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, strategies as st
+from repro.core import (
+    Communicator,
+    recv_counts_out,
+    recv_displs_out,
+    send_buf,
+    send_count,
+    send_counts,
+    send_displs_out,
+)
+
+pytestmark = pytest.mark.pallas
+
+TRANSPORTS = ("xla", "pallas")
+
+
+def spmd(f, *arrs):
+    return jax.vmap(f, axis_name="x")(*arrs)
+
+
+@st.composite
+def alltoallv_case(draw):
+    """(p, cap, send-count matrix) with counts[i][j] <= cap."""
+    p = draw(st.sampled_from([1, 2, 4, 8]))
+    cap = draw(st.integers(min_value=1, max_value=4))
+    counts = [
+        [draw(st.integers(min_value=0, max_value=cap)) for _ in range(p)]
+        for _ in range(p)
+    ]
+    return p, cap, counts
+
+
+@st.composite
+def allgatherv_case(draw):
+    """(p, cap, per-rank traced send counts <= cap)."""
+    p = draw(st.sampled_from([1, 2, 4, 8]))
+    cap = draw(st.integers(min_value=1, max_value=4))
+    ns = [draw(st.integers(min_value=0, max_value=cap)) for _ in range(p)]
+    return p, cap, ns
+
+
+@given(alltoallv_case())
+def test_alltoallv_count_inference_transport_invariant(case):
+    p, cap, counts = case
+    sc = np.asarray(counts, np.int32)
+    x = np.arange(p * p * cap, dtype=np.int32).reshape(p, p, cap)
+
+    results = {}
+    for t in TRANSPORTS:
+        def f(v, c, t=t):
+            r = Communicator("x", transport=t).alltoallv(
+                send_buf(v), send_counts(c), recv_counts_out()
+            )
+            return r.recv_buf, r.recv_counts
+
+        results[t] = spmd(f, x, sc)
+    buf_x, rc_x = results["xla"]
+    buf_p, rc_p = results["pallas"]
+    np.testing.assert_array_equal(np.asarray(buf_x), np.asarray(buf_p))
+    np.testing.assert_array_equal(np.asarray(rc_x), np.asarray(rc_p))
+    # inferred recv_counts = the numpy transpose of the send counts
+    np.testing.assert_array_equal(np.asarray(rc_p), sc.T)
+
+
+@given(allgatherv_case())
+def test_allgatherv_traced_padded_transport_invariant(case):
+    p, cap, ns_list = case
+    ns = np.asarray(ns_list, np.int32)
+    x = np.arange(p * cap, dtype=np.int32).reshape(p, cap)
+
+    results = {}
+    for t in TRANSPORTS:
+        def f(v, n, t=t):
+            r = Communicator("x", transport=t).allgatherv(
+                send_buf(v), send_count(n), recv_counts_out(),
+                recv_displs_out(),
+            )
+            return r.recv_buf, r.recv_counts, r.recv_displs
+
+        results[t] = spmd(f, x, ns)
+    for field in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(results["xla"][field]),
+            np.asarray(results["pallas"][field]),
+        )
+    # padded layout: rank i's prefix at displacement i*cap, counts = ns
+    buf, rc, rd = (np.asarray(v) for v in results["pallas"])
+    for r in range(p):
+        np.testing.assert_array_equal(rc[r], ns)
+        np.testing.assert_array_equal(rd[r], np.arange(p) * cap)
+        for i in range(p):
+            np.testing.assert_array_equal(
+                buf[r, i * cap : i * cap + ns[i]], x[i, : ns[i]]
+            )
+
+
+@given(
+    alltoallv_case(),
+    st.sampled_from(
+        [
+            ("recv_counts", "recv_displs", "send_displs"),
+            ("send_displs", "recv_counts"),
+            ("recv_displs",),
+        ]
+    ),
+)
+def test_result_packing_order_transport_invariant(case, requested):
+    """Result fields unpack in request order — a property of the call,
+    identical whichever transport moved the bytes."""
+    p, cap, counts = case
+    sc = np.asarray(counts, np.int32)
+    x = np.zeros((p, p, cap), np.float32)
+    factories = {
+        "recv_counts": recv_counts_out,
+        "recv_displs": recv_displs_out,
+        "send_displs": send_displs_out,
+    }
+
+    seen = {}
+    for t in TRANSPORTS:
+        def f(v, c, t=t):
+            r = Communicator("x", transport=t).alltoallv(
+                send_buf(v), send_counts(c),
+                *[factories[name]() for name in requested],
+            )
+            seen[t] = r.fields()
+            return v
+
+        spmd(f, x, sc)
+    assert seen["xla"] == seen["pallas"] == ("recv_buf",) + requested

@@ -1,0 +1,445 @@
+"""Transport-equivalence differential suite (DESIGN.md §7).
+
+Every op-spec row that supports the pallas transport must be *invisible*
+to users when the backend is swapped: this suite runs each collective
+under the vmap-as-SPMD interpreter at p ∈ {1, 2, 4, 8} once per
+transport and asserts
+
+* **bitwise identity** between ``transport="xla"`` and
+  ``transport="pallas"`` for all pure data-movement ops (allgather,
+  gatherv regimes, alltoall(v) incl. ragged / capacity-overflow cases)
+  with arbitrary float payloads, and for reductions on payloads whose
+  sums are exact (int32, dyadic float32) — where any summation order
+  yields identical bits, so ring vs. HLO order cannot hide;
+* **oracle agreement** (tests/reference_mpi.py) for both transports;
+* allclose (1e-6) on generic gaussian float reductions, where IEEE
+  addition order may legitimately differ between backends;
+* end-to-end: the MoE EP combine and a gradient-reduction tree accept
+  the transport parameter with equivalent results.
+"""
+import operator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import reference_mpi as ref
+from repro.core import (
+    Communicator,
+    grow_only,
+    op,
+    recv_buf,
+    recv_count_out,
+    recv_counts,
+    recv_counts_out,
+    recv_displs_out,
+    root,
+    send_buf,
+    send_count,
+    send_counts,
+    send_recv_buf,
+    transport,
+)
+
+PS = (1, 2, 4, 8)
+TRANSPORTS = ("xla", "pallas")
+
+pytestmark = [pytest.mark.pallas, pytest.mark.parametrize("p", PS)]
+
+
+def spmd(f, *arrs):
+    return jax.vmap(f, axis_name="x")(*arrs)
+
+
+def gauss(p, shape, seed=0):
+    return np.random.RandomState(seed + p).randn(p, *shape).astype(np.float32)
+
+
+def dyadic(p, shape, seed=0):
+    """float32 multiples of 1/16 with |x| <= 32: every partial sum of up
+    to 8 such values is exactly representable, so *any* summation order
+    produces identical bits — the payload that makes reduction tests
+    bitwise instead of allclose."""
+    rng = np.random.RandomState(seed + p)
+    return (rng.randint(-512, 513, size=(p,) + shape) / 16.0).astype(
+        np.float32
+    )
+
+
+def ints(p, shape, seed=0):
+    return np.random.RandomState(seed + p).randint(
+        -50, 50, size=(p,) + shape
+    ).astype(np.int32)
+
+
+def per_transport(p, fn, *arrs):
+    """Run fn(transport_name, *rank_args) under the SPMD interpreter once
+    per transport; returns {name: stacked result}."""
+    return {
+        t: spmd(lambda *a, t=t: fn(t, *a), *arrs) for t in TRANSPORTS
+    }
+
+
+def assert_transports_bitwise(outs):
+    a, b = (np.asarray(outs[t]) for t in TRANSPORTS)
+    np.testing.assert_array_equal(a, b)
+
+
+# -- pure data movement: bitwise for arbitrary payloads ---------------------
+def test_allgather_bitwise_and_oracle(p):
+    x = gauss(p, (3, 2))
+    outs = per_transport(
+        p, lambda t, v: Communicator("x", transport=t).allgather(send_buf(v)), x
+    )
+    assert_transports_bitwise(outs)
+    for t in TRANSPORTS:
+        for r, want in enumerate(ref.allgather(x)):
+            np.testing.assert_array_equal(np.asarray(outs[t])[r], want)
+
+
+def test_allgather_in_place_bitwise(p):
+    bufs = gauss(p, (p, 2), seed=1)
+    outs = per_transport(
+        p,
+        lambda t, v: Communicator("x", transport=t).allgather(
+            send_recv_buf(v)
+        ),
+        bufs,
+    )
+    assert_transports_bitwise(outs)
+    for r, want in enumerate(ref.allgather_inplace(bufs)):
+        np.testing.assert_array_equal(np.asarray(outs["pallas"])[r], want)
+
+
+def test_allgatherv_static_exact_bitwise(p):
+    x = gauss(p, (4, 2), seed=2)
+
+    def f(t, v):
+        r = Communicator("x").allgatherv(
+            send_buf(v), send_count(3), recv_counts_out(), recv_displs_out(),
+            transport(t),
+        )
+        return r.recv_buf, r.recv_counts, r.recv_displs
+
+    outs = per_transport(p, f, x)
+    for field in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][field]), np.asarray(outs["pallas"][field])
+        )
+    for r, want in enumerate(ref.allgatherv_exact(x, 3)):
+        np.testing.assert_array_equal(np.asarray(outs["pallas"][0])[r], want)
+
+
+def test_allgatherv_traced_padded_bitwise(p):
+    """Traced send_count -> padded layout + the staged counts gather,
+    both riding the selected transport (the ragged/variable-count case)."""
+    x = ints(p, (4, 1), seed=3)
+    ns = (np.arange(p) % 4 + 1).astype(np.int32)
+
+    def f(t, v, n):
+        r = Communicator("x", transport=t).allgatherv(
+            send_buf(v), send_count(n), recv_counts_out(), recv_displs_out()
+        )
+        return r.recv_buf, r.recv_counts, r.recv_displs
+
+    outs = per_transport(p, f, x, ns)
+    want_buf, want_rc, want_rd = ref.allgatherv_padded(x, ns)
+    for field in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][field]), np.asarray(outs["pallas"][field])
+        )
+    for r in range(p):
+        np.testing.assert_array_equal(
+            np.asarray(outs["pallas"][0])[r], want_buf[r]
+        )
+        np.testing.assert_array_equal(np.asarray(outs["pallas"][1])[r], want_rc)
+
+
+def test_gatherv_static_ragged_bitwise(p):
+    counts = np.asarray([(r * 2 + 1) % 5 for r in range(p)], np.int64)
+    x = gauss(p, (4, 2), seed=4)
+
+    def f(t, v):
+        r = Communicator("x", transport=t).gatherv(
+            send_buf(v), recv_counts(counts), recv_displs_out(), root(0)
+        )
+        return r.recv_buf, r.recv_displs
+
+    outs = per_transport(p, f, x)
+    want_buf, _, want_rd = ref.allgatherv_ragged(x, counts)
+    for field in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][field]), np.asarray(outs["pallas"][field])
+        )
+    for r in range(p):
+        np.testing.assert_array_equal(
+            np.asarray(outs["pallas"][0])[r], want_buf[r]
+        )
+        np.testing.assert_array_equal(np.asarray(outs["pallas"][1])[r], want_rd)
+
+
+def test_alltoall_bitwise(p):
+    x = gauss(p, (p, 2, 2), seed=5)
+    outs = per_transport(
+        p, lambda t, v: Communicator("x", transport=t).alltoall(send_buf(v)), x
+    )
+    assert_transports_bitwise(outs)
+    for r, want in enumerate(ref.alltoall(x)):
+        np.testing.assert_array_equal(np.asarray(outs["pallas"])[r], want)
+
+
+def test_alltoallv_inferred_counts_bitwise(p):
+    x = ints(p, (p, 3, 2), seed=6)
+    sc = np.asarray(
+        [[(i + j) % 4 for j in range(p)] for i in range(p)], np.int32
+    )
+
+    def f(t, v, c):
+        r = Communicator("x").alltoallv(
+            send_buf(v), send_counts(c), recv_counts_out(), transport(t)
+        )
+        return r.recv_buf, r.recv_counts
+
+    outs = per_transport(p, f, x, sc)
+    for field in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][field]), np.asarray(outs["pallas"][field])
+        )
+    for r, want in enumerate(ref.counts_transpose(sc)):
+        np.testing.assert_array_equal(np.asarray(outs["pallas"][1])[r], want)
+
+
+@pytest.mark.parametrize("cap_r", [2, 5])
+def test_alltoallv_capacity_policy_bitwise(p, cap_r):
+    """grow_only shrink (overflow-checked) and grow both ride the
+    transport unchanged — the capacity-overflow differential case."""
+    x = gauss(p, (p, 3, 2), seed=7)
+    sc = np.full((p, p), 2, np.int32)  # counts fit cap_r=2: no poisoning
+
+    def f(t, v, c):
+        return Communicator("x", transport=t).alltoallv(
+            send_buf(v), send_counts(c), recv_buf(grow_only(cap_r))
+        )
+
+    outs = per_transport(p, f, x, sc)
+    assert np.asarray(outs["pallas"]).shape == (p, p, cap_r, 2)
+    assert_transports_bitwise(outs)
+    for r, want in enumerate(ref.alltoallv(x, cap_r=cap_r)):
+        np.testing.assert_array_equal(np.asarray(outs["pallas"])[r], want)
+
+
+def test_scatterv_with_transport_param(p):
+    """Rooted ops accept transport(...) (engine-level parameter) even
+    where the lowering's data movement is bcast-based."""
+    rootbuf = gauss(p, (p, 3), seed=8)
+    counts = np.asarray([min(r + 1, 2) for r in range(p)], np.int32)
+    sc = np.tile(counts, (p, 1))
+
+    def f(t, v, c):
+        r = Communicator("x", transport=t).scatterv(
+            send_buf(v), send_counts(c), recv_count_out(), root(0)
+        )
+        return r.recv_buf, r.recv_count
+
+    outs = per_transport(p, f, rootbuf, sc)
+    for field in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][field]), np.asarray(outs["pallas"][field])
+        )
+
+
+# -- reductions: bitwise on exact payloads, allclose on gaussian ------------
+@pytest.mark.parametrize("payload", ["int32", "dyadic"])
+def test_reduce_scatter_bitwise_exact_payloads(p, payload):
+    x = (ints if payload == "int32" else dyadic)(p, (p, 2, 2), seed=9)
+    np_dtype = x.dtype
+
+    def f(t, v):
+        return Communicator("x", transport=t).reduce_scatter(
+            send_buf(v), op(operator.add)
+        )
+
+    outs = per_transport(p, f, x)
+    assert_transports_bitwise(outs)
+    want = ref.reduce_scatter(x, np.add)
+    for r in range(p):
+        np.testing.assert_array_equal(
+            np.asarray(outs["pallas"])[r], want[r].astype(np_dtype)
+        )
+
+
+@pytest.mark.parametrize("payload", ["int32", "dyadic"])
+def test_allreduce_bitwise_exact_payloads(p, payload):
+    x = (ints if payload == "int32" else dyadic)(p, (3, 5), seed=10)
+
+    def f(t, v):
+        return Communicator("x", transport=t).allreduce(
+            send_buf(v), op(operator.add)
+        )
+
+    outs = per_transport(p, f, x)
+    assert_transports_bitwise(outs)
+    want = ref.allreduce(x, np.add)
+    for r in range(p):
+        np.testing.assert_array_equal(np.asarray(outs["pallas"])[r], want[r])
+
+
+def test_reductions_gaussian_allclose(p):
+    """Generic float payloads: IEEE addition order may differ between the
+    ring and the XLA reduction, so the contract is allclose, not bitwise."""
+    x = gauss(p, (p, 4), seed=11)
+
+    def rs(t, v):
+        return Communicator("x", transport=t).reduce_scatter(
+            send_buf(v), op(operator.add)
+        )
+
+    outs = per_transport(p, rs, x)
+    np.testing.assert_allclose(
+        np.asarray(outs["xla"]), np.asarray(outs["pallas"]),
+        rtol=1e-6, atol=1e-6,
+    )
+
+    def ar(t, v):
+        return Communicator("x", transport=t).allreduce(
+            send_buf(v), op(operator.add)
+        )
+
+    outs = per_transport(p, ar, x)
+    np.testing.assert_allclose(
+        np.asarray(outs["xla"]), np.asarray(outs["pallas"]),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_lambda_reduction_bitwise(p):
+    """Reduction-via-lambda folds the *gathered* operands in rank order:
+    the gather is pure movement, so even gaussian floats are bitwise
+    transport-invariant."""
+    x = gauss(p, (3,), seed=12)
+    fn = lambda a, b: a - 0.5 * b  # noqa: E731 - non-commutative on purpose
+
+    def f(t, v):
+        return Communicator("x", transport=t).allreduce(send_buf(v), op(fn))
+
+    outs = per_transport(p, f, x)
+    assert_transports_bitwise(outs)
+    want = ref.allreduce(x, lambda a, b: a - 0.5 * b)
+    for r in range(p):
+        np.testing.assert_allclose(
+            np.asarray(outs["pallas"])[r], want[r], rtol=1e-6
+        )
+
+
+def test_scan_exscan_bitwise(p):
+    """scan/exscan gather via the transport then fold locally — bitwise
+    invariant for both the cumsum and the lambda paths."""
+    x = gauss(p, (3,), seed=13)
+
+    def f(t, v):
+        comm = Communicator("x", transport=t)
+        return (
+            comm.scan(send_buf(v), op(operator.add)),
+            comm.exscan(send_buf(v), op(operator.add)),
+        )
+
+    outs = per_transport(p, f, x)
+    for field in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][field]), np.asarray(outs["pallas"][field])
+        )
+
+
+# -- non-blocking i* variants over the pallas transport ---------------------
+def test_istar_variants_match_blocking(p):
+    x = dyadic(p, (p, 2), seed=14)
+    sc = np.full((p, p), 2, np.int32)
+
+    def f(t, v, c):
+        comm = Communicator("x", transport=t)
+        a = comm.ialltoallv(send_buf(v), send_counts(c)).wait()
+        b = comm.ireduce_scatter(send_buf(v), op(operator.add)).wait()
+        r = comm.iallgatherv(send_buf(v)).wait()
+        return a, b, r
+
+    outs = per_transport(p, f, x, sc)
+    for field in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][field]), np.asarray(outs["pallas"][field])
+        )
+
+
+# -- end-to-end: MoE combine + gradient-reduction tree ----------------------
+@pytest.mark.parametrize("combine", ["gather", "reduce_scatter"])
+def test_moe_ep_combine_transport_equivalence(p, combine):
+    """The acceptance path: moe_forward_ep_local(transport=...) end to
+    end.  The gather combine is pure data movement + local math ->
+    bitwise; the reduce_scatter combine sums inside the collective ->
+    allclose."""
+    from repro.models.config import ModelConfig
+    from repro.models.moe import init_moe, moe_forward_ep_local
+
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=8, top_k=2,
+        moe_d_ff=32, capacity_factor=1.5, dtype="float32",
+        param_dtype="float32",
+    )
+    params = init_moe(jax.random.PRNGKey(0), cfg, ep_size=p)
+    n_loc, d = 8, cfg.d_model
+    x = gauss(p, (n_loc, d), seed=15)
+    e_local = params["wi"].shape[0] // p
+    p_sharded = dict(params)
+    p_sharded["wi"] = params["wi"].reshape(p, e_local, *params["wi"].shape[1:])
+    p_sharded["wg"] = params["wg"].reshape(p, e_local, *params["wg"].shape[1:])
+    p_sharded["wo"] = params["wo"].reshape(p, e_local, *params["wo"].shape[1:])
+
+    def f(t, xl, wi, wg, wo):
+        pl = {**params, "wi": wi, "wg": wg, "wo": wo}
+        out, aux = moe_forward_ep_local(
+            pl, xl, cfg, "x", combine=combine, transport=t
+        )
+        return out, aux
+
+    outs = {
+        t: jax.vmap(
+            lambda xl, wi, wg, wo, t=t: f(t, xl, wi, wg, wo),
+            in_axes=(0, 0, 0, 0),
+            axis_name="x",
+        )(x, p_sharded["wi"], p_sharded["wg"], p_sharded["wo"])
+        for t in TRANSPORTS
+    }
+    out_x, aux_x = outs["xla"]
+    out_p, aux_p = outs["pallas"]
+    if combine == "gather":
+        np.testing.assert_array_equal(np.asarray(out_x), np.asarray(out_p))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(out_x), np.asarray(out_p), rtol=1e-5, atol=1e-5
+        )
+    np.testing.assert_array_equal(np.asarray(aux_x), np.asarray(aux_p))
+
+
+def test_grad_reduce_tree_transport_bitwise(p):
+    """The trainer's manual 'allreduce' gradient reduction, distilled: a
+    pytree of dyadic leaf gradients mean-reduced over the DP axis must be
+    bitwise identical under both transports."""
+    leaves = {
+        "w": dyadic(p, (4, 3), seed=16),
+        "b": dyadic(p, (5,), seed=17),
+    }
+
+    def f(t, w, b):
+        comm = Communicator("x", transport=t)
+        inv_p = 1.0 / comm.size()
+        return jax.tree.map(
+            lambda g: comm.allreduce(send_buf(g), op(operator.add)) * inv_p,
+            {"w": w, "b": b},
+        )
+
+    outs = per_transport(p, f, leaves["w"], leaves["b"])
+    for k in ("w", "b"):
+        np.testing.assert_array_equal(
+            np.asarray(outs["xla"][k]), np.asarray(outs["pallas"][k])
+        )
