@@ -20,6 +20,7 @@ from .flatten import bucketize_by_destination, flatten_buckets, with_flattened
 from .grid import GridCommunicator
 from .nonblocking import NonBlockingResult, RequestPool
 from .opspec import OP_TABLE, OpSpec
+from .overlap import Bucket, overlap_reduce_tree, plan_buckets
 from .params import (
     Param,
     ResizePolicy,
@@ -77,6 +78,7 @@ __all__ = [
     "ReproducibleReduce", "Plugin", "register_parameter",
     "OpSpec", "OP_TABLE", "attach_ops",
     "NonBlockingResult", "RequestPool", "Result", "WorldComm",
+    "Bucket", "plan_buckets", "overlap_reduce_tree",
     "DeviceFailureDetected", "RevokedError",
     "send_buf", "recv_buf", "send_recv_buf", "send_count", "send_counts",
     "recv_count", "recv_count_out",

@@ -46,13 +46,18 @@ from .result import make_result
 from .transports import resolve_transport
 
 __all__ = [
-    "OpSpec", "Lowering", "OP_TABLE", "attach_ops", "execute",
+    "OpSpec", "Lowering", "OP_TABLE", "OP_OWNERS", "attach_ops", "execute",
     "is_static", "static_int",
 ]
 
 
 # Method-name -> spec, across the core communicator and every plugin.
 OP_TABLE: Dict[str, "OpSpec"] = {}
+
+# Method-name -> owning class name, recorded by attach_ops at registration
+# (provenance for tooling, e.g. the API.md generator's core-vs-plugin
+# grouping — no name heuristics).
+OP_OWNERS: Dict[str, str] = {}
 
 # Out-requestable parameter kinds and the result field each one fills.
 _OUT_FIELDS = {
@@ -369,6 +374,7 @@ def attach_ops(cls, specs):
         if existing is not None and existing is not spec:
             raise KampingError(f"collective '{spec.name}' already registered")
         OP_TABLE[spec.name] = spec
+        OP_OWNERS[spec.name] = cls.__name__
         setattr(cls, spec.name, _make_op_method(spec))
         if spec.nonblocking:
             setattr(cls, "i" + spec.name, _make_nb_method(spec))

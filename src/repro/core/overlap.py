@@ -1,0 +1,254 @@
+"""Communication–computation overlap engine (DESIGN.md §8).
+
+DDP-style bucketed gradient reduction, expressed in KaMPIng's
+request-pool vocabulary: the gradient pytree is partitioned into
+size-targeted **buckets**, each bucket's reduction is issued as a
+non-blocking collective (``iallreduce``, or ``ireduce_scatter`` +
+allgather — the bandwidth-optimal decomposition) through the op-spec
+engine, the in-flight requests are tracked in a *fixed-slot*
+:class:`~repro.core.nonblocking.RequestPool` (``max_inflight`` bounds
+concurrency via submit-backpressure), and the tail is drained with
+``waitall``.  Later buckets' communication therefore overlaps earlier
+buckets' completion work — and, on a real mesh, the backward compute
+that produces them.
+
+Trace-time model.  Under XLA there is no host-visible "gradient ready"
+event: the program is staged once and the XLA latency-hiding scheduler
+decides actual overlap.  What this engine controls is the *schedule
+shape* the scheduler sees: many independent, moderately sized collectives
+issued in gradient-readiness order (reverse pytree order — backward
+produces the last layers' gradients first) instead of one serialized
+reduction per leaf (or one giant fused reduction that cannot start until
+every gradient exists).  That is exactly the information a DDP bucketing
+scheduler encodes, and the request pool is the right vocabulary for it:
+``submit`` = issue, fixed slots = bounded in-flight window, ``waitall``
+= the MPI_Waitall completion barrier.
+
+Buckets are dtype-homogeneous (a bucket is one concatenated flat buffer)
+and transport-aware: each bucket's collective rides the communicator's
+resolved transport (``xla`` HLOs or ``pallas`` ring kernels — DESIGN.md
+§7), so the overlap schedule and the byte-moving backend compose freely.
+
+Bitwise contract: reductions are elementwise sums, so on exactly
+summable payloads (ints, dyadic floats — any addition order yields the
+same bits) ``overlap_reduce_tree`` is bitwise identical to a per-leaf
+``allreduce`` loop under *both* transports; on generic float payloads
+the usual IEEE reassociation caveat applies (tests/test_overlap.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import operator
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .errors import KampingError
+from .nonblocking import RequestPool
+from .params import op as op_param
+from .params import send_buf
+
+__all__ = ["Bucket", "plan_buckets", "overlap_reduce_tree"]
+
+# Default bucket target: 4 MiB of gradient bytes per collective — large
+# enough to be bandwidth-bound, small enough that several buckets are in
+# flight over a backward pass (cf. DDP's 25 MB default, scaled down for
+# the payloads this repo benchmarks).
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One scheduled reduction: a dtype-homogeneous run of leaves.
+
+    ``indices`` are positions into the flattened leaf list; ``sizes`` the
+    per-leaf element counts (concatenation offsets are their prefix sums).
+    """
+
+    indices: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    dtype: Any
+    nbytes: int
+
+
+def plan_buckets(
+    leaves: Sequence[Any], bucket_bytes: int = DEFAULT_BUCKET_BYTES
+) -> List[Bucket]:
+    """Partition ``leaves`` into size-targeted, dtype-homogeneous buckets.
+
+    Leaves are walked in **reverse** order — backward produces the last
+    layers' gradients first, so reverse pytree order approximates
+    gradient-readiness order (the DDP convention) — and greedily packed
+    while a bucket stays within ``bucket_bytes``; a leaf that would
+    overflow the target closes the bucket first.  A dtype change also
+    closes the current bucket (buckets concatenate into one flat buffer).
+    Oversized single leaves get a bucket of their own; zero-size leaves
+    ride along wherever they fall.  Works on concrete arrays and on
+    ``jax.ShapeDtypeStruct``-like abstract values alike.
+    """
+    if bucket_bytes <= 0:
+        raise KampingError(
+            f"plan_buckets: bucket_bytes must be positive; got {bucket_bytes}"
+        )
+    buckets: List[Bucket] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    cur_dtype = None
+
+    def close():
+        nonlocal cur, cur_bytes, cur_dtype
+        if cur:
+            buckets.append(
+                Bucket(
+                    indices=tuple(cur),
+                    sizes=tuple(
+                        int(np.prod(np.shape(leaves[i]), dtype=np.int64))
+                        for i in cur
+                    ),
+                    dtype=cur_dtype,
+                    nbytes=cur_bytes,
+                )
+            )
+        cur, cur_bytes, cur_dtype = [], 0, None
+
+    for i in reversed(range(len(leaves))):
+        leaf = leaves[i]
+        dt = jnp.asarray(leaf).dtype if not hasattr(leaf, "dtype") else leaf.dtype
+        n = int(np.prod(np.shape(leaf), dtype=np.int64))
+        nbytes = n * jnp.dtype(dt).itemsize
+        if cur and (dt != cur_dtype or cur_bytes + nbytes > bucket_bytes):
+            close()
+        cur.append(i)
+        cur_dtype = dt
+        cur_bytes += nbytes
+    close()
+    return buckets
+
+
+def _issue(comm, bucket: Bucket, leaves, mode: str):
+    """Stage one bucket's non-blocking reduction; returns the request."""
+    flat = jnp.concatenate(
+        [jnp.ravel(leaves[i]) for i in bucket.indices]
+    ) if len(bucket.indices) > 1 else jnp.ravel(leaves[bucket.indices[0]])
+    if mode == "reduce_scatter":
+        p = comm.size()
+        pad = (-flat.shape[0]) % p
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return comm.ireduce_scatter(
+            send_buf(flat.reshape(p, -1)), op_param(operator.add)
+        )
+    return comm.iallreduce(send_buf(flat), op_param(operator.add))
+
+
+def _complete(comm, bucket: Bucket, value, mode: str, total: int):
+    """Turn a completed request's value back into the bucket's flat sum."""
+    if mode == "reduce_scatter":
+        # value is this rank's reduced chunk; the allgather re-materializes
+        # the full bucket — reduce_scatter + allgather is the
+        # bandwidth-optimal allreduce decomposition, and the gather leg is
+        # pure data movement (bitwise under every transport).
+        flat = comm.allgather(send_buf(value))
+        return flat[:total]
+    return value
+
+
+def overlap_reduce_tree(
+    comm,
+    tree,
+    *,
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+    max_inflight: Optional[int] = 2,
+    mode: str = "allreduce",
+    scale: Optional[float] = None,
+    pool: Optional[RequestPool] = None,
+):
+    """Sum-reduce every leaf of ``tree`` over ``comm`` with bucketed,
+    request-pool-scheduled non-blocking collectives.
+
+    Parameters
+    ----------
+    comm:
+        A :class:`~repro.core.communicator.Communicator` (its constructor
+        ``transport=`` default, or per-call resolution, decides the
+        backend each bucket rides — DESIGN.md §7).
+    bucket_bytes:
+        Target bytes per bucket (see :func:`plan_buckets`).
+    max_inflight:
+        Fixed-slot bound on concurrently in-flight buckets
+        (``RequestPool(slots=max_inflight)``); ``None`` = unbounded.
+        Ignored when ``pool`` is supplied (its own slots govern).
+    mode:
+        ``"allreduce"`` — one ``iallreduce`` per bucket;
+        ``"reduce_scatter"`` — ``ireduce_scatter`` per bucket, each
+        completion allgathering its chunk back (the bandwidth-optimal
+        decomposition; makes per-bucket completion a two-phase pipeline).
+    scale:
+        Optional factor applied to every reduced *floating-point* leaf
+        (e.g. ``1/p`` for a mean) — applied once, after completion.
+        Integer leaves (counters and the like) are summed unscaled: a
+        fractional factor has no exact integer representation, so
+        scaling them would silently truncate.
+    pool:
+        An externally managed :class:`RequestPool` to share in-flight
+        tracking with other schedulers (e.g. MoE layers' overlapped
+        dispatch).  The engine then completes *its own* requests with
+        targeted ``collect`` — unrelated requests in the pool are left
+        pending for their owners.  With the default ``None`` a private
+        fixed-slot pool is created and drained with ``waitall``.
+
+    Returns the tree of reduced (summed, optionally scaled) leaves.
+    """
+    if mode not in ("allreduce", "reduce_scatter"):
+        raise KampingError(
+            f"overlap_reduce_tree: mode={mode!r}; expected 'allreduce' or "
+            "'reduce_scatter'"
+        )
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return tree
+    leaves = [jnp.asarray(l) for l in leaves]
+    shapes = [l.shape for l in leaves]
+    plan = plan_buckets(leaves, bucket_bytes)
+
+    done: dict = {}
+    if pool is None:
+        # Private pool: eviction order == submission order, so each
+        # evicted value maps to the oldest of our outstanding buckets;
+        # the tail drains with waitall.
+        pool = RequestPool(slots=max_inflight)
+        inflight: List[int] = []  # bucket ids, submission order
+        for bi, bucket in enumerate(plan):
+            evicted = pool.submit(_issue(comm, bucket, leaves, mode))
+            inflight.append(bi)
+            if evicted is not None:
+                done[inflight.pop(0)] = evicted
+        for bi, val in zip(inflight, pool.waitall()):
+            done[bi] = val
+    else:
+        # Shared pool: backpressure may evict *foreign* requests, so the
+        # submit return is not ours to claim — targeted collect retrieves
+        # exactly our buckets (evicted-or-pending alike) and leaves the
+        # rest of the pool untouched.
+        reqs: List[Any] = []
+        for bucket in plan:
+            req = _issue(comm, bucket, leaves, mode)
+            pool.submit(req)
+            reqs.append(req)
+        for bi, req in enumerate(reqs):
+            done[bi] = pool.collect(req)
+
+    reduced: List[Any] = [None] * len(leaves)
+    for bi, bucket in enumerate(plan):
+        total = sum(bucket.sizes)
+        flat = _complete(comm, bucket, done[bi], mode, total)
+        off = 0
+        for idx, n in zip(bucket.indices, bucket.sizes):
+            piece = flat[off:off + n].reshape(shapes[idx])
+            if scale is not None and jnp.issubdtype(piece.dtype, jnp.floating):
+                piece = piece * jnp.asarray(scale, piece.dtype)
+            reduced[idx] = piece
+            off += n
+    return jax.tree.unflatten(treedef, reduced)

@@ -140,7 +140,8 @@ def _dispatch_slots(experts, gates, e_pad: int, cap_e: int):
 
 
 def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
-                         combine="gather", transport=None):
+                         combine="gather", transport=None, overlap=False,
+                         pool=None):
     """EP MoE body — call INSIDE shard_map.
 
     p_local: expert bank sharded over ``ep_axis`` -> local (E_local, d, ff);
@@ -161,12 +162,35 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
     (``None``/"xla" = XLA HLOs, "pallas" = ring kernels; DESIGN.md §7) —
     the layer's collectives are table rows, so re-targeting them is one
     constructor argument.
+
+    ``overlap`` / ``pool`` (DESIGN.md §8): with ``overlap=True`` the
+    dispatch and combine exchanges are issued as non-blocking ``i*``
+    table variants tracked in a :class:`~repro.core.RequestPool` and
+    completed with targeted ``collect`` — under the reduce_scatter
+    combine the payload and metadata exchanges are in flight *together*,
+    and the metadata is only collected after the expert FFN compute it
+    overlaps with.  Pass ``pool`` (requires ``overlap=True``; rejected
+    otherwise, since a blocking layer must not push requests into a
+    caller's pool) to share one pool across layers (e.g. with the
+    trainer's overlap scheduler via
+    ``overlap_reduce_tree(..., pool=...)``); a fresh fixed-slot pool is
+    created otherwise.  Results are identical to the blocking path.
     """
+    from repro.core import KampingError, RequestPool
+
     comm = Communicator(ep_axis, transport=transport)
     if use_grid:
         from repro.core import GridCommunicator
 
         comm = comm.extend(GridCommunicator)
+    if pool is not None and not overlap:
+        raise KampingError(
+            "moe_forward_ep_local: pool= is only meaningful with "
+            "overlap=True (the blocking path issues no pool-tracked "
+            "requests); pass overlap=True or drop pool"
+        )
+    if overlap and pool is None:
+        pool = RequestPool(slots=2)
     ep = comm.size()
     e_pad = p_local["wi"].shape[0] * ep
     n_loc, d = x_local.shape
@@ -184,6 +208,17 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
             else comm.alltoallv(send_buf(buckets))
         )
 
+    def dispatch_async(buckets):
+        """Issue the exchange as the table's i* variant, tracked in the
+        pool; the caller collects it when the data is actually needed."""
+        req = (
+            comm.igrid_alltoallv(send_buf(buckets))
+            if use_grid
+            else comm.ialltoallv(send_buf(buckets))
+        )
+        pool.submit(req)
+        return req
+
     def to_buckets(flat_vals, fill):
         """Scatter per-pair values into the (ep, e_local*cap_e, ...) slot
         layout; overflowed pairs land in the dropped sentinel row."""
@@ -192,9 +227,36 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
         send = send.at[slots].set(flat_vals, mode="drop")
         return send[:-1].reshape((ep, e_local * cap_e) + rest)
 
+    def build_meta():
+        # Pair metadata travels with the dispatch: for every slot, the
+        # source pair index (-1 = empty/dropped) and the routing gate,
+        # fused into one (.., 2) float32 exchange.  The gate channel must
+        # stay float so the router gradient flows back through the
+        # collective; pair ids are exact in f32 below 2^24.
+        if n_loc * k >= 1 << 24:
+            raise ValueError(
+                "combine='reduce_scatter': n_loc*top_k must be < 2**24 "
+                "(pair ids travel in a float32 channel); use "
+                "combine='gather' for larger local batches"
+            )
+        pair_ids = jnp.arange(n_loc * k, dtype=jnp.float32)
+        return jnp.stack(
+            [pair_ids, gates.reshape(-1).astype(jnp.float32)], axis=-1
+        )
+
     # scatter tokens into (e_pad*cap_e [+1 overflow], d) send buckets
     xt = jnp.repeat(x_local, k, axis=0)  # (n_loc*k, d) one copy per route
-    recv = dispatch(to_buckets(xt, 0))
+    req_meta = None
+    if pool is not None:
+        # Overlapped dispatch: payload (and, for the reduce_scatter
+        # combine, metadata) exchanges are in flight together; the
+        # metadata is collected only after the expert compute below.
+        req_pay = dispatch_async(to_buckets(xt, 0))
+        if combine == "reduce_scatter":
+            req_meta = dispatch_async(to_buckets(build_meta(), -1.0))
+        recv = pool.collect(req_pay)
+    else:
+        recv = dispatch(to_buckets(xt, 0))
     # recv: (ep, e_local*cap_e, d) — tokens from every source rank for my
     # local experts; reorder to (e_local, ep*cap_e, d) batched per expert
     recv = recv.reshape(ep, e_local, cap_e, d).transpose(1, 0, 2, 3)
@@ -211,36 +273,32 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
     y = y.reshape(ep, e_local * cap_e, d)
 
     if combine == "reduce_scatter":
-        # Pair metadata travels with the dispatch: for every slot, the
-        # source pair index (-1 = empty/dropped) and the routing gate,
-        # fused into one (.., 2) float32 exchange.  The gate channel must
-        # stay float so the router gradient flows back through the
-        # collective; pair ids are exact in f32 below 2^24.
-        if n_loc * k >= 1 << 24:
-            raise ValueError(
-                "combine='reduce_scatter': n_loc*top_k must be < 2**24 "
-                "(pair ids travel in a float32 channel); use "
-                "combine='gather' for larger local batches"
-            )
-        pair_ids = jnp.arange(n_loc * k, dtype=jnp.float32)
-        meta = jnp.stack(
-            [pair_ids, gates.reshape(-1).astype(jnp.float32)], axis=-1
+        recv_meta = (
+            pool.collect(req_meta)
+            if req_meta is not None
+            else dispatch(to_buckets(build_meta(), -1.0))
         )
-        recv_meta = dispatch(to_buckets(meta, -1.0))
         recv_pair = recv_meta[..., 0].astype(jnp.int32)
         recv_gate = jnp.where(recv_pair >= 0, recv_meta[..., 1], 0.0)
         weighted = y * recv_gate[..., None].astype(y.dtype)
         rows = jnp.where(recv_pair >= 0, recv_pair // k, n_loc)
         contrib = jnp.zeros((ep, n_loc + 1, d), y.dtype)
         contrib = contrib.at[jnp.arange(ep)[:, None], rows].add(weighted)
-        out = comm.reduce_scatter(
-            send_buf(contrib[:, :n_loc]), op(operator.add)
-        )
+        if pool is not None:
+            req = comm.ireduce_scatter(
+                send_buf(contrib[:, :n_loc]), op(operator.add)
+            )
+            pool.submit(req)
+            out = pool.collect(req)
+        else:
+            out = comm.reduce_scatter(
+                send_buf(contrib[:, :n_loc]), op(operator.add)
+            )
         return out + _shared_out(p_local, x_local, cfg), aux
     if combine != "gather":
         raise ValueError(f"unknown combine mode {combine!r}")
 
-    back = dispatch(y)
+    back = pool.collect(dispatch_async(y)) if pool is not None else dispatch(y)
     back_flat = jnp.concatenate(
         [back.reshape(e_pad * cap_e, d), jnp.zeros((1, d), back.dtype)], 0
     )

@@ -22,6 +22,28 @@ __all__ = ["ServeEngine", "Request"]
 
 @dataclasses.dataclass
 class Request:
+    """One generation request in the serve queue.
+
+    Attributes
+    ----------
+    rid:
+        Caller-chosen request id (echoed back, never interpreted — use it
+        to correlate results with submissions).
+    prompt:
+        ``(S,)`` int32 token ids; prefilled into the assigned slot's
+        cache region on admission.
+    max_new_tokens:
+        Decode budget.  The first token comes from the prefill logits
+        (admission consumes one unit); each engine step spends one more
+        per live slot, and the slot is freed when the budget is gone.
+    generated:
+        Filled by the engine (``submit`` resets it to ``[]``): every
+        generated token in order, starting with the prefill token.  A
+        finished request holds ``max(max_new_tokens, 2)`` tokens — the
+        prefill token plus at least one decode step, since the slot is
+        only reaped *after* the decode that exhausts the budget.
+    """
+
     rid: int
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
@@ -104,7 +126,23 @@ class ServeEngine:
 
     # -- stepping ------------------------------------------------------------
     def step(self) -> int:
-        """Admit + one decode step for all live slots. Returns #live."""
+        """Admit queued requests, then run one decode step for all live
+        slots; returns the number of slots still live afterwards.
+
+        The continuous-batching inner loop:
+
+        1. ``_admit`` splices queued prompts into free slots (one jitted
+           prefill per admission, cache rows copied into the slot);
+        2. one jitted ``decode_step`` advances *every* live slot by one
+           token — a single fixed-shape batched call, so XLA never
+           re-compiles as requests come and go;
+        3. finished sequences (decode budget exhausted) free their slot;
+           the next ``step()`` refills it from the queue.
+
+        Greedy argmax sampling; ``0`` means the engine is fully idle
+        (empty queue, no live slots) — ``run_to_completion`` loops on
+        that condition.
+        """
         self._admit()
         if not self.slot_live.any():
             return 0

@@ -11,6 +11,15 @@ training options):
                       transport (``TrainConfig.transport``: "xla" HLOs or
                       "pallas" ring kernels — DESIGN.md §7), making the
                       kernel-level fast path selectable end-to-end.
+* ``overlap``       — manual-DP shard_map island; the bucketed
+                      communication–computation overlap engine
+                      (``core/overlap.py``, DESIGN.md §8): gradients are
+                      packed into ``bucket_bytes``-target buckets, each
+                      bucket reduced with a non-blocking collective
+                      tracked in a fixed-slot RequestPool
+                      (``max_inflight``), so later buckets' communication
+                      overlaps earlier buckets' completion work.  Rides
+                      the same selectable transport as ``allreduce``.
 * ``compressed``    — manual-DP shard_map island; int8 + error-feedback
                       all-reduce (4x less DP traffic; see compression.py).
 * ``reproducible``  — manual-DP island; per-microbatch leaf gradients
@@ -32,7 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import Communicator, ReproducibleReduce, op, send_buf
+from repro.core import (
+    Communicator,
+    ReproducibleReduce,
+    op,
+    overlap_reduce_tree,
+    send_buf,
+)
 from repro.models import Runtime, loss_and_metrics
 from repro.sharding.rules import (
     ShardingProfile,
@@ -49,12 +64,20 @@ __all__ = ["TrainConfig", "Trainer", "make_train_step"]
 @dataclasses.dataclass
 class TrainConfig:
     opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
-    grad_reduce: str = "auto"  # auto | allreduce | compressed | reproducible
+    # auto | allreduce | overlap | compressed | reproducible
+    grad_reduce: str = "auto"
     microbatches: int = 1  # grad accumulation steps (per device for manual)
     aux_weight: float = 0.01
     # Collective backend for the manual-DP modes' communicator
     # (None -> "xla"; "pallas" -> ring kernels; DESIGN.md §7).
     transport: Optional[str] = None
+    # grad_reduce="overlap" knobs (core/overlap.py, DESIGN.md §8):
+    # target bytes per gradient bucket, fixed-slot in-flight bound, and
+    # the per-bucket collective ("allreduce" | "reduce_scatter" — the
+    # latter is the bandwidth-optimal RS+AG decomposition).
+    bucket_bytes: int = 4 << 20
+    max_inflight: int = 2
+    overlap_mode: str = "allreduce"
 
 
 def _split_microbatches(batch, m):
@@ -72,11 +95,11 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
             params, batch, cfg, runtime, aux_weight=tcfg.aux_weight
         )
 
-    if tcfg.grad_reduce not in ("auto", "allreduce", "compressed",
+    if tcfg.grad_reduce not in ("auto", "allreduce", "overlap", "compressed",
                                 "reproducible"):
         raise ValueError(
             f"TrainConfig.grad_reduce={tcfg.grad_reduce!r}: expected one of "
-            "'auto', 'allreduce', 'compressed', 'reproducible'"
+            "'auto', 'allreduce', 'overlap', 'compressed', 'reproducible'"
         )
 
     if tcfg.grad_reduce == "auto":
@@ -140,10 +163,12 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
             grads, new_err = compressed_grad_allreduce(grads, err, dp_name)
             loss = jax.lax.pmean(loss, dp_name)
             return grads, new_err, loss
-        if tcfg.grad_reduce == "allreduce":
+        if tcfg.grad_reduce in ("allreduce", "overlap"):
             # The table-generated allreduce over the configured transport
             # (DESIGN.md §7): the gradient fast path is a backend choice,
-            # not a different training loop.
+            # not a different training loop.  "overlap" keeps the same
+            # loss/grad computation but hands the reduction to the
+            # bucketing scheduler (core/overlap.py, DESIGN.md §8).
             if tcfg.microbatches > 1:
                 stacked, losses = microbatch_grads(params, batch)
                 grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked)
@@ -154,14 +179,23 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
                 )(params, batch)
             comm = Communicator(dp_name, transport=tcfg.transport)
             inv_p = 1.0 / comm.size()
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-            def reduce_leaf(g):
-                red = comm.allreduce(
-                    send_buf(g.astype(jnp.float32)), op(operator.add)
+            if tcfg.grad_reduce == "overlap":
+                grads = overlap_reduce_tree(
+                    comm, grads,
+                    bucket_bytes=tcfg.bucket_bytes,
+                    max_inflight=tcfg.max_inflight,
+                    mode=tcfg.overlap_mode,
+                    scale=inv_p,
                 )
-                return red * inv_p
-
-            grads = jax.tree.map(reduce_leaf, grads)
+            else:
+                grads = jax.tree.map(
+                    lambda g: comm.allreduce(
+                        send_buf(g), op(operator.add)
+                    ) * inv_p,
+                    grads,
+                )
             loss = jax.lax.pmean(loss, dp_name)
             return grads, None, loss
         # reproducible: per-microbatch leaf grads -> canonical tree

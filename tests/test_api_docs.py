@@ -1,0 +1,30 @@
+"""API.md freshness gate: the generated API reference must match the
+op-spec table it is derived from (tools/gen_api_docs.py --check)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+GEN = os.path.join(REPO, "tools", "gen_api_docs.py")
+
+
+def test_api_md_matches_opspec_table():
+    r = subprocess.run(
+        [sys.executable, GEN, "--check"], capture_output=True, text=True
+    )
+    assert r.returncode == 0, (
+        "API.md is stale or missing — regenerate with "
+        "`PYTHONPATH=src python tools/gen_api_docs.py`.\n"
+        + r.stdout + r.stderr
+    )
+
+
+def test_api_md_covers_every_table_row():
+    from repro.core import OP_TABLE
+
+    with open(os.path.join(REPO, "API.md")) as f:
+        text = f.read()
+    for name, spec in OP_TABLE.items():
+        assert f"## `{name}`" in text, f"API.md misses table row {name!r}"
+        if spec.nonblocking:
+            assert f"`i{name}(...)`" in text

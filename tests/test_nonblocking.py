@@ -49,6 +49,116 @@ def test_pool_fixed_slots_backpressure():
     assert pool.wait_all() == [1, 2]
 
 
+# -- RequestPool edge cases (fixed-slot overflow, testany, double waitall,
+# -- reuse after drain, targeted collect) ------------------------------------
+def test_pool_fixed_slot_overflow_evicts_in_submission_order():
+    pool = RequestPool(slots=2)
+    evictions = [pool.submit(NonBlockingResult(i)) for i in range(5)]
+    assert evictions == [None, None, 0, 1, 2]  # FIFO backpressure
+    assert len(pool) == 2
+    assert pool.waitall() == [3, 4]
+
+
+def test_pool_invalid_slots():
+    from repro.core import KampingError
+
+    for bad in (0, -3):
+        with pytest.raises(KampingError, match="slots"):
+            RequestPool(slots=bad)
+
+
+def test_testany_on_empty_pool_is_mpi_undefined():
+    """MPI_Testany with no active requests: flag=true, index=MPI_UNDEFINED
+    — here (True, None, None), on a fresh pool and on a drained one."""
+    pool = RequestPool()
+    assert pool.testany() == (True, None, None)
+    pool.submit(NonBlockingResult("v"))
+    pool.waitall()
+    assert pool.testany() == (True, None, None)
+
+
+def test_testany_completes_oldest_with_stable_index():
+    pool = RequestPool()
+    for i in range(3):
+        pool.submit(NonBlockingResult(i * 10))
+    flag, idx, val = pool.testany()
+    assert (flag, idx, val) == (True, 0, 0)
+    flag, idx, val = pool.testany()
+    assert (flag, idx, val) == (True, 1, 10)
+    # indices are submission sequence numbers, surviving interleaved submits
+    pool.submit(NonBlockingResult(99))
+    assert pool.testany() == (True, 2, 20)
+    assert pool.testany() == (True, 3, 99)
+    assert len(pool) == 0
+
+
+def test_double_waitall_returns_empty():
+    pool = RequestPool(slots=1)
+    pool.submit(NonBlockingResult("a"))
+    assert pool.waitall() == ["a"]
+    assert pool.waitall() == []  # second waitall: drained pool, no raise
+    assert pool.wait_all() == []  # alias spelling too
+
+
+def test_pool_reuse_after_drain():
+    pool = RequestPool(slots=2)
+    pool.submit(NonBlockingResult(1))
+    assert pool.waitall() == [1]
+    # the drained pool accepts a fresh pipelined round with backpressure
+    assert pool.submit(NonBlockingResult(2)) is None
+    assert pool.submit(NonBlockingResult(3)) is None
+    assert pool.submit(NonBlockingResult(4)) == 2
+    assert pool.waitall() == [3, 4]
+    assert len(pool) == 0
+
+
+def test_collect_targets_a_specific_request():
+    pool = RequestPool()
+    r1, r2 = NonBlockingResult("x"), NonBlockingResult("y")
+    pool.submit(r1)
+    pool.submit(r2)
+    assert pool.collect(r2) == "y"  # out of submission order
+    assert pool.waitall() == ["x"]
+
+
+def test_collect_after_backpressure_eviction_releases_stash():
+    from repro.core import KampingError
+
+    pool = RequestPool(slots=1)
+    r1, r2 = NonBlockingResult("x"), NonBlockingResult("y")
+    pool.submit(r1)
+    pool.submit(r2)  # evicts r1; its value is stashed
+    assert pool.collect(r1) == "x"
+    with pytest.raises(KampingError, match="not held by this pool"):
+        pool.collect(r1)  # released exactly once
+    assert pool.collect(r2) == "y"
+
+
+def test_collect_unknown_request_raises():
+    from repro.core import KampingError
+
+    pool = RequestPool()
+    with pytest.raises(KampingError, match="not held by this pool"):
+        pool.collect(NonBlockingResult(0))
+
+
+def test_eviction_stash_is_keyed_by_object_not_id():
+    """The stash must hold the evicted request itself: with id() keys a
+    garbage-collected request's recycled id could alias a fresh, never
+    submitted one into collect()-ing a stale value (regression)."""
+    import gc
+
+    from repro.core import KampingError
+
+    pool = RequestPool(slots=1)
+    pool.submit(NonBlockingResult("stale"))  # no external reference kept
+    pool.submit(NonBlockingResult("live"))  # evicts + stashes the first
+    gc.collect()
+    for _ in range(64):  # allocations that would reuse a freed id
+        with pytest.raises(KampingError, match="not held by this pool"):
+            pool.collect(NonBlockingResult("fresh"))
+
+
 # -- double-completion diagnostics (regression: the old message claimed the
 # -- value "was moved out" even when no parameters were moved) --------------
 def test_double_wait_message_without_moved_params():

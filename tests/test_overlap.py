@@ -1,0 +1,364 @@
+"""Overlap engine differential suite (core/overlap.py, DESIGN.md §8).
+
+The acceptance contract: RequestPool-scheduled bucketed reduction must be
+*invisible* semantically — on exactly-summable payloads (int32, dyadic
+float32) ``overlap_reduce_tree`` is **bitwise identical** to the per-leaf
+``allreduce`` loop it replaces, at p ∈ {1, 2, 4, 8}, under both
+transports, for every bucket size / in-flight bound / per-bucket
+collective; plus the bucket-planner invariants and the trainer and MoE
+end-to-end paths.
+"""
+import operator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Communicator,
+    KampingError,
+    op,
+    overlap_reduce_tree,
+    plan_buckets,
+    send_buf,
+)
+
+PS = (1, 2, 4, 8)
+TRANSPORTS = ("xla", "pallas")
+
+
+def dyadic(p, shape, seed=0):
+    """float32 multiples of 1/16 with |x| <= 32: every partial sum of up
+    to 8 such values is exact, so any summation order gives the same bits
+    (see tests/test_transports_equivalence.py)."""
+    rng = np.random.RandomState(seed + p)
+    return (rng.randint(-512, 513, size=(p,) + shape) / 16.0).astype(
+        np.float32
+    )
+
+
+def grad_tree(p, seed=0):
+    """A gradient-pytree-shaped payload: mixed leaf sizes, exactly
+    summable, one int leaf to force a dtype bucket break."""
+    return {
+        "emb": dyadic(p, (16, 4), seed=seed),
+        "blocks": [
+            {"w": dyadic(p, (8, 8), seed=seed + 1),
+             "b": dyadic(p, (8,), seed=seed + 2)},
+            {"w": dyadic(p, (8, 8), seed=seed + 3),
+             "b": dyadic(p, (8,), seed=seed + 4)},
+        ],
+        "counts": np.random.RandomState(seed + p).randint(
+            -50, 50, size=(p, 7)
+        ).astype(np.int32),
+        "head": dyadic(p, (4, 16), seed=seed + 5),
+    }
+
+
+def leaf_allreduce_mean(tree, transport_name):
+    """The trainer's existing per-leaf reduction, distilled — the oracle
+    the overlap engine must match bitwise on exact payloads."""
+    comm = Communicator("x", transport=transport_name)
+    inv_p = 1.0 / comm.size()
+    return jax.tree.map(
+        lambda g: comm.allreduce(send_buf(g), op(operator.add)) * inv_p
+        if jnp.issubdtype(g.dtype, jnp.floating)
+        else comm.allreduce(send_buf(g), op(operator.add)),
+        tree,
+    )
+
+
+def overlap_mean(tree, transport_name, **kw):
+    # the engine's own scale: applied to floating leaves, ints summed
+    comm = Communicator("x", transport=transport_name)
+    return overlap_reduce_tree(comm, tree, scale=1.0 / comm.size(), **kw)
+
+
+def spmd(f, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+
+    def body(*ls):
+        return f(jax.tree.unflatten(treedef, ls))
+
+    return jax.vmap(body, axis_name="x")(*leaves)
+
+
+# -- the differential acceptance test ----------------------------------------
+@pytest.mark.pallas
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("mode", ["allreduce", "reduce_scatter"])
+@pytest.mark.parametrize("bucket_bytes,max_inflight", [
+    (1, 1),            # one leaf per bucket, fully serialized pool
+    (256, 2),          # multi-leaf buckets, bounded in-flight window
+    (1 << 20, None),   # everything in one bucket per dtype, unbounded
+])
+def test_overlap_bitwise_vs_leaf_allreduce(p, transport, mode, bucket_bytes,
+                                           max_inflight):
+    tree = grad_tree(p)
+    want = spmd(lambda t: leaf_allreduce_mean(t, transport), tree)
+    got = spmd(
+        lambda t: overlap_mean(
+            t, transport, bucket_bytes=bucket_bytes,
+            max_inflight=max_inflight, mode=mode,
+        ),
+        tree,
+    )
+    for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("p", PS)
+def test_overlap_transports_agree_bitwise(p):
+    """xla vs pallas under the overlap scheduler itself (exact payloads)."""
+    tree = grad_tree(p, seed=20)
+    outs = {
+        t: spmd(
+            lambda tr, t=t: overlap_mean(tr, t, bucket_bytes=128,
+                                         max_inflight=2),
+            tree,
+        )
+        for t in TRANSPORTS
+    }
+    for a, b in zip(jax.tree.leaves(outs["xla"]),
+                    jax.tree.leaves(outs["pallas"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("p", (2, 4))
+def test_overlap_gaussian_allclose(p):
+    """Generic float payloads: reassociation across bucket boundaries may
+    legitimately change low bits — the contract is allclose."""
+    rng = np.random.RandomState(p)
+    tree = {"w": rng.randn(p, 33, 3).astype(np.float32),
+            "b": rng.randn(p, 11).astype(np.float32)}
+    want = spmd(lambda t: leaf_allreduce_mean(t, "xla"), tree)
+    got = spmd(
+        lambda t: overlap_mean(t, "xla", bucket_bytes=64, max_inflight=1,
+                               mode="reduce_scatter"),
+        tree,
+    )
+    for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(w), np.asarray(g),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# -- bucket planner invariants ------------------------------------------------
+def test_plan_buckets_partition_and_order():
+    leaves = [np.zeros((5, 3), np.float32), np.zeros((2,), np.float32),
+              np.zeros((4,), np.int32), np.zeros((7,), np.float32)]
+    plan = plan_buckets(leaves, bucket_bytes=24)
+    seen = [i for b in plan for i in b.indices]
+    # exact partition, reverse (gradient-readiness) order
+    assert sorted(seen) == [0, 1, 2, 3]
+    assert seen == sorted(seen, reverse=True)
+    for b in plan:
+        # dtype-homogeneous, sizes match the leaves
+        assert all(np.dtype(leaves[i].dtype) == np.dtype(b.dtype)
+                   for i in b.indices)
+        assert b.sizes == tuple(leaves[i].size for i in b.indices)
+        assert b.nbytes == sum(leaves[i].nbytes for i in b.indices)
+
+
+def test_plan_buckets_respects_byte_target_and_dtype_breaks():
+    leaves = [np.zeros((4,), np.float32)] * 6  # 16B each
+    plan = plan_buckets(leaves, bucket_bytes=32)
+    # greedy fill: a bucket closes once it has reached the target
+    assert [len(b.indices) for b in plan] == [2, 2, 2]
+    mixed = [np.zeros((4,), np.float32), np.zeros((4,), np.int32),
+             np.zeros((4,), np.float32)]
+    plan = plan_buckets(mixed, bucket_bytes=1 << 20)
+    assert len(plan) == 3  # dtype change closes the bucket
+
+
+def test_plan_buckets_oversized_leaf_and_abstract_values():
+    leaves = [jax.ShapeDtypeStruct((1024,), jnp.float32),
+              jax.ShapeDtypeStruct((2,), jnp.float32)]
+    plan = plan_buckets(leaves, bucket_bytes=64)
+    assert [b.indices for b in plan] == [(1,), (0,)]
+    with pytest.raises(KampingError, match="bucket_bytes"):
+        plan_buckets(leaves, bucket_bytes=0)
+
+
+def test_overlap_scale_leaves_integer_leaves_exact():
+    """scale=1/p must not touch integer leaves (a fractional factor cast
+    to int32 would be 0 and silently zero them — regression)."""
+    p = 2
+    tree = {"g": dyadic(p, (4,), seed=30),
+            "counts": np.array([[4, 8], [6, 2]], np.int32)}
+    out = spmd(lambda t: overlap_reduce_tree(
+        Communicator("x"), t, scale=1.0 / p), tree)
+    np.testing.assert_array_equal(
+        np.asarray(out["counts"]), np.broadcast_to([10, 10], (p, 2))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out["g"]), np.broadcast_to(tree["g"].sum(0) / p, (p, 4))
+    )
+
+
+def test_overlap_shared_pool_leaves_foreign_requests_pending():
+    """pool=: the engine collects only its own buckets; an unrelated
+    in-flight request sharing the pool survives untouched."""
+    from repro.core import RequestPool, send_buf
+
+    p = 2
+    tree = {"w": dyadic(p, (6,), seed=31), "b": dyadic(p, (3,), seed=32)}
+
+    def f(t):
+        comm = Communicator("x")
+        pool = RequestPool(slots=1)  # force backpressure eviction
+        foreign = comm.iallgather(send_buf(t["b"]))
+        pool.submit(foreign)
+        red = overlap_reduce_tree(
+            comm, t, bucket_bytes=16, scale=1.0 / p, pool=pool
+        )
+        # the foreign request is still completable by its owner
+        return red, pool.collect(foreign)
+
+    out, gathered = spmd(f, tree)
+    for k in tree:
+        np.testing.assert_array_equal(
+            np.asarray(out[k]),
+            np.broadcast_to(tree[k].sum(0) / p, tree[k].shape),
+        )
+    assert np.asarray(gathered).shape == (p, p * 3)
+
+
+def test_overlap_empty_tree_and_bad_mode():
+    comm = object()  # never touched for an empty tree
+    assert overlap_reduce_tree(comm, {}) == {}
+    with pytest.raises(KampingError, match="mode"):
+        spmd(
+            lambda t: overlap_reduce_tree(
+                Communicator("x"), t, mode="nope"
+            ),
+            {"w": np.ones((2, 3), np.float32)},
+        )
+
+
+# -- trainer end-to-end --------------------------------------------------------
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_trainer_overlap_matches_allreduce(transport):
+    """grad_reduce='overlap' through TrainConfig/make_train_step: identical
+    updates to grad_reduce='allreduce' (dp=1 ⇒ bitwise, any payload)."""
+    from repro.data import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import ModelConfig
+    from repro.sharding import ShardingProfile
+    from repro.train import AdamWConfig, TrainConfig, Trainer
+
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32",
+        param_dtype="float32",
+    )
+    data = SyntheticLM(vocab_size=128, seq_len=16, batch_size=8, seed=3)
+    batch = next(iter(data))
+    results = {}
+    for mode, extra_kw in (
+        ("allreduce", {}),
+        ("overlap", dict(bucket_bytes=1 << 12, max_inflight=2)),
+        ("overlap-rs", dict(bucket_bytes=1 << 12, max_inflight=1,
+                            overlap_mode="reduce_scatter")),
+    ):
+        mesh = make_host_mesh(shape=(1, 1))
+        profile = ShardingProfile(dp_axes=("data",), tp_axis="model",
+                                  fsdp_axes=None)
+        tcfg = TrainConfig(
+            opt=AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=100),
+            grad_reduce=mode.split("-")[0],
+            transport=transport, **extra_kw,
+        )
+        tr = Trainer(cfg, mesh, profile, tcfg)
+        params, opt, extra = tr.init_state(jax.random.PRNGKey(0))
+        p2, _, _, loss, _ = tr.step_fn()(
+            params, opt, extra, tr.place_batch(batch)
+        )
+        assert np.isfinite(float(loss))
+        results[mode] = p2
+    for key in ("overlap", "overlap-rs"):
+        for la, lb in zip(jax.tree.leaves(results["allreduce"]),
+                          jax.tree.leaves(results[key])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_trainer_rejects_unknown_grad_reduce():
+    from repro.train import TrainConfig
+    from repro.train.trainer import make_train_step
+
+    with pytest.raises(ValueError, match="overlap"):
+        make_train_step(None, TrainConfig(grad_reduce="bogus"), None,
+                        None, None)
+
+
+# -- MoE EP dispatch/combine through the pool ----------------------------------
+@pytest.mark.pallas
+@pytest.mark.parametrize("p", (2, 4))
+@pytest.mark.parametrize("combine", ["gather", "reduce_scatter"])
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_moe_overlap_pool_matches_blocking(p, combine, transport):
+    """moe_forward_ep_local(overlap=True): dispatch/combine as in-flight
+    i* ops in a RequestPool — bitwise identical to the blocking path."""
+    from repro.core import RequestPool
+    from repro.models.config import ModelConfig
+    from repro.models.moe import init_moe, moe_forward_ep_local
+
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=8, top_k=2,
+        moe_d_ff=32, capacity_factor=1.5, dtype="float32",
+        param_dtype="float32",
+    )
+    params = init_moe(jax.random.PRNGKey(0), cfg, ep_size=p)
+    n_loc, d = 8, cfg.d_model
+    x = np.random.RandomState(5 + p).randn(p, n_loc, d).astype(np.float32)
+    e_local = params["wi"].shape[0] // p
+    sh = {k: params[k].reshape(p, e_local, *params[k].shape[1:])
+          for k in ("wi", "wg", "wo")}
+
+    def run(overlap, slots=None):
+        def f(xl, wi, wg, wo):
+            pl = {**params, "wi": wi, "wg": wg, "wo": wo}
+            pool = RequestPool(slots=slots) if slots else None
+            return moe_forward_ep_local(
+                pl, xl, cfg, "x", combine=combine, transport=transport,
+                overlap=overlap, pool=pool,
+            )
+        return jax.vmap(f, axis_name="x")(x, sh["wi"], sh["wg"], sh["wo"])
+
+    base = run(overlap=False)
+    for out in (run(overlap=True),
+                run(overlap=True, slots=1)):  # backpressure-evicted collect
+        np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(out[0]))
+        np.testing.assert_array_equal(np.asarray(base[1]), np.asarray(out[1]))
+
+
+def test_moe_pool_without_overlap_is_rejected():
+    """pool= without overlap=True must raise, not silently go async (a
+    blocking layer pushing requests into a caller's pool is a surprise)."""
+    from repro.core import RequestPool
+    from repro.models.config import ModelConfig
+    from repro.models.moe import init_moe, moe_forward_ep_local
+
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=8, top_k=2,
+        moe_d_ff=32, capacity_factor=1.5, dtype="float32",
+        param_dtype="float32",
+    )
+    params = init_moe(jax.random.PRNGKey(0), cfg, ep_size=2)
+    x = np.zeros((2, 4, cfg.d_model), np.float32)
+    e_local = params["wi"].shape[0] // 2
+    sh = {k: params[k].reshape(2, e_local, *params[k].shape[1:])
+          for k in ("wi", "wg", "wo")}
+
+    def f(xl, wi, wg, wo):
+        pl = {**params, "wi": wi, "wg": wg, "wo": wo}
+        return moe_forward_ep_local(
+            pl, xl, cfg, "x", overlap=False, pool=RequestPool()
+        )
+
+    with pytest.raises(KampingError, match="overlap=True"):
+        jax.vmap(f, axis_name="x")(x, sh["wi"], sh["wg"], sh["wo"])

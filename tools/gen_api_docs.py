@@ -1,0 +1,244 @@
+#!/usr/bin/env python
+"""Generate API.md from the op-spec table (core/opspec.py).
+
+"Every public collective is defined via the op-spec table" is a testable
+property of this codebase (tests/test_opspec.py) — which makes the API
+reference *derivable*: this script walks ``repro.core.OP_TABLE`` (core
+rows plus every plugin row registered at import time) and emits one
+section per collective with its named parameters, count-inference rule,
+capacity policy, and non-blocking ``i*`` variant.
+
+Usage:
+    PYTHONPATH=src python tools/gen_api_docs.py            # (re)write API.md
+    PYTHONPATH=src python tools/gen_api_docs.py --check    # CI freshness gate
+
+``--check`` exits non-zero if API.md is missing or stale (the CI docs job
+and tests/test_api_docs.py both run it), so the reference can never drift
+from the table that defines the surface.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+)
+
+import repro.core  # noqa: E402  (imports register core + plugin specs)
+from repro.core import OP_TABLE  # noqa: E402
+from repro.core.opspec import OP_OWNERS  # noqa: E402
+from repro.core.params import ParamKind as K  # noqa: E402
+
+REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.normpath(os.path.join(REPO_ROOT, "API.md"))
+
+HEADER = """\
+# API reference — table-generated collectives
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with:  PYTHONPATH=src python tools/gen_api_docs.py
+     CI verifies freshness with the --check flag. -->
+
+Every collective below is one row of the declarative op-spec table
+(`src/repro/core/opspec.py`, DESIGN.md §3): the row names the parameter
+interface and count-inference behaviour, a small `lower` function stages
+the data movement, and the shared engine supplies parameter collection,
+capacity policies (DESIGN.md §2), leveled assertions, `Result` packing,
+and the auto-generated non-blocking `i*` variants (paper §III-E).  This
+file is *generated from that table*, so it cannot drift from the code.
+
+Calls take named parameter objects from `repro.core` (`send_buf(x)`,
+`send_counts(c)`, `recv_counts_out()`, …) in any order; see
+`examples/quickstart.py` for the progression from one-liner to fully
+explicit calls.
+
+**Engine-level parameters** accepted by every row:
+
+* `transport("xla" | "pallas" | <registered>)` — the collective backend
+  moving the bytes (DESIGN.md §7).  Resolution: per-call parameter >
+  communicator default (`Communicator(axis, transport=...)`) > `"xla"`.
+
+Non-blocking variants return a `NonBlockingResult`; bulk completion goes
+through `RequestPool` (`waitall` / `testany` / `collect`), the substrate
+of the gradient-overlap engine (`repro.core.overlap`, DESIGN.md §8).
+"""
+
+
+def _kind_name(k) -> str:
+    return k.value
+
+
+def _fmt_required(spec) -> str:
+    parts = []
+    for r in spec.required:
+        if isinstance(r, tuple):
+            parts.append(" \\| ".join(f"`{_kind_name(k)}`" for k in r))
+        else:
+            parts.append(f"`{_kind_name(r)}`")
+    return ", ".join(parts) if parts else "—"
+
+
+def _fmt_accepted(spec) -> str:
+    names = [f"`{_kind_name(k)}`" for k in spec.accepted]
+    names.append("`transport`")  # engine-level: every row accepts it
+    return ", ".join(names)
+
+
+def _count_inference(spec) -> str:
+    """The row's count-inference rule, derived from its parameter kinds
+    and layout (the regimes implemented by the shared lowerings)."""
+    acc = set(spec.accepted)
+    rules = []
+    if K.RECV_COUNTS in acc and spec.bucketed:
+        rules.append(
+            "`recv_counts_out()` — inferred with one staged counts "
+            "transpose (an `all_to_all` of `send_counts`, riding the op's "
+            "own transport/route); a static NumPy `send_counts` resolves "
+            "at trace time with nothing staged"
+        )
+    elif K.RECV_COUNTS in acc:
+        rules.append(
+            "`recv_counts_out()` — static `send_count` (or a static "
+            "per-rank `recv_counts` input) resolves to compile-time "
+            "constants with nothing staged (exact/ragged concatenation); "
+            "a traced `send_count` stages one scalar-count all-gather and "
+            "switches the payload to the padded `i*cap` layout"
+        )
+    if K.RECV_COUNT in acc:
+        rules.append(
+            "`recv_count_out()` — this rank's entry of `send_counts`: a "
+            "trace-time lookup when static, one staged broadcast from "
+            "`root` when traced"
+        )
+    if K.RECV_DISPLS in acc or K.SEND_DISPLS in acc:
+        rules.append(
+            "displacements (`*_displs_out()`) — always derived locally "
+            "(exclusive prefix sums / capacity strides), never staged "
+            "communication"
+        )
+    if not rules:
+        return (
+            "counts are implied by static buffer shapes — nothing is "
+            "inferred and nothing is staged (the zero-overhead path)."
+        )
+    return "; ".join(rules) + "."
+
+
+def _capacity_policy(spec) -> str:
+    if spec.bucketed:
+        txt = (
+            "bucketed `(p, cap, ...)` send layout; `recv_buf(policy)` "
+            "selects the capacity policy — `resize_to_fit` (default), "
+            "`grow_only(c)` (static bound, NORMAL-level overflow "
+            "assertion on shrink), `no_resize` (zero-overhead fast path) "
+            "— see DESIGN.md §2."
+        )
+        if spec.bucket_hint:
+            txt += f"  {spec.bucket_hint}"
+        return txt
+    return (
+        "not bucketed — capacities are the buffer's static shape; "
+        "`send_count`/`recv_counts` (where accepted) mark the valid "
+        "prefix."
+    )
+
+
+def _section(spec) -> str:
+    lines = [f"## `{spec.name}`", ""]
+    doc = (spec.doc or "").strip()
+    if doc:
+        lines += [doc, ""]
+    lines += [
+        "| | |",
+        "|---|---|",
+        f"| required | {_fmt_required(spec)} |",
+        f"| accepted | {_fmt_accepted(spec)} |",
+    ]
+    owner = OP_OWNERS[spec.name]
+    if owner != "Communicator":
+        lines.append(f"| plugin | `{owner}` |")
+    if spec.in_place_ignored:
+        ignored = ", ".join(f"`{_kind_name(k)}`" for k in spec.in_place_ignored)
+        lines.append(
+            f"| in-place | {ignored} rejected when `send_recv_buf` is "
+            "passed (would be ignored) |"
+        )
+    if spec.kw_accepted:
+        kws = ", ".join(f"`{k}=`" for k in spec.kw_accepted)
+        lines.append(f"| keywords | {kws} |")
+    if spec.transport_attr:
+        lines.append(
+            f"| routing | op-level override `{spec.transport_attr}` "
+            "(wins over the `transport(...)` backend for the dense "
+            "exchange) |"
+        )
+    nb = (
+        f"`i{spec.name}(...)` → `NonBlockingResult`"
+        if spec.nonblocking
+        else "none (bulk-synchronous by construction)"
+    )
+    lines.append(f"| non-blocking | {nb} |")
+    if spec.heavy_count_check:
+        lines.append(
+            "| HEAVY assertion | global sent == received, verified over "
+            "the axis (one counts transpose + two psums; staged only at "
+            "`AssertionLevel.HEAVY`) |"
+        )
+    lines += [
+        "",
+        f"**Count inference.** {_count_inference(spec)}",
+        "",
+        f"**Capacity.** {_capacity_policy(spec)}",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def generate() -> str:
+    parts = [HEADER]
+    # Grouping comes from registration provenance (attach_ops records the
+    # owning class in OP_OWNERS), not from name heuristics.
+    core = [s for s in OP_TABLE.values()
+            if OP_OWNERS[s.name] == "Communicator"]
+    plugin = [s for s in OP_TABLE.values()
+              if OP_OWNERS[s.name] != "Communicator"]
+    parts.append(
+        f"\n---\n\n# Core collectives ({len(core)} rows)\n"
+    )
+    parts += [_section(s) for s in core]
+    parts.append(
+        f"---\n\n# Plugin collectives ({len(plugin)} rows)\n\n"
+        "Registered by plugin classes through the *same* table "
+        "(`attach_ops`, paper §III-F): grid rows reuse the flat specs "
+        "verbatim with a 2-hop routing override; sparse rows add the "
+        "`neighbors` parameter kind.\n"
+    )
+    parts += [_section(s) for s in plugin]
+    return "\n".join(parts)
+
+
+def main(argv) -> int:
+    text = generate()
+    if "--check" in argv:
+        if not os.path.exists(OUT_PATH):
+            print("API.md is missing; run: PYTHONPATH=src python "
+                  "tools/gen_api_docs.py")
+            return 1
+        with open(OUT_PATH) as f:
+            on_disk = f.read()
+        if on_disk != text:
+            print("API.md is stale relative to the op-spec table; "
+                  "regenerate with: PYTHONPATH=src python "
+                  "tools/gen_api_docs.py")
+            return 1
+        print(f"API.md is up to date ({len(OP_TABLE)} table rows).")
+        return 0
+    with open(OUT_PATH, "w") as f:
+        f.write(text)
+    print(f"wrote {OUT_PATH} ({len(OP_TABLE)} table rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
