@@ -1,0 +1,116 @@
+"""Flat vs. hierarchical ("hier") two-level gradient reduction.
+
+For every payload size in ``benchmarks/common.PAYLOAD_SIZES`` and group
+size g ∈ {2, 4}, times the table-generated ``allreduce`` under the
+vmap-as-SPMD interpreter at p=8:
+
+* **flat**  — the single-level xla transport (`lax.psum`);
+* **hier**  — `HierTransport(group_size=g)`: intra-group reduce-scatter
+  → cross-group allreduce of the 1/g-sized chunks → intra-group
+  allgather (DESIGN.md §9), per-level backends xla/xla (the pallas
+  intra variant is timed as a third cell at the largest payload).
+
+On CPU this times the *staged op mix* (the transferable number: two
+grouped HLO legs + a 1/g-sized cross-group reduction vs one full-size
+psum); on a TPU mesh the same code measures the real two-fabric win —
+the cross-group fabric only carries 1/g of the payload.  Also reports
+the per-rank **cross-group bytes** per schedule, which is exact at
+trace time and hardware-independent.
+
+Emits the standard report JSON (benchmarks/artifacts/hierarchy.json)
+plus csv_row lines for the console.
+"""
+from __future__ import annotations
+
+import json
+import operator
+import os
+
+import jax
+import numpy as np
+
+from common import PAYLOAD_SIZES, csv_row, time_fn
+from repro.core import Communicator, HierTransport, op, send_buf
+
+P_RANKS = 8
+GROUP_SIZES = (2, 4)
+
+
+def _spmd(f):
+    return jax.jit(jax.vmap(f, axis_name="x"))
+
+
+def _allreduce_fn(transport):
+    return _spmd(
+        lambda v: Communicator("x", transport=transport).allreduce(
+            send_buf(v), op(operator.add)
+        )
+    )
+
+
+def _cross_group_bytes(n: int, g: int | None) -> int:
+    """Per-rank bytes crossing a group boundary per allreduce (float32).
+
+    Flat ring: the whole payload crosses whatever boundary cuts the
+    ring, ~2·(p-1)/p·n elements through every rank.  Hier: only the
+    cross-group allreduce leg leaves the group — ~2·(nb-1)/nb of the
+    1/g-sized chunk.
+    """
+    if g is None:
+        return 4 * 2 * (P_RANKS - 1) * n // P_RANKS
+    nb = P_RANKS // g
+    chunk = -(-n // g)
+    return 4 * 2 * (nb - 1) * chunk // nb
+
+
+def run():
+    rows = []
+    for n in PAYLOAD_SIZES:
+        payload_bytes = n * 4
+        x = np.random.RandomState(0).randn(P_RANKS, n).astype(np.float32)
+
+        cells = [("flat", None, "xla", "xla")]
+        for g in GROUP_SIZES:
+            cells.append((f"hier_g{g}", g, "xla", "xla"))
+        if n == max(PAYLOAD_SIZES):
+            cells.append(
+                (f"hier_g{GROUP_SIZES[-1]}_pallas_intra", GROUP_SIZES[-1],
+                 "pallas", "xla")
+            )
+
+        for name, g, intra, inter in cells:
+            t = (
+                "xla" if g is None
+                else HierTransport(group_size=g, intra=intra, inter=inter)
+            )
+            us = time_fn(_allreduce_fn(t), x) * 1e6
+            xbytes = _cross_group_bytes(n, g)
+            csv_row(
+                f"hierarchy_allreduce_{name}", us,
+                f"p={P_RANKS};payload_bytes={payload_bytes};"
+                f"cross_group_bytes={xbytes}",
+            )
+            rows.append(
+                {
+                    "op": "allreduce",
+                    "schedule": name,
+                    "group_size": g,
+                    "intra": intra,
+                    "inter": inter,
+                    "p": P_RANKS,
+                    "payload_bytes": payload_bytes,
+                    "cross_group_bytes_per_rank": xbytes,
+                    "us": us,
+                }
+            )
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    out_path = os.path.join(art, "hierarchy.json")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

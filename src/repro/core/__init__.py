@@ -50,6 +50,7 @@ from .params import (
     tag,
     transport,
 )
+from .groups import GroupTables, split_groups, validate_groups
 from .plugins import Plugin, attach_ops, register_parameter
 from .transports import (
     PallasTransport,
@@ -59,6 +60,7 @@ from .transports import (
     get_transport,
     register_transport,
 )
+from .hier import HierTransport, default_group_size
 from .reproducible import ReproducibleReduce, tree_reduce_canonical
 from .result import Result
 from .serialization import (
@@ -85,8 +87,9 @@ __all__ = [
     "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
     "send_displs_out", "recv_displs", "recv_displs_out", "op", "root",
     "dest", "source", "tag", "axis", "move", "neighbors", "transport",
-    "Transport", "XlaTransport", "PallasTransport", "register_transport",
-    "get_transport", "available_transports",
+    "Transport", "XlaTransport", "PallasTransport", "HierTransport",
+    "register_transport", "get_transport", "available_transports",
+    "default_group_size", "GroupTables", "split_groups", "validate_groups",
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     "as_serialized", "as_deserializable", "deserialize", "deserialize_like",
     "Serialized", "host_pack", "host_unpack",

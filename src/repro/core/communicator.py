@@ -35,6 +35,7 @@ import numpy as np
 from jax import lax
 
 from ..compat import axis_size as _axis_size
+from . import groups as _groups
 from .errors import KampingError
 from .opspec import OpSpec, Lowering, attach_ops, is_static, static_int
 from .params import ParamKind as K
@@ -83,7 +84,8 @@ class Communicator:
         comm.allgather(send_buf(x), transport("xla"))     # per-call
     """
 
-    def __init__(self, axis: Any = "data", transport: Optional[str] = None):
+    def __init__(self, axis: Any = "data", transport: Optional[str] = None,
+                 groups=None):
         self.axis = axis
         self._axes: Tuple = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
         # Default collective backend for every op on this communicator
@@ -92,18 +94,140 @@ class Communicator:
         if transport is not None:
             get_transport(transport)
         self.transport_name = transport
+        # Group scope (DESIGN.md §9): None = the flat communicator; else a
+        # static partition of the axis ranks (tuple of equally-sized
+        # tuples of global ranks).  Normally produced by split()/
+        # split_by(); validated lazily because the axis size is only
+        # known in trace context.
+        self.groups = (
+            None if groups is None else tuple(tuple(int(r) for r in g)
+                                              for g in groups)
+        )
+        self._gt_cache = None
 
     # -- topology ----------------------------------------------------------
-    def size(self) -> int:
-        """Communicator size. Static at trace time (cf. MPI_Comm_size)."""
+    def _group_tables(self) -> "_groups.GroupTables":
+        """Static lookup tables of this communicator's group structure
+        (requires trace context for the axis size; cached)."""
+        if self.groups is None:
+            raise KampingError("flat communicator has no group tables")
+        if self._gt_cache is None:
+            self._gt_cache = _groups.GroupTables(
+                self.groups, self.world_size()
+            )
+        return self._gt_cache
+
+    def world_size(self) -> int:
+        """Size of the underlying mesh axis (or axes product) — the split
+        communicator's parent world (cf. MPI_COMM_WORLD's size)."""
         n = 1
         for a in self._axes:
             n *= _axis_size(a)
         return n
 
-    def rank(self):
-        """This rank's index (traced value; cf. MPI_Comm_rank)."""
+    def size(self) -> int:
+        """Communicator size. Static at trace time (cf. MPI_Comm_size).
+        For a split communicator this is the *group* size."""
+        if self.groups is not None:
+            return self._group_tables().group_size
+        return self.world_size()
+
+    def global_rank(self):
+        """This rank's index on the underlying mesh axis (traced)."""
         return lax.axis_index(self.axis if len(self._axes) > 1 else self._axes[0])
+
+    def rank(self):
+        """This rank's index (traced value; cf. MPI_Comm_rank).  For a
+        split communicator: the group-relative rank."""
+        if self.groups is not None:
+            t = self._group_tables()
+            return jnp.asarray(t.group_rank)[self.global_rank()]
+        return self.global_rank()
+
+    def group_id(self):
+        """Index of this rank's group (traced; 0 for a flat communicator)."""
+        if self.groups is None:
+            return jnp.zeros((), jnp.int32)
+        return jnp.asarray(self._group_tables().group_id)[self.global_rank()]
+
+    @property
+    def num_groups(self) -> int:
+        """Number of groups (static; 1 for a flat communicator)."""
+        return 1 if self.groups is None else len(self.groups)
+
+    # -- process groups (comm.split; DESIGN.md §9) --------------------------
+    def _with_groups(self, new_groups) -> "Communicator":
+        """Clone (class, plugin state, transport default) with a new group
+        structure."""
+        comm = type(self).__new__(type(self))
+        comm.__dict__.update(self.__dict__)
+        comm.groups = new_groups
+        comm._gt_cache = None
+        return comm
+
+    def split(self, color, key=None) -> "Communicator":
+        """Partition this communicator by color (cf. ``MPI_Comm_split``).
+
+        ``color`` assigns each rank of *this* communicator to a group:
+        a sequence of length ``size()`` (indexed by this communicator's
+        rank) or a rank->color callable.  ``key`` (same indexing)
+        reorders ranks within a group — members are ordered by ``(key,
+        rank)``, ties keeping rank order (MPI's stable-sort contract).
+
+        Colors must be **static** (Python/NumPy values): static colors
+        become static groups at trace time, so membership lowers to
+        ``axis_index_groups`` with nothing staged — the paper's
+        zero-overhead rule.  Traced colors raise a trace-time
+        :class:`KampingError` (the static analogue of a leveled
+        assertion).  Groups must be equally sized (SPMD result shapes
+        are static; there is no ``MPI_UNDEFINED`` opt-out).
+
+        The returned communicator is fully group-scoped: ``rank()`` /
+        ``size()`` are group-relative, and *every* op-spec row —
+        including ``*v`` capacity policies, count inference, and the
+        ``i*`` variants — as well as every transport backend operates
+        within the group.  Splits compose: splitting a split
+        communicator partitions within each existing group.
+        """
+        if len(self._axes) != 1:
+            raise KampingError(
+                "comm.split requires a single-axis communicator (group "
+                f"membership indexes one named axis); got axes "
+                f"{self._axes!r}. A two-axis grid communicator is "
+                "re-expressible as two splits of the flattened axis — "
+                "see DESIGN.md §9."
+            )
+        new_groups = _groups.split_groups(
+            self.groups, self.world_size(), color, key
+        )
+        return self._with_groups(new_groups)
+
+    def split_by(self, *, block: Optional[int] = None,
+                 stride: Optional[int] = None) -> "Communicator":
+        """Structured split shorthands.
+
+        ``split_by(block=g)`` — contiguous blocks of ``g`` ranks (color =
+        ``rank // g``): the intra-node/intra-group communicator of a
+        hierarchical scheme.  ``split_by(stride=g)`` — ranks with equal
+        ``rank % g`` (color = ``rank % g``): the cross-group "peer"
+        communicator connecting equal positions of every block.  Exactly
+        one of the two must be given; it must divide ``size()``.
+        """
+        if (block is None) == (stride is None):
+            raise KampingError(
+                "comm.split_by: pass exactly one of block=... or stride=..."
+            )
+        p = self.size()
+        g = int(block if block is not None else stride)
+        if g <= 0 or p % g:
+            raise KampingError(
+                f"comm.split_by: {'block' if block is not None else 'stride'}"
+                f"={g} must be a positive divisor of the communicator size "
+                f"{p}"
+            )
+        if block is not None:
+            return self.split([r // g for r in range(p)])
+        return self.split([r % g for r in range(p)])
 
     # -- plugin support (paper §III-F) --------------------------------------
     def extend(self, *plugin_classes):
@@ -124,10 +248,42 @@ class Communicator:
                 init(ext)
         return ext
 
+    # -- group-aware primitive helpers --------------------------------------
+    # The scalar collectives every lowering shares: flat communicators use
+    # the plain lax ops; split communicators route through the grouped
+    # lowerings (native axis_index_groups with an interpreter fallback —
+    # core/groups.py, DESIGN.md §9).
+    def _psum(self, x):
+        if self.groups is not None:
+            return _groups.grouped_psum(self, x)
+        return lax.psum(x, self.axis)
+
+    def _pmax(self, x):
+        if self.groups is not None:
+            return _groups.grouped_pmax(self, x)
+        return lax.pmax(x, self.axis)
+
+    def _pmin(self, x):
+        if self.groups is not None:
+            return _groups.grouped_pmin(self, x)
+        return lax.pmin(x, self.axis)
+
+    def _ppermute(self, x, perm):
+        """ppermute with communicator-relative ``perm``: group-relative
+        pairs map to one static global permutation on a split
+        communicator."""
+        if self.groups is not None:
+            return _groups.grouped_ppermute(self, x, perm)
+        return lax.ppermute(x, self.axis, perm)
+
     # -- transports ---------------------------------------------------------
     def _dense_alltoall(self, x):
         """One dense (flat, single-hop) all_to_all over the communicator's
-        axis or axes — rank order is row-major over the axis tuple."""
+        axis or axes — rank order is row-major over the axis tuple.  On a
+        split communicator: the group-scoped exchange of ``(g, ...)``
+        buckets."""
+        if self.groups is not None:
+            return _groups.grouped_all_to_all(self, x)
         ax = self._axes[0] if len(self._axes) == 1 else self._axes
         return lax.all_to_all(x, ax, split_axis=0, concat_axis=0, tiled=True)
 
@@ -143,13 +299,13 @@ class Communicator:
         # ring-bandwidth advantage, and keeping one lowering makes them
         # bitwise transport-invariant by construction.
         if _try_hash_lookup(fn, _MAX_FNS):
-            return lax.pmax(x, self.axis)
+            return self._pmax(x)
         if _try_hash_lookup(fn, _MIN_FNS):
-            return lax.pmin(x, self.axis)
+            return self._pmin(x)
         if _try_hash_lookup(fn, _AND_FNS):
-            return lax.pmin(x.astype(jnp.int32), self.axis).astype(x.dtype)
+            return self._pmin(x.astype(jnp.int32)).astype(x.dtype)
         if _try_hash_lookup(fn, _OR_FNS):
-            return lax.pmax(x.astype(jnp.int32), self.axis).astype(x.dtype)
+            return self._pmax(x.astype(jnp.int32)).astype(x.dtype)
         # Reduction via lambda: left fold in rank order (deterministic,
         # supports non-commutative ops). Staged as gather + lax.scan; the
         # gather is pure data movement, so the result is bitwise identical
@@ -173,19 +329,23 @@ class Communicator:
         if (
             isinstance(r, (int, np.integer))
             and len(self._axes) == 1
+            and self.groups is None
             and hasattr(lax, "pbroadcast")
             and jax.default_backend() == "tpu"
         ):
             # Static root -> the hardware-optimized CollectiveBroadcast HLO.
             # (No CPU lowering exists, so the interpret/dry-run environment
-            # takes the masked-psum path below — semantically identical.)
+            # takes the masked-psum path below — semantically identical.
+            # Split communicators always mask: root is group-relative.)
             return lax.pbroadcast(x, self._axes[0], int(r))
-        # Traced root / multi-axis: masked psum (semantically identical).
+        # Traced root / multi-axis / split: masked (grouped) psum — rank()
+        # is group-relative, so the same root index selects each group's
+        # own root and every group broadcasts independently.
         mask = self.rank() == r
         if x.dtype == jnp.bool_:
             masked = jnp.where(mask, x, False)
-            return lax.pmax(masked.astype(jnp.int32), self.axis).astype(jnp.bool_)
-        return lax.psum(x * mask.astype(x.dtype), self.axis)
+            return self._pmax(masked.astype(jnp.int32)).astype(jnp.bool_)
+        return self._psum(x * mask.astype(x.dtype))
 
     # -- conveniences over the generated surface ------------------------------
     def allreduce_single(self, *args):
@@ -326,12 +486,21 @@ def _lower_alltoallv(low: Lowering):
         lambda: jnp.arange(low.p, dtype=jnp.int32) * x.shape[1],
     )
     if low.value(K.SEND_COUNTS) is not None:  # supplied, not *_out()
-        # Staged counts exchange — evaluated only if requested (the
-        # paper's default-parameter communication).
-        low.emit(
-            "recv_counts",
-            lambda: low.counts_transpose(low.value(K.SEND_COUNTS)),
-        )
+        def _recv_counts():
+            sc = low.value(K.SEND_COUNTS)
+            if is_static(sc):
+                # Zero-overhead inference: a static send_counts vector is
+                # the same trace-time constant on every rank (SPMD stages
+                # one program), so rank j's count toward me is sc[rank] —
+                # a local constant gather, *no* staged transpose.
+                scv = jnp.asarray(np.asarray(sc).reshape(-1), jnp.int32)
+                return jnp.broadcast_to(scv[low.rank()], (low.p,))
+            # Traced counts: the staged transpose (the paper's
+            # default-parameter communication), riding the op's own
+            # transport/route.
+            return low.counts_transpose(sc)
+
+        low.emit("recv_counts", _recv_counts)
     return buf
 
 
@@ -430,7 +599,7 @@ def _lower_scatterv(low: Lowering):
 
 
 def _lower_barrier(low: Lowering):
-    return lax.psum(jnp.zeros((), jnp.int32), low.comm.axis)
+    return low.comm._psum(jnp.zeros((), jnp.int32))
 
 
 def _lower_send_recv(low: Lowering):
@@ -444,7 +613,9 @@ def _lower_send_recv(low: Lowering):
         dfn = low.value(K.DEST)
         p = low.p
         perm = [(i, int(dfn(i)) % p) for i in range(p)]
-    return lax.ppermute(x, low.comm.axis, perm)
+    # perm is communicator-relative: on a split communicator the pairs
+    # are group-rank indices, mapped to one static global permutation.
+    return low.ppermute(x, perm)
 
 
 # --------------------------------------------------------------------------

@@ -18,6 +18,14 @@ re-registered with the 2-hop routing kernel as their transport (the
 policies, count inference (which therefore also rides the 2-hop route),
 assertions, result packing, and the ``i*`` variants all come from the
 shared lowering engine.
+
+Relation to process groups (DESIGN.md §9): on a *single* flattened axis
+the same 2-hop schedule is re-expressible as two split sub-communicators
+— ``comm.split_by(block=cols)`` (the row-local hop) and
+``comm.split_by(stride=cols)`` (the column hop) — which is exactly how
+the ``hier`` transport's ``all_to_all`` (core/hier.py) stages it.  This
+plugin remains the two-*mesh-axis* form, where each hop is
+contention-free on its own physical ICI axis.
 """
 from __future__ import annotations
 

@@ -1,0 +1,199 @@
+"""Hierarchical two-level transport (DESIGN.md §9).
+
+``HierTransport`` is a *composite* collective backend built entirely on
+the process-group machinery: it splits the communicator into
+``split_by(block=group_size)`` (the **intra** level — e.g. the chips of
+one node/pod slice) and ``split_by(stride=group_size)`` (the **inter**
+level — the "peer" communicator connecting equal positions of every
+block), and stages each primitive as the textbook two-level schedule:
+
+* ``allreduce_sum``   — intra reduce-scatter → inter allreduce over the
+  per-chunk leaders (every rank leads its own chunk; this is the
+  generalized "allreduce over group leaders": the leader for chunk ``l``
+  of each block is the block's rank at local index ``l``) → intra
+  allgather.  Wire cost per rank: ``(g-1)/g·n`` intra + inter-allreduce
+  of ``n/g`` + ``(g-1)/g·n`` intra, vs ``2·(p-1)/p·n`` over the flat
+  ring — the win is that the intra legs ride the fast (local) fabric
+  and the slow (cross-group) fabric only carries ``1/g`` of the payload.
+* ``reduce_scatter_sum`` — intra reduce-scatter of the local-index slot
+  bundle, then inter reduce-scatter of the per-block partials.
+* ``all_gather``      — intra allgather, then inter allgather of the
+  block bundles (block-major order = communicator rank order).
+* ``all_to_all``      — the two-hop exchange: hop 1 delivers inside the
+  block to the destination's local index, hop 2 crosses blocks.  This
+  is exactly the grid plugin's 2-hop route re-expressed as two split
+  sub-communicators (DESIGN.md §9 cross-references §3's
+  ``transport_attr`` form).
+
+Each level runs its own base backend (``intra=``/``inter=``, any
+registered transport name — ``"xla"`` HLOs, ``"pallas"`` rings which
+ring-reindex the level's groups, or another composite), so the backend
+choice can follow the topology.  Note: both levels are *split*
+communicators, and the per-device TPU RDMA ring kernels reject split
+communicators (they run the one physical ring), so ``"pallas"`` levels
+currently mean the ppermute reference rings (interpret mode / CPU /
+the SPMD test interpreter); on a TPU backend use ``"xla"`` levels, which
+lower to the grouped collective HLOs.
+
+Because groups are a property of the communicator, the whole stack
+composes: every op-spec table row (``*v`` capacity policies, count
+inference, ``i*`` variants), the overlap engine's bucketed gradient
+reduction, and MoE EP dispatch can select ``transport("hier")`` — or a
+configured instance — without any per-op changes.  Reductions are
+bitwise-identical to the flat transports whenever the payload sums
+exactly (the per-element additions merely re-associate), which the
+differential suite pins (tests/test_groups.py).
+
+The registered default (``transport("hier")``) picks ``group_size`` as
+the largest divisor ``g`` of ``p`` with ``g*g <= p`` (the balanced
+√p-ish split); configure it explicitly with
+``HierTransport(group_size=..., intra=..., inter=...)`` — e.g. via
+``TrainConfig(transport="hier", group_size=...)``.  A degenerate split
+(``group_size`` of 1 or ``p``, e.g. prime ``p``) delegates to the
+single remaining level's backend over the flat communicator.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+from .errors import KampingError
+from .transports import Transport, get_transport, register_transport
+
+__all__ = ["HierTransport", "default_group_size"]
+
+
+def default_group_size(p: int) -> int:
+    """Largest divisor ``g`` of ``p`` with ``g*g <= p`` (1 for prime p)."""
+    best = 1
+    for g in range(1, int(math.isqrt(p)) + 1):
+        if p % g == 0:
+            best = g
+    return best
+
+
+class HierTransport(Transport):
+    """Two-level hierarchical transport over split sub-communicators."""
+
+    name = "hier"
+
+    def __init__(
+        self,
+        group_size: Optional[int] = None,
+        intra: Union[str, Transport] = "xla",
+        inter: Union[str, Transport] = "xla",
+    ):
+        self.group_size = None if group_size is None else int(group_size)
+        self.intra = intra
+        self.inter = inter
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return (
+            f"<transport hier group_size={self.group_size} "
+            f"intra={getattr(self.intra, 'name', self.intra)!r} "
+            f"inter={getattr(self.inter, 'name', self.inter)!r}>"
+        )
+
+    # -- level construction -------------------------------------------------
+    def _levels(self, comm):
+        """Resolve (intra_comm, inter_comm, T_intra, T_inter, g, nb), or a
+        degenerate single-level delegation ``(flat_backend, comm)``."""
+        p = comm.size()
+        g = self.group_size if self.group_size is not None else (
+            default_group_size(p)
+        )
+        if g <= 0 or p % g:
+            raise KampingError(
+                f"transport('hier'): group_size={g} must be a positive "
+                f"divisor of the communicator size {p} "
+                f"(set TrainConfig.group_size / HierTransport(group_size=...) "
+                f"accordingly)"
+            )
+        if g == 1 or g == p:
+            # Degenerate split: only one level remains — delegate to its
+            # backend over the communicator as-is.
+            base = self.intra if g == p else self.inter
+            return get_transport(base), None
+        intra = comm.split_by(block=g)   # contiguous blocks of g ranks
+        inter = comm.split_by(stride=g)  # equal local index across blocks
+        return None, (
+            intra, inter, get_transport(self.intra), get_transport(self.inter),
+            g, p // g,
+        )
+
+    # -- primitives ----------------------------------------------------------
+    def all_gather(self, comm, x, *, tiled: bool = True):
+        flat, lv = self._levels(comm)
+        if flat is not None:
+            return flat.all_gather(comm, x, tiled=tiled)
+        intra, inter, ti, te, g, nb = lv
+        x = jnp.asarray(x)
+        a1 = ti.all_gather(intra, x, tiled=False)        # (g, ...)
+        a2 = te.all_gather(inter, a1, tiled=False)       # (nb, g, ...)
+        out = a2.reshape((nb * g,) + tuple(x.shape))     # comm-rank order
+        if tiled:
+            return out.reshape((-1,) + tuple(x.shape[1:]))
+        return out
+
+    def all_to_all(self, comm, x):
+        flat, lv = self._levels(comm)
+        if flat is not None:
+            return flat.all_to_all(comm, x)
+        intra, inter, ti, te, g, nb = lv
+        x = jnp.asarray(x)
+        p = nb * g
+        if x.shape[0] != p:
+            raise KampingError(
+                f"transport('hier') all_to_all: leading dim {x.shape[0]} "
+                f"must equal the communicator size {p}"
+            )
+        rest = tuple(x.shape[1:])
+        # Hop 1 (intra): deliver each bucket to its destination's local
+        # index within my block, bundled over destination blocks.
+        xg = x.reshape((nb, g) + rest)                   # [dest_block, dest_local]
+        h1 = jnp.moveaxis(xg, 1, 0)                      # (g, nb, ...)
+        a1 = ti.all_to_all(intra, h1)                    # a1[q][b'] = from (my_b, q) to (b', my_l)
+        # Hop 2 (inter): cross to the destination block among same-local
+        # peers.
+        h2 = jnp.moveaxis(a1, 1, 0)                      # (nb, g, ...)
+        a2 = te.all_to_all(inter, h2)                    # a2[kb][q] = from (kb, q) to me
+        return a2.reshape((p,) + rest)
+
+    def reduce_scatter_sum(self, comm, x):
+        flat, lv = self._levels(comm)
+        if flat is not None:
+            return flat.reduce_scatter_sum(comm, x)
+        intra, inter, ti, te, g, nb = lv
+        x = jnp.asarray(x)
+        p = nb * g
+        if x.shape[0] != p:
+            raise KampingError(
+                f"transport('hier') reduce_scatter: leading dim "
+                f"{x.shape[0]} must equal the communicator size {p}"
+            )
+        rest = tuple(x.shape[1:])
+        xg = x.reshape((nb, g) + rest)
+        h = jnp.moveaxis(xg, 1, 0)                       # (g, nb, ...)
+        s1 = ti.reduce_scatter_sum(intra, h)             # (nb, ...): block partials
+        return te.reduce_scatter_sum(inter, s1)          # my slot, fully summed
+
+    def allreduce_sum(self, comm, x):
+        flat, lv = self._levels(comm)
+        if flat is not None:
+            return flat.allreduce_sum(comm, x)
+        intra, inter, ti, te, g, nb = lv
+        x = jnp.asarray(x)
+        shape, dtype = x.shape, x.dtype
+        flat_x = x.reshape(-1)
+        n = flat_x.shape[0]
+        chunk = max(1, -(-n // g))  # ceil
+        blocks = jnp.pad(flat_x, (0, g * chunk - n)).reshape(g, chunk)
+        c1 = ti.reduce_scatter_sum(intra, blocks)        # my chunk, intra-summed
+        c2 = te.allreduce_sum(inter, c1)                 # summed across blocks
+        full = ti.all_gather(intra, c2, tiled=False)     # (g, chunk)
+        return full.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+register_transport(HierTransport())

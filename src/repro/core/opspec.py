@@ -147,15 +147,24 @@ class Lowering:
             if spec.transport_attr is not None
             else None
         )
+        # Group scope (DESIGN.md §9): the communicator's group structure,
+        # exposed to (plugin) lowerings that need the raw partition.
+        # None = flat.  Built-in lowerings need no group-specific code:
+        # `p`/`rank()` are group-relative, and the collective helpers
+        # below are group-scoped via the communicator/transport.
+        self.groups = getattr(comm, "groups", None)
         self._emitted: Dict[str, Any] = {}
         self._overrides: Dict[Any, Any] = {}
 
     # -- topology ----------------------------------------------------------
     @property
     def p(self) -> int:
+        """Communicator size — the *group* size on a split communicator,
+        so every count/capacity/bucket rule is group-scoped for free."""
         return self.comm.size()
 
     def rank(self):
+        """Communicator-relative rank (group-relative when split)."""
         return self.comm.rank()
 
     @property
@@ -199,6 +208,11 @@ class Lowering:
 
     def reduce_scatter_sum(self, x):
         return self.transport.reduce_scatter_sum(self.comm, x)
+
+    def ppermute(self, x, perm):
+        """Communicator-relative ``ppermute`` — group-relative pairs map
+        to one static global permutation on a split communicator."""
+        return self.comm._ppermute(x, perm)
 
     def counts_transpose(self, sc):
         """recv_counts[j] = send_counts of rank j towards me (staged with
@@ -310,10 +324,11 @@ def _validate_and_resize_buckets(low: Lowering):
 
 def _stage_global_count_check(low: Lowering, buf):
     """Communication-level assertion (paper §III-G): total elements sent
-    == total elements received, verified globally over the axis."""
+    == total elements received, verified globally over the communicator
+    (group-scoped on a split communicator)."""
     sc = jnp.asarray(low.value(K.SEND_COUNTS))
-    total_sent = lax.psum(jnp.sum(sc), low.comm.axis)
-    total_recv = lax.psum(jnp.sum(low.counts_transpose(sc)), low.comm.axis)
+    total_sent = low.comm._psum(jnp.sum(sc))
+    total_recv = low.comm._psum(jnp.sum(low.counts_transpose(sc)))
     return _stage_equal_check(buf, total_sent, total_recv)
 
 

@@ -26,8 +26,16 @@ scheduler encodes, and the request pool is the right vocabulary for it:
 
 Buckets are dtype-homogeneous (a bucket is one concatenated flat buffer)
 and transport-aware: each bucket's collective rides the communicator's
-resolved transport (``xla`` HLOs or ``pallas`` ring kernels — DESIGN.md
-§7), so the overlap schedule and the byte-moving backend compose freely.
+resolved transport (``xla`` HLOs, ``pallas`` ring kernels, or the
+two-level ``hier`` transport — DESIGN.md §7/§9), so the overlap schedule
+and the byte-moving backend compose freely.  With
+``Communicator(axis, transport=HierTransport(group_size=g))`` (or
+``TrainConfig(transport="hier", group_size=g, grad_reduce="overlap")``)
+every bucket's reduction is staged hierarchically — intra-group
+reduce-scatter, cross-group allreduce of the 1/g-sized chunks,
+intra-group allgather — while the bucketing/request-pool schedule is
+untouched; the same holds for split (group-scoped) communicators, where
+each group reduces its own buckets independently.
 
 Bitwise contract: reductions are elementwise sums, so on exactly
 summable payloads (ints, dyadic floats — any addition order yields the

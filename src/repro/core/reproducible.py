@@ -27,7 +27,6 @@ size — vs. all-gather of p·payload for gather+local-reduce (the paper's
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
 
 from .errors import KampingError
 from .params import ParamKind as K
@@ -83,7 +82,6 @@ class ReproducibleReduce(Plugin):
             raise KampingError(
                 "reproducible_allreduce requires a single-axis communicator"
             )
-        axis = self._axes[0]
         p = self.size()
         if not _is_pow2(p):
             raise KampingError(
@@ -102,17 +100,21 @@ class ReproducibleReduce(Plugin):
         # Cross-rank levels: at level k, partner pairs are (r, r + 2^k) for
         # r ≡ 0 (mod 2^{k+1}); grouping fixed as fn(left=low rank, right=
         # high rank).  All ranks execute the permute; non-roots carry a
-        # stale value that is masked out of the final broadcast.
-        rank = lax.axis_index(axis)
+        # stale value that is masked out of the final broadcast.  The
+        # schedule is communicator-relative: on a split communicator the
+        # tree runs inside each group (rank() is group-relative and
+        # _ppermute maps the shifts to global permutations), so each
+        # group's result is p-invariant for its own leaf set.
+        rank = self.rank()
         k = 1
         while k < p:
             perm = [(r, (r - k) % p) for r in range(p)]  # shift partials down
-            incoming = lax.ppermute(partial, axis, perm)
+            incoming = self._ppermute(partial, perm)
             combined = fn(partial, incoming)
             is_left = (rank % (2 * k)) == 0
             partial = jnp.where(is_left, combined, partial)
             k *= 2
 
-        # Broadcast the root (rank 0) value.
+        # Broadcast the root (communicator rank 0) value.
         mask = (rank == 0).astype(partial.dtype)
-        return lax.psum(partial * mask, axis)
+        return self._psum(partial * mask)

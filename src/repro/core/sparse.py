@@ -28,7 +28,6 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax.numpy as jnp
-from jax import lax
 
 from .errors import KampingError
 from .opspec import Lowering, OpSpec, attach_ops
@@ -52,19 +51,22 @@ register_parameter("neighbors", neighbors)
 
 
 def _offset_permutes(low: Lowering):
-    """Validate the sparse call shape and yield (index, offset mod p)."""
+    """Validate the sparse call shape and yield (comm, p, offsets)."""
     comm = low.comm
     if len(comm._axes) != 1:
         raise KampingError(
             f"{low.spec.name} requires a single-axis communicator "
             "(collective_permute schedules are per-axis)"
         )
-    return comm._axes[0], low.p, low.value(K.NEIGHBORS)
+    return comm, low.p, low.value(K.NEIGHBORS)
 
 
-def _permute_from_neighbors(values_for, axis, p, offs):
+def _permute_from_neighbors(values_for, comm, p, offs):
     """Stage one ppermute per non-self offset; slot i of the result is the
-    value from rank (rank - offs[i]) % p.  Self-messages stage nothing."""
+    value from rank (rank - offs[i]) % p.  Self-messages stage nothing.
+    Offsets are communicator-relative: on a split communicator the shift
+    runs inside each group (comm._ppermute maps the group-relative
+    schedule to one static global permutation — DESIGN.md §9)."""
     received = []
     for i, off in enumerate(offs):
         off = off % p
@@ -73,33 +75,33 @@ def _permute_from_neighbors(values_for, axis, p, offs):
             received.append(v)  # self-message: no wire traffic staged
             continue
         perm = [(r, (r + off) % p) for r in range(p)]
-        received.append(lax.ppermute(v, axis, perm))
+        received.append(comm._ppermute(v, perm))
     return jnp.stack(received, axis=0)
 
 
 def _lower_alltoallv_sparse(low: Lowering):
-    axis, p, offs = _offset_permutes(low)
+    comm, p, offs = _offset_permutes(low)
     x = low.value(K.SEND_BUF)
     if x.shape[0] != len(offs):
         raise KampingError(
             f"{low.spec.name}: send_buf leading dim {x.shape[0]} != "
             f"len(neighbors)={len(offs)}"
         )
-    buf = _permute_from_neighbors(lambda i: x[i], axis, p, offs)
+    buf = _permute_from_neighbors(lambda i: x[i], comm, p, offs)
 
     if low.value(K.SEND_COUNTS) is not None:  # supplied, not *_out()
         def _recv_counts():
             sc = jnp.asarray(low.value(K.SEND_COUNTS), jnp.int32)
-            return _permute_from_neighbors(lambda i: sc[i], axis, p, offs)
+            return _permute_from_neighbors(lambda i: sc[i], comm, p, offs)
 
         low.emit("recv_counts", _recv_counts)
     return buf
 
 
 def _lower_neighbor_allgather(low: Lowering):
-    axis, p, offs = _offset_permutes(low)
+    comm, p, offs = _offset_permutes(low)
     x = low.value(K.SEND_BUF)
-    return _permute_from_neighbors(lambda i: x, axis, p, offs)
+    return _permute_from_neighbors(lambda i: x, comm, p, offs)
 
 
 class SparseAlltoall(Plugin):

@@ -41,6 +41,7 @@ from typing import Dict, Optional, Union
 import jax.numpy as jnp
 from jax import lax
 
+from . import groups as _groups
 from .errors import KampingError
 
 __all__ = [
@@ -56,7 +57,14 @@ __all__ = [
 
 class Transport:
     """Abstract collective backend: the data-movement primitives the
-    op-spec lowerings are written against."""
+    op-spec lowerings are written against.
+
+    Every primitive takes the communicator first and must honor its
+    *group scope* (``comm.groups``, DESIGN.md §9): on a split
+    communicator the primitive operates within this rank's group —
+    ``comm.size()`` is already the group size, so count inference,
+    capacity policies, and bucket layouts are group-scoped with no
+    per-op changes."""
 
     name: str = "abstract"
 
@@ -86,17 +94,27 @@ class Transport:
 
 
 class XlaTransport(Transport):
-    """XLA collective HLOs — the zero-overhead default."""
+    """XLA collective HLOs — the zero-overhead default.
+
+    Group scope lowers to ``axis_index_groups`` on the native HLOs
+    (static groups, nothing staged beyond the grouped collective); where
+    the running JAX lacks the grouped rule (the vmap-as-SPMD test
+    interpreter; grouped psum under some shard_map versions) the
+    emulation in :mod:`repro.core.groups` takes over transparently."""
 
     name = "xla"
 
     def all_gather(self, comm, x, *, tiled: bool = True):
+        if comm.groups is not None:
+            return _groups.grouped_all_gather(comm, x, tiled=tiled)
         return lax.all_gather(x, comm.axis, axis=0, tiled=tiled)
 
     def all_to_all(self, comm, x):
-        return comm._dense_alltoall(x)
+        return comm._dense_alltoall(x)  # group-aware (DESIGN.md §9)
 
     def reduce_scatter_sum(self, comm, x):
+        if comm.groups is not None:
+            return _groups.grouped_psum_scatter(comm, x)
         if len(comm._axes) == 1:
             return lax.psum_scatter(
                 x, comm._axes[0], scatter_dimension=0, tiled=False
@@ -105,12 +123,20 @@ class XlaTransport(Transport):
         return lax.dynamic_index_in_dim(red, comm.rank(), 0, keepdims=False)
 
     def allreduce_sum(self, comm, x):
-        return lax.psum(x, comm.axis)
+        return comm._psum(x)
 
 
 class PallasTransport(Transport):
     """Ring kernels (repro.kernels.collectives): RDMA rings on TPU,
-    ppermute rings under the SPMD interpreter / CPU."""
+    ppermute rings under the SPMD interpreter / CPU.
+
+    Group scope is handled by **explicit ring reindexing**: a split
+    communicator's group becomes its own ring — the shift permutation
+    runs over each group's member list (every group's ring advances in
+    the same ``ppermute``) and the ring schedule indexes by the
+    group-relative rank.  The per-device TPU RDMA kernels do not take a
+    group structure and *reject* split communicators with a trace-time
+    error (use ``xla`` or the ppermute reference path there)."""
 
     name = "pallas"
 
@@ -128,7 +154,9 @@ class PallasTransport(Transport):
         from ..kernels.collectives import spmd_ring_allgather
 
         x = jnp.asarray(x)
-        out = spmd_ring_allgather(x, self._axis(comm), comm.size())
+        out = spmd_ring_allgather(
+            x, self._axis(comm), comm.size(), groups=comm.groups
+        )
         if tiled:
             # match lax.all_gather(tiled=True): concat along axis 0
             return out.reshape((-1,) + x.shape[1:])
@@ -137,20 +165,22 @@ class PallasTransport(Transport):
     def all_to_all(self, comm, x):
         from ..kernels.collectives import spmd_ring_alltoall
 
-        return spmd_ring_alltoall(jnp.asarray(x), self._axis(comm), comm.size())
+        return spmd_ring_alltoall(
+            jnp.asarray(x), self._axis(comm), comm.size(), groups=comm.groups
+        )
 
     def reduce_scatter_sum(self, comm, x):
         from ..kernels.collectives import spmd_ring_reduce_scatter
 
         return spmd_ring_reduce_scatter(
-            jnp.asarray(x), self._axis(comm), comm.size()
+            jnp.asarray(x), self._axis(comm), comm.size(), groups=comm.groups
         )
 
     def allreduce_sum(self, comm, x):
         from ..kernels.collectives import spmd_ring_allreduce
 
         return spmd_ring_allreduce(
-            jnp.asarray(x), self._axis(comm), comm.size()
+            jnp.asarray(x), self._axis(comm), comm.size(), groups=comm.groups
         )
 
 
@@ -191,11 +221,25 @@ def get_transport(name: Union[str, Transport]) -> Transport:
 
 def resolve_transport(comm, override=None) -> Transport:
     """Per-call resolution: explicit parameter > communicator default >
-    ``xla``."""
-    if override is not None:
-        return get_transport(override)
+    ``xla``.  Unknown names get a diagnostic that also identifies the
+    communicator (its axes and default transport), so a per-call typo is
+    attributable when many communicators are in flight (paper §III-G)."""
     default = getattr(comm, "transport_name", None)
-    return get_transport(default if default is not None else "xla")
+    name = override if override is not None else (
+        default if default is not None else "xla"
+    )
+    try:
+        return get_transport(name)
+    except KampingError as e:
+        default_desc = (
+            getattr(default, "name", default) if default is not None
+            else "None (-> 'xla')"
+        )
+        raise KampingError(
+            f"{e} — while resolving the transport for the communicator "
+            f"over axes {getattr(comm, '_axes', None)!r} "
+            f"(communicator default transport: {default_desc!r})"
+        ) from None
 
 
 register_transport(XlaTransport())

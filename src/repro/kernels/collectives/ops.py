@@ -71,24 +71,46 @@ def _use_device_kernel() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def spmd_ring_allgather(x, axis, p: int):
-    """Ring all-gather of this rank's ``x`` -> stacked (p, ...) result."""
-    if p > 1 and _use_device_kernel():
+def _check_device_groups(name: str, groups) -> None:
+    """The per-device RDMA kernels run one fixed hardware ring; a split
+    communicator must take the ppermute reference (which ring-reindexes
+    per group) or the xla transport.  Rejecting here is a trace-time
+    error (paper §III-G: readable diagnostics over silent wrong data)."""
+    if groups is not None:
+        from repro.core.errors import KampingError
+
+        raise KampingError(
+            f"{name}: the per-device TPU ring kernels do not support "
+            "process groups (the RDMA ring is the physical axis order); "
+            "use transport('xla') on the split communicator, or run the "
+            "ppermute reference path"
+        )
+
+
+def spmd_ring_allgather(x, axis, p: int, groups=None):
+    """Ring all-gather of this rank's ``x`` -> stacked (p, ...) result
+    (per-group rings when ``groups`` is a split structure)."""
+    if p > 1 and groups is None and _use_device_kernel():
         return device_ring_allgather(x, axis, p)
-    return ref.ring_allgather(x, axis, p)
+    if _use_device_kernel():
+        _check_device_groups("spmd_ring_allgather", groups)
+    return ref.ring_allgather(x, axis, p, groups=groups)
 
 
-def spmd_ring_reduce_scatter(x, axis, p: int):
+def spmd_ring_reduce_scatter(x, axis, p: int, groups=None):
     """Streaming ring reduce-scatter (sum) of (p, chunk...) buckets."""
-    if p > 1 and _use_device_kernel():
+    if p > 1 and groups is None and _use_device_kernel():
         return device_ring_reduce_scatter(x, axis, p)
-    return ref.ring_reduce_scatter(x, axis, p)
+    if _use_device_kernel():
+        _check_device_groups("spmd_ring_reduce_scatter", groups)
+    return ref.ring_reduce_scatter(x, axis, p, groups=groups)
 
 
-def spmd_ring_allreduce(x, axis, p: int):
+def spmd_ring_allreduce(x, axis, p: int, groups=None):
     """Ring allreduce (sum) = reduce-scatter + allgather composition."""
     if p == 1 or not _use_device_kernel():
-        return ref.ring_allreduce(x, axis, p)
+        return ref.ring_allreduce(x, axis, p, groups=groups)
+    _check_device_groups("spmd_ring_allreduce", groups)
     return ref.compose_allreduce(
         x,
         p,
@@ -97,6 +119,6 @@ def spmd_ring_allreduce(x, axis, p: int):
     )
 
 
-def spmd_ring_alltoall(x, axis, p: int):
+def spmd_ring_alltoall(x, axis, p: int, groups=None):
     """Offset-scheduled ring personalized exchange of (p, ...) buckets."""
-    return ref.ring_alltoall(x, axis, p)
+    return ref.ring_alltoall(x, axis, p, groups=groups)

@@ -47,6 +47,35 @@ def _right_shift_perm(p: int):
     return [(i, (i + 1) % p) for i in range(p)]
 
 
+# --------------------------------------------------------------------------
+# Explicit ring reindexing for process groups (DESIGN.md §9): a split
+# communicator's group becomes its own ring.  The SPMD references take an
+# optional ``groups`` structure (tuple of equally-sized tuples of global
+# ranks); the shift permutation then runs over each group's member list —
+# every group's ring advances inside the same ppermute — and the ring
+# schedule indexes by the *group-relative* rank.  ``p`` is always the
+# ring length (= group size when grouped).
+# --------------------------------------------------------------------------
+def _ring_shift_perm(p: int, groups, s: int = 1):
+    """Shift-by-s ring permutation: flat, or per-group over member lists."""
+    if groups is None:
+        return [(i, (i + s) % p) for i in range(p)]
+    return [(g[i], g[(i + s) % p]) for g in groups for i in range(p)]
+
+
+def _ring_rank(axis, p: int, groups):
+    """This rank's position on its ring (group-relative when grouped)."""
+    r = lax.axis_index(axis)
+    if groups is None:
+        return r
+    world = max(max(g) for g in groups) + 1
+    table = np.zeros((world,), np.int32)
+    for g in groups:
+        for i, member in enumerate(g):
+            table[member] = i
+    return jnp.asarray(table)[r]
+
+
 def allreduce_chunk(n: int, p: int) -> int:
     """Per-rank chunk length of the ring-allreduce composition.  Every
     implementation (SPMD reference, device kernels, emulation kernels,
@@ -73,30 +102,33 @@ def compose_allreduce(x, p: int, reduce_scatter_fn, allgather_fn):
 # --------------------------------------------------------------------------
 # SPMD (inside vmap / shard_map) references
 # --------------------------------------------------------------------------
-def ring_allgather(x, axis, p: int):
+def ring_allgather(x, axis, p: int, groups=None):
     """Ring all-gather of ``x`` over named ``axis``: returns the stacked
-    ``(p,) + x.shape`` gather, slot ``j`` holding rank j's contribution.
+    ``(p,) + x.shape`` gather, slot ``j`` holding ring-rank j's
+    contribution (``p`` = ring length = group size when ``groups`` is a
+    split structure; see ``_ring_shift_perm``).
 
     Step s delivers the chunk of the s-th left neighbor, exactly the
     per-device RDMA kernel's arrival order.
     """
     if p == 1:
         return x[None]
-    perm = _right_shift_perm(p)
-    r = lax.axis_index(axis)
+    perm = _ring_shift_perm(p, groups)
+    r = _ring_rank(axis, p, groups)
     cur = x
-    held = [x]  # after s hops we hold the chunk of rank (r - s) % p
+    held = [x]  # after s hops we hold the chunk of ring rank (r - s) % p
     for _ in range(p - 1):
         cur = lax.ppermute(cur, axis, perm)
         held.append(cur)
     stacked = jnp.stack(held)
-    # out[j] = chunk of rank j = held[(r - j) % p]
+    # out[j] = chunk of ring rank j = held[(r - j) % p]
     return jnp.take(stacked, jnp.mod(r - jnp.arange(p), p), axis=0)
 
 
-def ring_reduce_scatter(x, axis, p: int):
+def ring_reduce_scatter(x, axis, p: int, groups=None):
     """Streaming ring reduce-scatter (sum): ``x`` is ``(p, chunk...)``,
-    slot j = this rank's contribution to rank j; returns rank r's chunk.
+    slot j = this rank's contribution to ring rank j; returns ring rank
+    r's chunk (group-scoped when ``groups`` is given).
 
     Chunk j starts at rank ``(j+1) % p`` and hops right, each rank adding
     its own contribution — the left-fold order ``j+1, j+2, ..., j`` (mod
@@ -104,8 +136,8 @@ def ring_reduce_scatter(x, axis, p: int):
     """
     if p == 1:
         return x[0]
-    perm = _right_shift_perm(p)
-    r = lax.axis_index(axis)
+    perm = _ring_shift_perm(p, groups)
+    r = _ring_rank(axis, p, groups)
     acc = lax.dynamic_index_in_dim(x, jnp.mod(r - 1, p), 0, keepdims=False)
     for s in range(1, p):
         acc = lax.ppermute(acc, axis, perm)
@@ -115,7 +147,7 @@ def ring_reduce_scatter(x, axis, p: int):
     return acc  # the fully accumulated chunk r
 
 
-def ring_allreduce(x, axis, p: int):
+def ring_allreduce(x, axis, p: int, groups=None):
     """Bandwidth-optimal ring allreduce (sum): reduce-scatter the payload
     split into p chunks, then ring-allgather the reduced chunks —
     the composition the paper's layering makes a one-liner."""
@@ -124,25 +156,26 @@ def ring_allreduce(x, axis, p: int):
     return compose_allreduce(
         x,
         p,
-        lambda blocks: ring_reduce_scatter(blocks, axis, p),
-        lambda mine: ring_allgather(mine, axis, p),
+        lambda blocks: ring_reduce_scatter(blocks, axis, p, groups=groups),
+        lambda mine: ring_allgather(mine, axis, p, groups=groups),
     )
 
 
-def ring_alltoall(x, axis, p: int):
+def ring_alltoall(x, axis, p: int, groups=None):
     """Ring (offset-scheduled) personalized exchange: ``x`` is ``(p, ...)``
     buckets by destination; returns the same layout with bucket j holding
-    what rank j sent here.  Offset s is one shift-by-s permute, so the
-    exchange is p-1 contention-free hops instead of one dense all-to-all."""
+    what ring rank j sent here.  Offset s is one shift-by-s permute, so the
+    exchange is p-1 contention-free hops instead of one dense all-to-all
+    (per-group rings when ``groups`` is given)."""
     if p == 1:
         return x
-    r = lax.axis_index(axis)
+    r = _ring_rank(axis, p, groups)
     pieces = [lax.dynamic_index_in_dim(x, r, 0, keepdims=False)]  # own bucket
     for s in range(1, p):
         payload = lax.dynamic_index_in_dim(
             x, jnp.mod(r + s, p), 0, keepdims=False
         )
-        recv = lax.ppermute(payload, axis, [(i, (i + s) % p) for i in range(p)])
+        recv = lax.ppermute(payload, axis, _ring_shift_perm(p, groups, s))
         pieces.append(recv)
     # pieces[s] came from rank (r - s) % p — the same inverse permutation
     # as ring_allgather: out[j] = pieces[(r - j) % p].

@@ -141,7 +141,7 @@ def _dispatch_slots(experts, gates, e_pad: int, cap_e: int):
 
 def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
                          combine="gather", transport=None, overlap=False,
-                         pool=None):
+                         pool=None, group_size=None):
     """EP MoE body — call INSIDE shard_map.
 
     p_local: expert bank sharded over ``ep_axis`` -> local (E_local, d, ff);
@@ -163,6 +163,21 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
     the layer's collectives are table rows, so re-targeting them is one
     constructor argument.
 
+    ``group_size`` (DESIGN.md §9): grouped expert parallelism over a
+    *sub-communicator*.  The EP axis is split into contiguous blocks of
+    ``group_size`` ranks (``comm.split_by(block=group_size)``); experts
+    are sharded *within* a group and replicated *across* groups, so
+    dispatch/combine traffic never crosses a group boundary — the
+    multi-tenant / topology-bounded EP pattern (dispatch stays on the
+    fast intra-group fabric; smaller alltoall fan-in at equal local
+    batch).  Because groups are a property of the communicator, the
+    dispatch below is byte-for-byte the same code: ``comm.size()`` is
+    the group size and every collective is group-scoped.  Each group
+    must hold the full (padded) expert bank: ``p_local`` then has
+    ``e_pad // group_size`` local experts.  Incompatible with
+    ``use_grid`` (the grid communicator spans two mesh axes; a split
+    needs one).
+
     ``overlap`` / ``pool`` (DESIGN.md §8): with ``overlap=True`` the
     dispatch and combine exchanges are issued as non-blocking ``i*``
     table variants tracked in a :class:`~repro.core.RequestPool` and
@@ -183,6 +198,14 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
         from repro.core import GridCommunicator
 
         comm = comm.extend(GridCommunicator)
+    if group_size is not None:
+        if use_grid:
+            raise KampingError(
+                "moe_forward_ep_local: group_size= is incompatible with "
+                "use_grid=True (the grid communicator spans two mesh axes; "
+                "a split needs one) — drop one of them"
+            )
+        comm = comm.split_by(block=group_size)
     if pool is not None and not overlap:
         raise KampingError(
             "moe_forward_ep_local: pool= is only meaningful with "

@@ -119,20 +119,49 @@ def _moe_apply(p, x, cfg, runtime):
     dp, tp = runtime.batch_spec_axes, runtime.tp_axis
     P = jax.sharding.PartitionSpec
     if mode == "ep_alltoall":
+        g = runtime.moe_group_size
+
         def body(px, xx):
             n = xx.shape[0] * xx.shape[1]
+            if g is not None:
+                # Grouped EP (DESIGN.md §9): experts sharded *within* a
+                # contiguous block of g ranks, replicated across blocks.
+                # "Shard within group, replicate across groups" is not a
+                # flat-axis PartitionSpec, so the bank arrives replicated
+                # and each rank slices its intra-group shard (local index
+                # = axis rank % g, matching split_by(block=g)).
+                if px["wi"].shape[0] % g:
+                    raise ValueError(
+                        f"moe_group_size={g} must divide the padded expert "
+                        f"bank size {px['wi'].shape[0]} (init the bank with "
+                        f"ep_size=moe_group_size so padded_num_experts "
+                        f"rounds up accordingly); otherwise the trailing "
+                        f"experts would be silently unreachable"
+                    )
+                e_local = px["wi"].shape[0] // g
+                lr = jax.lax.axis_index(tp) % g
+
+                def shard(w):
+                    return jax.lax.dynamic_slice_in_dim(
+                        w, lr * e_local, e_local, 0
+                    )
+
+                px = {**px, "wi": shard(px["wi"]), "wg": shard(px["wg"]),
+                      "wo": shard(px["wo"])}
             out, aux = moe_mod.moe_forward_ep_local(
                 px, xx.reshape(n, d), cfg, tp, use_grid=runtime.moe_grid,
                 transport=runtime.moe_transport,
+                group_size=g,
             )
             return out.reshape(xx.shape), aux[None]
 
+        bank_spec = P() if g is not None else P(tp, None, None)
         in_specs = (
             {
                 "router": P(),
-                "wi": P(tp, None, None),
-                "wg": P(tp, None, None),
-                "wo": P(tp, None, None),
+                "wi": bank_spec,
+                "wg": bank_spec,
+                "wo": bank_spec,
                 **(
                     {
                         "shared": P(),
@@ -249,6 +278,10 @@ class Runtime:
     # Collective backend for the EP dispatch/combine ("xla" | "pallas" |
     # None = xla; DESIGN.md §7) — threaded into moe_forward_ep_local.
     moe_transport: Optional[str] = None
+    # Grouped EP (DESIGN.md §9): split the EP axis into contiguous
+    # blocks of this size; experts sharded within a group, replicated
+    # across groups, dispatch never crosses a group boundary.
+    moe_group_size: Optional[int] = None
     decode_sp: bool = False  # sequence-parallel (flash-decode) cache mode
     force_moe_mode: Optional[str] = None
     # streaming-ZeRO-3 use constraints (sharding.rules.use_shardings):

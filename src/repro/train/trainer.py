@@ -69,8 +69,15 @@ class TrainConfig:
     microbatches: int = 1  # grad accumulation steps (per device for manual)
     aux_weight: float = 0.01
     # Collective backend for the manual-DP modes' communicator
-    # (None -> "xla"; "pallas" -> ring kernels; DESIGN.md §7).
+    # (None -> "xla"; "pallas" -> ring kernels; "hier" -> the two-level
+    # hierarchical transport, DESIGN.md §7/§9).
     transport: Optional[str] = None
+    # transport="hier" knobs (core/hier.py): ranks per intra group
+    # (None -> the balanced sqrt-ish default divisor of the dp size) and
+    # the per-level base backends (intra-group / cross-group).
+    group_size: Optional[int] = None
+    hier_intra: str = "xla"
+    hier_inter: str = "xla"
     # grad_reduce="overlap" knobs (core/overlap.py, DESIGN.md §8):
     # target bytes per gradient bucket, fixed-slot in-flight bound, and
     # the per-bucket collective ("allreduce" | "reduce_scatter" — the
@@ -142,6 +149,35 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
     dp_name = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     dp_set = set(dp_axes)
 
+    # Transport resolution (DESIGN.md §7/§9): "hier" with explicit knobs
+    # becomes a configured HierTransport instance (two-level reduction:
+    # intra-group reduce-scatter -> cross-group allreduce -> intra-group
+    # allgather, per-level backends); plain names pass through.
+    grad_transport = tcfg.transport
+    if grad_transport == "hier" and (
+        tcfg.group_size is not None
+        or tcfg.hier_intra != "xla"
+        or tcfg.hier_inter != "xla"
+    ):
+        from repro.core import HierTransport
+
+        grad_transport = HierTransport(
+            group_size=tcfg.group_size,
+            intra=tcfg.hier_intra,
+            inter=tcfg.hier_inter,
+        )
+    elif (
+        tcfg.group_size is not None
+        or tcfg.hier_intra != "xla"
+        or tcfg.hier_inter != "xla"
+    ):
+        raise ValueError(
+            f"TrainConfig.group_size/hier_intra/hier_inter are only "
+            f"meaningful with transport='hier' (got "
+            f"transport={tcfg.transport!r}, group_size={tcfg.group_size}, "
+            f"hier_intra={tcfg.hier_intra!r}, hier_inter={tcfg.hier_inter!r})"
+        )
+
     def microbatch_grads(params, batch):
         """Per-microbatch fp32 leaf grads + losses (shared by the manual
         modes that honor grad accumulation)."""
@@ -177,7 +213,7 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
                 (loss, _), grads = jax.value_and_grad(
                     loss_fn, has_aux=True
                 )(params, batch)
-            comm = Communicator(dp_name, transport=tcfg.transport)
+            comm = Communicator(dp_name, transport=grad_transport)
             inv_p = 1.0 / comm.size()
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
@@ -200,7 +236,7 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
             return grads, None, loss
         # reproducible: per-microbatch leaf grads -> canonical tree
         stacked, losses = microbatch_grads(params, batch)
-        comm = Communicator(dp_name, transport=tcfg.transport).extend(
+        comm = Communicator(dp_name, transport=grad_transport).extend(
             ReproducibleReduce
         )
 

@@ -1,0 +1,142 @@
+"""Property-based invariants of the comm.split machinery (DESIGN.md §9).
+
+Runs with `hypothesis` when installed and with the deterministic
+tests/_hypothesis_compat.py fallback offline.  The properties are the
+``MPI_Comm_split`` contract, checked on the pure trace-time machinery
+(:func:`repro.core.split_groups`) plus traced spot checks:
+
+* **partition** — for any even coloring, the produced groups are
+  disjoint, cover every rank exactly once, and are equally sized;
+* **color scoping** — two ranks land in the same group iff they chose
+  the same color (within the same parent group);
+* **key reordering** — members are ordered by ``(key, rank)``: keys
+  reorder ranks within a group, ties keep rank order (stable sort), and
+  an all-equal key vector is a no-op;
+* **composition** — ``split`` of a ``split`` equals one direct split by
+  the combined color (splits refine partitions).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, strategies as st
+from repro.core import KampingError, split_groups, validate_groups
+
+pytestmark = pytest.mark.pallas
+
+PS = (2, 4, 8, 12, 16)
+
+
+@st.composite
+def even_coloring(draw):
+    """(p, colors) where every color class has equal cardinality."""
+    p = draw(st.sampled_from(PS))
+    divisors = [d for d in range(1, p + 1) if p % d == 0]
+    k = draw(st.sampled_from(divisors))  # number of groups
+    base = [c for c in range(k) for _ in range(p // k)]
+    # random permutation via sort keys
+    keys = [draw(st.integers(min_value=0, max_value=10**6)) for _ in range(p)]
+    order = sorted(range(p), key=lambda i: (keys[i], i))
+    colors = [0] * p
+    for slot, r in zip(order, range(p)):
+        colors[slot] = base[r]
+    return p, colors
+
+
+@given(even_coloring())
+def test_split_partitions_ranks(case):
+    p, colors = case
+    groups = split_groups(None, p, colors)
+    flat = [r for g in groups for r in g]
+    # disjoint + covering
+    assert sorted(flat) == list(range(p))
+    # uniform size
+    assert len({len(g) for g in groups}) == 1
+    # color scoping: same group <-> same color
+    gid = {}
+    for i, g in enumerate(groups):
+        for r in g:
+            gid[r] = i
+    for a in range(p):
+        for b in range(p):
+            assert (gid[a] == gid[b]) == (colors[a] == colors[b])
+    # validate_groups round-trips its own output
+    assert validate_groups(groups, p) == groups
+
+
+@st.composite
+def keyed_coloring(draw):
+    p = draw(st.sampled_from((4, 8)))
+    colors = [r % 2 for r in range(p)]
+    keys = [draw(st.integers(min_value=0, max_value=3)) for _ in range(p)]
+    return p, colors, keys
+
+
+@given(keyed_coloring())
+def test_key_orders_stably(case):
+    """Members are sorted by (key, rank): reordering is exactly the
+    stable sort of the parent order by key."""
+    p, colors, keys = case
+    groups = split_groups(None, p, colors, keys)
+    for g in groups:
+        want = sorted(g, key=lambda r: (keys[r], r))
+        assert list(g) == want
+    # equal keys are a no-op
+    same = split_groups(None, p, colors, [7] * p)
+    assert same == split_groups(None, p, colors)
+
+
+@st.composite
+def nested_coloring(draw):
+    p = draw(st.sampled_from((4, 8, 16)))
+    outer_k = draw(st.sampled_from([d for d in (2, 4) if p % d == 0]))
+    g1 = p // outer_k
+    inner_k = draw(st.sampled_from([d for d in (1, 2) if g1 % d == 0]))
+    outer = [r // g1 for r in range(p)]
+    inner = [i % inner_k for i in range(g1)]
+    return p, outer, inner, inner_k
+
+
+@given(nested_coloring())
+def test_split_of_split_composes(case):
+    """Splitting a split refines the partition: the nested result equals
+    one direct split by the combined (outer, inner) color."""
+    p, outer, inner, inner_k = case
+    first = split_groups(None, p, outer)
+    nested = split_groups(first, p, inner)
+    # direct: color = (outer color, inner color of the rank's position
+    # within its outer group)
+    pos = {}
+    for g in first:
+        for i, r in enumerate(g):
+            pos[r] = i
+    combined = [outer[r] * inner_k + inner[pos[r]] for r in range(p)]
+    direct = split_groups(None, p, combined)
+    assert sorted(nested) == sorted(direct)
+
+
+@given(even_coloring())
+def test_split_accepts_callable_colors(case):
+    p, colors = case
+    assert split_groups(None, p, lambda r: colors[r]) == split_groups(
+        None, p, colors
+    )
+
+
+def test_uneven_coloring_rejected():
+    with pytest.raises(KampingError, match="same size"):
+        split_groups(None, 4, [0, 0, 0, 1])
+
+
+def test_wrong_length_rejected():
+    with pytest.raises(KampingError, match="one entry per rank"):
+        split_groups(None, 4, [0, 1])
+
+
+def test_overlapping_groups_rejected():
+    with pytest.raises(KampingError, match="more than one group"):
+        validate_groups(((0, 1), (1, 2)), 4)
+
+
+def test_noncovering_groups_rejected():
+    with pytest.raises(KampingError, match="missing"):
+        validate_groups(((0, 1),), 4)

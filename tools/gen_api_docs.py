@@ -55,13 +55,52 @@ explicit calls.
 
 **Engine-level parameters** accepted by every row:
 
-* `transport("xla" | "pallas" | <registered>)` — the collective backend
-  moving the bytes (DESIGN.md §7).  Resolution: per-call parameter >
-  communicator default (`Communicator(axis, transport=...)`) > `"xla"`.
+* `transport("xla" | "pallas" | "hier" | <registered>)` — the collective
+  backend moving the bytes (DESIGN.md §7/§9).  Resolution: per-call
+  parameter > communicator default (`Communicator(axis, transport=...)`)
+  > `"xla"`.  `"hier"` is the composite two-level transport
+  (`repro.core.hier.HierTransport`): intra-group reduce-scatter →
+  cross-group allreduce → intra-group allgather for reductions, the
+  two-hop exchange for `all_to_all`, with per-level base backends
+  (`HierTransport(group_size=..., intra=..., inter=...)`).
 
 Non-blocking variants return a `NonBlockingResult`; bulk completion goes
 through `RequestPool` (`waitall` / `testany` / `collect`), the substrate
 of the gradient-overlap engine (`repro.core.overlap`, DESIGN.md §8).
+"""
+
+GROUPS_SECTION = """\
+---
+
+# Process groups (`comm.split`) — DESIGN.md §9
+
+Groups are a property of the **communicator**, not of any one op: every
+row below runs group-scoped on a split communicator with no per-op
+changes (`size()` is the group size, so count inference, capacity
+policies, and bucket layouts follow automatically; `root`, `dest`, and
+`perm=` indices are group-relative).
+
+* `comm.split(color, key=None)` — partition by color
+  (cf. `MPI_Comm_split`).  `color`/`key` are indexed by this
+  communicator's rank: a sequence of length `size()` or a rank->value
+  callable.  Members are ordered by `(key, rank)` (stable).  Colors
+  must be **static** — static colors become static groups at trace
+  time, lowered to `axis_index_groups` (the zero-overhead rule); traced
+  colors raise a trace-time `KampingError`.  Groups must be equally
+  sized (SPMD shapes are static; no `MPI_UNDEFINED` opt-out).  Splits
+  compose: splitting a split communicator partitions within each group.
+* `comm.split_by(block=g)` — contiguous blocks of `g` ranks
+  (color = `rank // g`); `comm.split_by(stride=g)` — equal
+  `rank % g` across blocks (the cross-block "peer" communicator).
+* Topology queries: `rank()` / `size()` are group-relative;
+  `global_rank()` / `world_size()` address the underlying axis;
+  `group_id()` / `num_groups` identify the group structure.
+* Transports: `xla` lowers membership to `axis_index_groups` (with a
+  transparent emulation where the running JAX lacks the grouped rule —
+  e.g. the vmap-as-SPMD interpreter); `pallas` ring-reindexes each
+  group into its own ring; `hier` splits further (two-level schedule
+  inside each group).  The per-device TPU RDMA ring kernels reject
+  split communicators with a trace-time error.
 """
 
 
@@ -196,7 +235,7 @@ def _section(spec) -> str:
 
 
 def generate() -> str:
-    parts = [HEADER]
+    parts = [HEADER, GROUPS_SECTION]
     # Grouping comes from registration provenance (attach_ops records the
     # owning class in OP_OWNERS), not from name heuristics.
     core = [s for s in OP_TABLE.values()
