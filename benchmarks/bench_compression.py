@@ -1,0 +1,101 @@
+"""Compressed vs uncompressed gradient all-reduce (DESIGN.md §10).
+
+For every payload size in ``benchmarks/common.PAYLOAD_SIZES`` and codec
+in the engine registry's built-ins, times the table-generated
+``allreduce`` under the vmap-as-SPMD interpreter at p=8:
+
+* **none**      — the uncompressed baseline (the pre-codec path);
+* **int8-ef**   — int8 + error feedback, exact int32 accumulator;
+* **fp8-e4m3**  — emulated fp8 grid, fp32 accumulator;
+* **topk**      — sparse (index, value) pairs over the sparse plugin's
+  offset-permute exchange.
+
+On CPU the wall numbers characterize the *staged program* (quantize +
+accumulate + dequantize vs one psum); the transferable, hardware-
+independent number is each codec's **wire bytes per rank** — exact at
+trace time (``repro.core.compression.wire_report``) and also surfaced
+by the dry-run's ``grad_wire`` record (~4x for int8 on the gradient
+all-reduce).
+
+Emits the standard report JSON (benchmarks/artifacts/compression.json)
+plus csv_row lines for the console; ``--smoke``/``--out`` follow the
+bench-smoke conventions (tiny payload, 1 rep, schema-identical rows).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import operator
+import os
+
+import jax
+import numpy as np
+
+from common import PAYLOAD_SIZES, SMOKE_PAYLOAD_SIZES, csv_row, make_timer
+from repro.core import Communicator, compression, op, send_buf, wire_report
+
+P_RANKS = 8
+CODECS = (None, "int8-ef", "fp8-e4m3", "topk")
+
+
+def _spmd(f):
+    return jax.jit(jax.vmap(f, axis_name="x"))
+
+
+def _allreduce_fn(codec):
+    def f(v):
+        comm = Communicator("x")
+        if codec is None:
+            return comm.allreduce(send_buf(v), op(operator.add))
+        return comm.allreduce(
+            send_buf(v), op(operator.add), compression(codec)
+        )
+
+    return _spmd(f)
+
+
+def run(smoke: bool = False, out: str | None = None):
+    time_fn = make_timer(smoke)
+    rows = []
+    for n in (SMOKE_PAYLOAD_SIZES if smoke else PAYLOAD_SIZES):
+        payload_bytes = n * 4
+        x = np.random.RandomState(0).randn(P_RANKS, n).astype(np.float32)
+        for codec in CODECS:
+            us = time_fn(_allreduce_fn(codec), x) * 1e6
+            rep = wire_report(
+                [np.zeros((n,), np.float32)], codec
+            )
+            csv_row(
+                f"compression_allreduce_{codec or 'none'}", us,
+                f"p={P_RANKS};payload_bytes={payload_bytes};"
+                f"wire_bytes={rep['wire_bytes']};"
+                f"ratio={rep['ratio']:.2f}",
+            )
+            rows.append(
+                {
+                    "op": "allreduce",
+                    "codec": codec,
+                    "p": P_RANKS,
+                    "payload_bytes": payload_bytes,
+                    "wire_bytes_per_rank": rep["wire_bytes"],
+                    "wire_ratio": rep["ratio"],
+                    "us": us,
+                }
+            )
+    out_path = out or os.path.join(
+        os.path.dirname(__file__), "artifacts", "compression.json"
+    )
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny payloads, 1 rep (CI schema check)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    a = ap.parse_args()
+    run(smoke=a.smoke, out=a.out)

@@ -22,6 +22,7 @@ plus csv_row lines for the console.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import operator
 import os
@@ -29,11 +30,12 @@ import os
 import jax
 import numpy as np
 
-from common import PAYLOAD_SIZES, csv_row, time_fn
+from common import PAYLOAD_SIZES, SMOKE_PAYLOAD_SIZES, csv_row, make_timer
 from repro.core import Communicator, HierTransport, op, send_buf
 
 P_RANKS = 8
 GROUP_SIZES = (2, 4)
+SMOKE_GROUP_SIZES = (2,)
 
 
 def _spmd(f):
@@ -63,18 +65,21 @@ def _cross_group_bytes(n: int, g: int | None) -> int:
     return 4 * 2 * (nb - 1) * chunk // nb
 
 
-def run():
+def run(smoke: bool = False, out: str | None = None):
+    time_fn = make_timer(smoke)
+    payload_sizes = SMOKE_PAYLOAD_SIZES if smoke else PAYLOAD_SIZES
+    group_sizes = SMOKE_GROUP_SIZES if smoke else GROUP_SIZES
     rows = []
-    for n in PAYLOAD_SIZES:
+    for n in payload_sizes:
         payload_bytes = n * 4
         x = np.random.RandomState(0).randn(P_RANKS, n).astype(np.float32)
 
         cells = [("flat", None, "xla", "xla")]
-        for g in GROUP_SIZES:
+        for g in group_sizes:
             cells.append((f"hier_g{g}", g, "xla", "xla"))
-        if n == max(PAYLOAD_SIZES):
+        if n == max(payload_sizes):
             cells.append(
-                (f"hier_g{GROUP_SIZES[-1]}_pallas_intra", GROUP_SIZES[-1],
+                (f"hier_g{group_sizes[-1]}_pallas_intra", group_sizes[-1],
                  "pallas", "xla")
             )
 
@@ -103,9 +108,10 @@ def run():
                     "us": us,
                 }
             )
-    art = os.path.join(os.path.dirname(__file__), "artifacts")
-    os.makedirs(art, exist_ok=True)
-    out_path = os.path.join(art, "hierarchy.json")
+    out_path = out or os.path.join(
+        os.path.dirname(__file__), "artifacts", "hierarchy.json"
+    )
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {out_path} ({len(rows)} rows)")
@@ -113,4 +119,9 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny payloads, 1 rep (CI schema check)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    a = ap.parse_args()
+    run(smoke=a.smoke, out=a.out)

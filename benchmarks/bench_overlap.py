@@ -20,6 +20,7 @@ lines for the console.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import operator
 import os
@@ -27,7 +28,7 @@ import os
 import jax
 import numpy as np
 
-from common import csv_row, time_fn
+from common import csv_row, make_timer
 from repro.core import Communicator, op, overlap_reduce_tree, send_buf
 
 P_RANKS = 8
@@ -37,13 +38,17 @@ TRANSPORTS = ("xla", "pallas")
 LEAF_SIZES = [64] * 24 + [4096] * 8 + [65536] * 4
 BUCKET_BYTES = (1 << 14, 1 << 18, 1 << 22)
 MAX_INFLIGHT = (1, 2, 4)
+# --smoke: one cell per dimension, a toy tree — schema-identical rows.
+SMOKE_LEAF_SIZES = [64] * 4 + [1024] * 2
+SMOKE_BUCKET_BYTES = (1 << 12,)
+SMOKE_MAX_INFLIGHT = (2,)
 
 
-def make_tree(p):
+def make_tree(p, leaf_sizes=LEAF_SIZES):
     rng = np.random.RandomState(0)
     return {
         f"leaf{i:02d}": rng.randn(p, n).astype(np.float32)
-        for i, n in enumerate(LEAF_SIZES)
+        for i, n in enumerate(leaf_sizes)
     }
 
 
@@ -92,9 +97,12 @@ def collectives_issued(tree, bucket_bytes=None, mode="allreduce"):
     return n_buckets * (2 if mode == "reduce_scatter" else 1)
 
 
-def run():
+def run(smoke: bool = False, out: str | None = None):
+    time_fn = make_timer(smoke)
+    bucket_bytes = SMOKE_BUCKET_BYTES if smoke else BUCKET_BYTES
+    max_inflight = SMOKE_MAX_INFLIGHT if smoke else MAX_INFLIGHT
     rows = []
-    tree = make_tree(P_RANKS)
+    tree = make_tree(P_RANKS, SMOKE_LEAF_SIZES if smoke else LEAF_SIZES)
     total_bytes = sum(v.nbytes // P_RANKS for v in tree.values())
     for t in TRANSPORTS:
         base = leaf_allreduce(t)
@@ -109,8 +117,8 @@ def run():
             "collectives_issued": n_ops,
         })
         for mode in ("allreduce", "reduce_scatter"):
-            for bb in BUCKET_BYTES:
-                for infl in MAX_INFLIGHT:
+            for bb in bucket_bytes:
+                for infl in max_inflight:
                     fn = overlap(t, bb, infl, mode)
                     us = time_fn(spmd(fn), tree) * 1e6
                     n_ops = collectives_issued(tree, bb, mode)
@@ -127,9 +135,10 @@ def run():
                         "mode": mode, "us": us,
                         "collectives_issued": n_ops,
                     })
-    art = os.path.join(os.path.dirname(__file__), "artifacts")
-    os.makedirs(art, exist_ok=True)
-    out_path = os.path.join(art, "overlap.json")
+    out_path = out or os.path.join(
+        os.path.dirname(__file__), "artifacts", "overlap.json"
+    )
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {out_path} ({len(rows)} rows)")
@@ -137,4 +146,9 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tree, 1 rep (CI schema check)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    a = ap.parse_args()
+    run(smoke=a.smoke, out=a.out)

@@ -13,10 +13,15 @@ Two comparisons per (op, payload) cell, over the payload sizes in
   overhead from the transport plumbing.
 
 Emits the standard report JSON (benchmarks/artifacts/transports.json)
-plus csv_row lines for the console.
+plus csv_row lines for the console.  ``--smoke`` (the CI bench-smoke
+leg) shrinks the sweep to one tiny payload at 1 rep — same artifact
+schema, negligible wall-clock — and ``--out`` redirects the artifact so
+the smoke run can be schema-diffed against the checked-in one
+(benchmarks/check_artifacts.py).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import operator
 import os
@@ -24,7 +29,7 @@ import os
 import jax
 import numpy as np
 
-from common import PAYLOAD_SIZES, csv_row, time_fn
+from common import PAYLOAD_SIZES, SMOKE_PAYLOAD_SIZES, csv_row, make_timer
 from repro.core import Communicator, op, send_buf
 from repro.kernels.collectives import (
     ring_allgather_stacked,
@@ -67,9 +72,10 @@ def _ops(t, n):
     )
 
 
-def run():
+def run(smoke: bool = False, out: str | None = None):
+    time_fn = make_timer(smoke)
     rows = []
-    for n in PAYLOAD_SIZES:
+    for n in (SMOKE_PAYLOAD_SIZES if smoke else PAYLOAD_SIZES):
         payload_bytes = n * 4
         for t in TRANSPORTS:
             for name, fn, x in _ops(t, n):
@@ -125,9 +131,10 @@ def run():
                         "us": us,
                     }
                 )
-    art = os.path.join(os.path.dirname(__file__), "artifacts")
-    os.makedirs(art, exist_ok=True)
-    out_path = os.path.join(art, "transports.json")
+    out_path = out or os.path.join(
+        os.path.dirname(__file__), "artifacts", "transports.json"
+    )
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {out_path} ({len(rows)} rows)")
@@ -135,4 +142,9 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny payloads, 1 rep (CI schema check)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    a = ap.parse_args()
+    run(smoke=a.smoke, out=a.out)

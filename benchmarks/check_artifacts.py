@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Benchmark-artifact schema gate (the CI bench-smoke leg).
+
+The benchmarks emit JSON artifacts (a list of flat row dicts) that the
+report tooling and EXPERIMENTS notes consume; a refactor that silently
+renames or drops a key rots every downstream consumer.  This checker
+diffs a freshly-emitted artifact (typically a ``--smoke`` run: tiny
+payloads, 1 rep, schema-identical rows) against the checked-in
+reference in ``benchmarks/artifacts/`` and fails on **schema drift**:
+
+* top-level shape (must be a list of objects),
+* the per-file key set (union over rows) — missing *or* novel keys fail,
+* per-key value kinds (number / string / bool / null) — a key that was
+  numeric in the reference may not become a string, etc.  ``null`` is
+  always admissible alongside its reference kinds (optional cells).
+
+Row *counts* and *values* are not compared — smoke runs sweep fewer
+cells on purpose.
+
+Usage:
+    python benchmarks/check_artifacts.py --ref benchmarks/artifacts \\
+        --got smoke-artifacts [name.json ...]
+
+Without explicit names, every ``*.json`` present in ``--ref`` is
+checked (so adding a new benchmark artifact automatically extends the
+gate once its reference is committed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _kinds(value) -> str:
+    if value is None:
+        return "null"
+    if isinstance(value, bool):
+        return "bool"
+    if isinstance(value, (int, float)):
+        return "number"
+    if isinstance(value, str):
+        return "string"
+    if isinstance(value, list):
+        return "array"
+    return "object"
+
+
+def _schema(rows):
+    """{key: set of value kinds} over all rows; raises on wrong shape."""
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("artifact must be a non-empty JSON list of rows")
+    schema = {}
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise ValueError(f"row {i} is {type(row).__name__}, not object")
+        for k, v in row.items():
+            schema.setdefault(k, set()).add(_kinds(v))
+    return schema
+
+
+def check_file(ref_path: str, got_path: str) -> list:
+    """Returns a list of human-readable drift messages (empty = clean)."""
+    problems = []
+    with open(ref_path) as f:
+        ref = json.load(f)
+    if not os.path.exists(got_path):
+        return [f"missing emitted artifact: {got_path}"]
+    with open(got_path) as f:
+        got = json.load(f)
+    try:
+        ref_schema = _schema(ref)
+    except ValueError as e:
+        return [f"reference {ref_path} is malformed: {e}"]
+    try:
+        got_schema = _schema(got)
+    except ValueError as e:
+        return [f"{got_path}: {e}"]
+
+    missing = sorted(set(ref_schema) - set(got_schema))
+    novel = sorted(set(got_schema) - set(ref_schema))
+    if missing:
+        problems.append(f"keys dropped: {missing}")
+    if novel:
+        problems.append(
+            f"keys added: {novel} (update the checked-in reference "
+            f"artifact if intentional)"
+        )
+    for k in sorted(set(ref_schema) & set(got_schema)):
+        allowed = ref_schema[k] | {"null"}
+        bad = got_schema[k] - allowed
+        if bad:
+            problems.append(
+                f"key {k!r}: value kind(s) {sorted(bad)} not in the "
+                f"reference kinds {sorted(ref_schema[k])}"
+            )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "artifacts"))
+    ap.add_argument("--got", required=True,
+                    help="directory holding the freshly-emitted artifacts")
+    ap.add_argument("names", nargs="*",
+                    help="artifact file names (default: every *.json "
+                         "in --ref)")
+    args = ap.parse_args(argv)
+
+    names = args.names or sorted(
+        f for f in os.listdir(args.ref) if f.endswith(".json")
+    )
+    if not names:
+        print(f"no reference artifacts found in {args.ref}")
+        return 1
+    failed = False
+    for name in names:
+        problems = check_file(
+            os.path.join(args.ref, name), os.path.join(args.got, name)
+        )
+        if problems:
+            failed = True
+            print(f"SCHEMA DRIFT in {name}:")
+            for p in problems:
+                print(f"  - {p}")
+        else:
+            print(f"{name}: schema OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

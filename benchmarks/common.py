@@ -12,6 +12,19 @@ import numpy as np
 # 1 MiB bandwidth-bound.
 PAYLOAD_SIZES = (1 << 10, 1 << 14, 1 << 18)
 
+# --smoke sweep (the CI bench-smoke leg): one tiny payload — numbers are
+# meaningless, but the artifact schema is identical, so schema drift is
+# caught on every PR without paying real benchmark wall-clock.
+SMOKE_PAYLOAD_SIZES = (1 << 8,)
+
+
+def make_timer(smoke: bool):
+    """time_fn, or its 1-warmup/1-rep smoke variant (still jit-compiled,
+    so the staged program is exercised end-to-end)."""
+    if not smoke:
+        return time_fn
+    return lambda fn, *args: time_fn(fn, *args, warmup=1, iters=1)
+
 
 def time_fn(fn, *args, warmup=2, iters=10):
     """Median wall time (s) of a jitted callable."""

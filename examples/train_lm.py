@@ -38,6 +38,11 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--d-model", type=int, default=192)
     ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--min-improve", type=float, default=0.5,
+                    help="required loss drop (first -> last step); the CI "
+                         "examples-smoke leg runs few steps and pins this "
+                         "explicitly (40 steps drop ~5.0 on the synthetic "
+                         "corpus, so 1.0 is a safe gate)")
     args = ap.parse_args()
 
     # smollm family, scaled to the machine (full config = the real run)
@@ -96,7 +101,7 @@ def main():
         if i % 20 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss {float(loss):.4f}")
         last = float(loss)
-    assert last < first - 0.5, (first, last)
+    assert last < first - args.min_improve, (first, last)
     print(f"train_lm OK: loss {first:.3f} -> {last:.3f} "
           f"(including a checkpoint/restore restart)")
 

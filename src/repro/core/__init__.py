@@ -16,6 +16,17 @@ from .errors import (
     assertion_level,
     set_assertion_level,
 )
+from .compression import (
+    Codec,
+    Fp8E4M3Codec,
+    Int8ErrorFeedbackCodec,
+    QuantizedCodec,
+    TopKCodec,
+    available_codecs,
+    get_codec,
+    register_codec,
+    wire_report,
+)
 from .flatten import bucketize_by_destination, flatten_buckets, with_flattened
 from .grid import GridCommunicator
 from .nonblocking import NonBlockingResult, RequestPool
@@ -25,6 +36,7 @@ from .params import (
     Param,
     ResizePolicy,
     axis,
+    compression,
     dest,
     grow_only,
     move,
@@ -87,8 +99,12 @@ __all__ = [
     "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
     "send_displs_out", "recv_displs", "recv_displs_out", "op", "root",
     "dest", "source", "tag", "axis", "move", "neighbors", "transport",
+    "compression",
     "Transport", "XlaTransport", "PallasTransport", "HierTransport",
     "register_transport", "get_transport", "available_transports",
+    "Codec", "QuantizedCodec", "Int8ErrorFeedbackCodec", "Fp8E4M3Codec",
+    "TopKCodec", "register_codec", "get_codec", "available_codecs",
+    "wire_report",
     "default_group_size", "GroupTables", "split_groups", "validate_groups",
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     "as_serialized", "as_deserializable", "deserialize", "deserialize_like",

@@ -36,6 +36,7 @@ from jax import lax
 
 from ..compat import axis_size as _axis_size
 from . import groups as _groups
+from .compression import get_codec
 from .errors import KampingError
 from .opspec import OpSpec, Lowering, attach_ops, is_static, static_int
 from .params import ParamKind as K
@@ -85,7 +86,7 @@ class Communicator:
     """
 
     def __init__(self, axis: Any = "data", transport: Optional[str] = None,
-                 groups=None):
+                 groups=None, compression: Optional[str] = None):
         self.axis = axis
         self._axes: Tuple = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
         # Default collective backend for every op on this communicator
@@ -94,6 +95,14 @@ class Communicator:
         if transport is not None:
             get_transport(transport)
         self.transport_name = transport
+        # Default payload codec for every *sum reduction* on this
+        # communicator (DESIGN.md §10); a per-call compression(...)
+        # parameter overrides it (compression(None) disables it).  A
+        # default codec silently skips integer payloads.  Stateless —
+        # error feedback needs the per-call parameter's state channel.
+        if compression is not None:
+            get_codec(compression)
+        self.compression_name = compression
         # Group scope (DESIGN.md §9): None = the flat communicator; else a
         # static partition of the axis ranks (tuple of equally-sized
         # tuples of global ranks).  Normally produced by split()/
@@ -288,10 +297,31 @@ class Communicator:
         return lax.all_to_all(x, ax, split_axis=0, concat_axis=0, tiled=True)
 
     # -- reduction kernel ----------------------------------------------------
-    def _reduce_impl(self, x, op_param, transport=None):
+    def _reduce_impl(self, x, op_param, transport=None, codec=None,
+                     codec_state=None, codec_explicit=True):
         t = transport if transport is not None else resolve_transport(self)
         fn = op_param.value
         x = jnp.asarray(x)
+        if codec is not None:
+            # Compressed path (DESIGN.md §10): a codec encodes a *sum*
+            # payload — non-sum functors have no exact quantized
+            # accumulator.  An explicit compression(...) parameter is a
+            # loud trace-time error; a communicator *default* codec
+            # silently skips non-sum reductions (it only claims sum
+            # payloads — the same rule as integer payloads), keeping the
+            # (value, state) caller contract with the state unchanged.
+            if _try_hash_lookup(fn, _SUM_FNS):
+                return codec.allreduce_sum(self, t, x, codec_state)
+            if codec_explicit:
+                raise KampingError(
+                    f"compression('{codec.name}') requires a sum reduction "
+                    f"(op(operator.add)); got op={fn!r}. Drop the "
+                    "compression parameter for min/max/logical/lambda "
+                    "reductions."
+                )
+            return (
+                self._reduce_impl(x, op_param, transport=t), codec_state
+            )
         if _try_hash_lookup(fn, _SUM_FNS):
             return t.allreduce_sum(self, x)
         # Non-sum well-known functors stay on the XLA scalar collectives
@@ -720,13 +750,22 @@ CORE_SPECS: Tuple[OpSpec, ...] = (
         lower=_lower_allreduce,
         required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
         accepted=(K.RECV_BUF,),
-        doc="MPI_Allreduce with functor mapping / reduction-via-lambda.",
+        compressible=True,
+        doc=(
+            "MPI_Allreduce with functor mapping / reduction-via-lambda.\n\n"
+            "Sum reductions additionally accept ``compression(\"name\")`` "
+            "(int8-ef / fp8-e4m3 / topk / registered codecs, DESIGN.md "
+            "§10); error-feedback state passed via "
+            "``compression(name, state=err)`` comes back as the result's "
+            "``compression_state`` field."
+        ),
     ),
     OpSpec(
         name="reduce",
         lower=_lower_allreduce,
         required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
         accepted=(K.ROOT, K.RECV_BUF),
+        compressible=True,
         doc=(
             "MPI_Reduce: like allreduce; `root(...)` kept for API parity.\n\n"
             "Under SPMD every rank computes the value (documented deviation: "
@@ -738,6 +777,7 @@ CORE_SPECS: Tuple[OpSpec, ...] = (
         lower=_lower_reduce_scatter,
         required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
         accepted=(K.RECV_BUF,),
+        compressible=True,
         doc=(
             "MPI_Reduce_scatter_block: ``send_buf(x)`` with x shaped "
             "``(p, chunk, ...)`` — slot j is this rank's contribution to "

@@ -24,7 +24,9 @@ swapping the *routing* (e.g. the grid communicator reuses the
 ``alltoallv`` spec verbatim with a 2-hop route).  Orthogonally, every
 row accepts the ``transport(...)`` parameter selecting the collective
 *backend* (``xla`` HLOs vs. ``pallas`` ring kernels — see
-:mod:`repro.core.transports` and DESIGN.md §7).  ``OP_TABLE`` is
+:mod:`repro.core.transports` and DESIGN.md §7), and the reduction rows
+additionally accept ``compression(...)`` selecting the *payload codec*
+(:mod:`repro.core.compression`, DESIGN.md §10).  ``OP_TABLE`` is
 the global registry: "every public collective is defined via the
 op-spec table" is a testable property (tests/test_opspec.py).
 """
@@ -38,6 +40,7 @@ import numpy as np
 from jax import lax
 
 from . import params as kp
+from .compression import resolve_codec
 from .errors import AssertionLevel, KampingError, check_enabled
 from .nonblocking import NonBlockingResult
 from .params import ParamKind as K
@@ -100,6 +103,9 @@ class OpSpec:
     # HEAVY tier: stage the global sent==received check when send_counts
     # are available (costs one counts transpose + two psums).
     heavy_count_check: bool = False
+    # Reduction rows additionally accept the engine-level
+    # ``compression("name")`` parameter (payload codec, DESIGN.md §10).
+    compressible: bool = False
     # Auto-generate the non-blocking ``i<name>`` variant.
     nonblocking: bool = True
     # Attribute name on the communicator providing the dense-exchange
@@ -141,6 +147,26 @@ class Lowering:
         self.transport = resolve_transport(
             comm, tparam.value if tparam is not None else None
         )
+        # Codec resolution (DESIGN.md §10): per-call compression(...)
+        # param (None value = explicit disable) > communicator default >
+        # uncompressed.  Only compressible (reduction) rows accept the
+        # parameter; error-feedback state rides on the param and the new
+        # residual is packed into the result as `compression_state`.
+        cparam = pack.get(K.COMPRESSION)
+        if cparam is not None:
+            self.codec = resolve_codec(comm, cparam.value)
+            self._codec_state = getattr(cparam, "state", None)
+        else:
+            self.codec = resolve_codec(comm)
+            self._codec_state = None
+        # Explicit per-call codec on an integer payload is a loud
+        # trace-time error; a communicator *default* codec silently
+        # skips integer payloads (they reduce exactly already).
+        self._codec_explicit = cparam is not None and cparam.value is not None
+        self._codec_has_state = (
+            cparam is not None and getattr(cparam, "state", None) is not None
+        )
+        self._codec_new_state = None
         # Op-level routing override (grid 2-hop): wins over the transport.
         self._routing = (
             getattr(comm, spec.transport_attr)
@@ -202,11 +228,38 @@ class Lowering:
     def all_gather(self, x, tiled=True):
         return self.transport.all_gather(self.comm, x, tiled=tiled)
 
+    def _active_codec(self, x):
+        """The codec applying to this payload, or None.  A communicator
+        default skips integer payloads; an explicit compression(...)
+        parameter reaches the codec, whose payload check raises."""
+        if self.codec is None:
+            return None
+        if not self._codec_explicit and not jnp.issubdtype(
+            jnp.asarray(x).dtype, jnp.floating
+        ):
+            return None
+        return self.codec
+
     def reduce(self, x, op_param):
-        """Functor-mapped reduction over the resolved transport."""
+        """Functor-mapped reduction over the resolved transport; a
+        resolved codec (DESIGN.md §10) compresses sum reductions."""
+        codec = self._active_codec(x)
+        if codec is not None:
+            out, self._codec_new_state = self.comm._reduce_impl(
+                x, op_param, transport=self.transport,
+                codec=codec, codec_state=self._codec_state,
+                codec_explicit=self._codec_explicit,
+            )
+            return out
         return self.comm._reduce_impl(x, op_param, transport=self.transport)
 
     def reduce_scatter_sum(self, x):
+        codec = self._active_codec(x)
+        if codec is not None:
+            out, self._codec_new_state = codec.reduce_scatter_sum(
+                self.comm, self.transport, x, self._codec_state
+            )
+            return out
         return self.transport.reduce_scatter_sum(self.comm, x)
 
     def ppermute(self, x, perm):
@@ -266,7 +319,11 @@ def execute(comm, spec: OpSpec, args, kw=None):
         # transport(...) is an engine-level parameter: every table row
         # accepts it (it selects how the engine moves bytes, not what the
         # op means).  Permute-only lowerings are transport-invariant.
-        accepted=tuple(spec.accepted) + (K.TRANSPORT,),
+        # compression(...) is engine-level too, but only the reduction
+        # rows accept it (a codec encodes a sum payload; DESIGN.md §10).
+        accepted=tuple(spec.accepted)
+        + ((K.TRANSPORT, K.COMPRESSION) if spec.compressible
+           else (K.TRANSPORT,)),
         in_place_ignored=spec.in_place_ignored,
     )
     low = Lowering(comm, spec, pack, kw or {})
@@ -281,6 +338,15 @@ def execute(comm, spec: OpSpec, args, kw=None):
         field = _OUT_FIELDS.get(param.kind)
         if field is not None and param.is_out:
             out_fields.append((field, low.resolve(field)))
+    if low._codec_has_state:
+        # Error-feedback round-trip (DESIGN.md §10): state went in on the
+        # compression(...) parameter, the new residual comes back on the
+        # result.  A None codec (explicit disable) echoes the state.
+        out_fields.append((
+            "compression_state",
+            low._codec_new_state if low._codec_new_state is not None
+            else low._codec_state,
+        ))
 
     if (
         spec.heavy_count_check

@@ -53,10 +53,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compression import get_codec
 from .errors import KampingError
 from .nonblocking import RequestPool
+from .params import compression as compression_param
 from .params import op as op_param
 from .params import send_buf
+from .result import Result
 
 __all__ = ["Bucket", "plan_buckets", "overlap_reduce_tree"]
 
@@ -135,32 +138,83 @@ def plan_buckets(
     return buckets
 
 
-def _issue(comm, bucket: Bucket, leaves, mode: str):
-    """Stage one bucket's non-blocking reduction; returns the request."""
-    flat = jnp.concatenate(
+def _bucket_codec(codec, bucket: Bucket):
+    """The codec applying to this bucket, or None.  Buckets are
+    dtype-homogeneous by construction, so codec applicability is a
+    per-bucket (not per-leaf) decision; integer buckets reduce exactly
+    already and pass through uncompressed."""
+    if codec is None or not jnp.issubdtype(jnp.dtype(bucket.dtype),
+                                           jnp.floating):
+        return None
+    return codec
+
+
+def _flatten_bucket(bucket: Bucket, leaves):
+    return jnp.concatenate(
         [jnp.ravel(leaves[i]) for i in bucket.indices]
     ) if len(bucket.indices) > 1 else jnp.ravel(leaves[bucket.indices[0]])
+
+
+def _issue(comm, bucket: Bucket, leaves, mode: str, codec=None,
+           err_leaves=None):
+    """Stage one bucket's non-blocking reduction; returns the request.
+
+    With a codec (DESIGN.md §10) the bucket's collective carries the
+    ``compression(...)`` parameter; the error-feedback state — the
+    bucket's slice of ``err_leaves``, concatenated exactly like the
+    payload — rides on the parameter and the new residual comes back in
+    the request's result (carried through the RequestPool plan)."""
+    flat = _flatten_bucket(bucket, leaves)
+    codec = _bucket_codec(codec, bucket)
+    state = (
+        _flatten_bucket(bucket, err_leaves)
+        if codec is not None and err_leaves is not None
+        else None
+    )
     if mode == "reduce_scatter":
         p = comm.size()
         pad = (-flat.shape[0]) % p
         if pad:
             flat = jnp.pad(flat, (0, pad))
+            if state is not None:
+                state = jnp.pad(state, (0, pad))
+        cargs = ()
+        if codec is not None:
+            cargs = (compression_param(codec, state=(
+                state.reshape(p, -1) if state is not None else None
+            )),)
         return comm.ireduce_scatter(
-            send_buf(flat.reshape(p, -1)), op_param(operator.add)
+            send_buf(flat.reshape(p, -1)), op_param(operator.add), *cargs
         )
-    return comm.iallreduce(send_buf(flat), op_param(operator.add))
+    cargs = (
+        (compression_param(codec, state=state),) if codec is not None else ()
+    )
+    return comm.iallreduce(send_buf(flat), op_param(operator.add), *cargs)
 
 
 def _complete(comm, bucket: Bucket, value, mode: str, total: int):
-    """Turn a completed request's value back into the bucket's flat sum."""
+    """Turn a completed request's value back into the bucket's flat sum.
+
+    Returns ``(flat_sum, new_err_flat_or_None)`` — a compressed bucket
+    whose call carried state completes to a Result with the new
+    error-feedback residual."""
+    new_err = None
+    if isinstance(value, Result):
+        new_err = value.compression_state
+        value = value.recv_buf
     if mode == "reduce_scatter":
         # value is this rank's reduced chunk; the allgather re-materializes
         # the full bucket — reduce_scatter + allgather is the
         # bandwidth-optimal allreduce decomposition, and the gather leg is
-        # pure data movement (bitwise under every transport).
+        # pure data movement (bitwise under every transport).  Under a
+        # codec the wire win rides the reduce-scatter leg (the payload is
+        # encoded once over the full bucket); the residual is local and
+        # reshapes back from the (p, chunk) layout.
         flat = comm.allgather(send_buf(value))
-        return flat[:total]
-    return value
+        if new_err is not None:
+            new_err = new_err.reshape(-1)[:total]
+        return flat[:total], new_err
+    return value, new_err
 
 
 def overlap_reduce_tree(
@@ -172,6 +226,8 @@ def overlap_reduce_tree(
     mode: str = "allreduce",
     scale: Optional[float] = None,
     pool: Optional[RequestPool] = None,
+    compression=None,
+    err_state=None,
 ):
     """Sum-reduce every leaf of ``tree`` over ``comm`` with bucketed,
     request-pool-scheduled non-blocking collectives.
@@ -206,18 +262,51 @@ def overlap_reduce_tree(
         targeted ``collect`` — unrelated requests in the pool are left
         pending for their owners.  With the default ``None`` a private
         fixed-slot pool is created and drained with ``waitall``.
+    compression:
+        Optional payload codec (a registered name or
+        :class:`~repro.core.compression.Codec`, DESIGN.md §10): every
+        *floating-point* bucket's collective carries
+        ``compression(codec)`` — per-bucket compressed allreduce, or
+        compressed RS + plain AG under ``mode="reduce_scatter"`` (the
+        wire win rides the reduce-scatter leg).  Buckets are
+        dtype-homogeneous, so codec applicability is decided per bucket;
+        integer buckets pass through uncompressed.  Composes with every
+        transport (the codec encodes once; xla / pallas / hier move the
+        exact accumulator).
+    err_state:
+        Error-feedback state tree (same structure as ``tree``, float32
+        leaves — ``repro.train.compression.init_error_state``).  Requires
+        ``compression``; the state is bucketed exactly like the payload,
+        carried through the RequestPool plan, and the updated residual
+        tree is returned alongside the reduction.
 
-    Returns the tree of reduced (summed, optionally scaled) leaves.
+    Returns the tree of reduced (summed, optionally scaled) leaves —
+    or ``(reduced_tree, new_err_state)`` when ``err_state`` was passed.
     """
     if mode not in ("allreduce", "reduce_scatter"):
         raise KampingError(
             f"overlap_reduce_tree: mode={mode!r}; expected 'allreduce' or "
             "'reduce_scatter'"
         )
+    codec = get_codec(compression) if compression is not None else None
+    if err_state is not None and codec is None:
+        raise KampingError(
+            "overlap_reduce_tree: err_state= requires compression= (error "
+            "feedback is the codec's state; there is nothing to feed back "
+            "on an uncompressed reduction)"
+        )
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
-        return tree
+        return tree if err_state is None else (tree, err_state)
     leaves = [jnp.asarray(l) for l in leaves]
+    err_leaves = None
+    if err_state is not None:
+        err_leaves = [jnp.asarray(e) for e in treedef.flatten_up_to(err_state)]
+        if len(err_leaves) != len(leaves):
+            raise KampingError(
+                "overlap_reduce_tree: err_state must mirror the reduced "
+                "tree's structure"
+            )
     shapes = [l.shape for l in leaves]
     plan = plan_buckets(leaves, bucket_bytes)
 
@@ -229,7 +318,9 @@ def overlap_reduce_tree(
         pool = RequestPool(slots=max_inflight)
         inflight: List[int] = []  # bucket ids, submission order
         for bi, bucket in enumerate(plan):
-            evicted = pool.submit(_issue(comm, bucket, leaves, mode))
+            evicted = pool.submit(
+                _issue(comm, bucket, leaves, mode, codec, err_leaves)
+            )
             inflight.append(bi)
             if evicted is not None:
                 done[inflight.pop(0)] = evicted
@@ -242,21 +333,29 @@ def overlap_reduce_tree(
         # rest of the pool untouched.
         reqs: List[Any] = []
         for bucket in plan:
-            req = _issue(comm, bucket, leaves, mode)
+            req = _issue(comm, bucket, leaves, mode, codec, err_leaves)
             pool.submit(req)
             reqs.append(req)
         for bi, req in enumerate(reqs):
             done[bi] = pool.collect(req)
 
     reduced: List[Any] = [None] * len(leaves)
+    # Integer buckets (and stateless calls) have no residual: the error
+    # state passes through unchanged for their leaves.
+    new_err: List[Any] = list(err_leaves) if err_leaves is not None else []
     for bi, bucket in enumerate(plan):
         total = sum(bucket.sizes)
-        flat = _complete(comm, bucket, done[bi], mode, total)
+        flat, err_flat = _complete(comm, bucket, done[bi], mode, total)
         off = 0
         for idx, n in zip(bucket.indices, bucket.sizes):
             piece = flat[off:off + n].reshape(shapes[idx])
             if scale is not None and jnp.issubdtype(piece.dtype, jnp.floating):
                 piece = piece * jnp.asarray(scale, piece.dtype)
             reduced[idx] = piece
+            if err_flat is not None:
+                new_err[idx] = err_flat[off:off + n].reshape(shapes[idx])
             off += n
-    return jax.tree.unflatten(treedef, reduced)
+    out = jax.tree.unflatten(treedef, reduced)
+    if err_leaves is None:
+        return out
+    return out, jax.tree.unflatten(treedef, new_err)

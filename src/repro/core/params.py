@@ -40,6 +40,7 @@ __all__ = [
     "recv_count", "recv_count_out",
     "send_counts_out", "recv_counts_out", "send_displs_out", "recv_displs_out",
     "op", "root", "dest", "source", "tag", "axis", "transport",
+    "compression",
     # policies
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     # machinery
@@ -65,6 +66,7 @@ class ParamKind(enum.Enum):
     AXIS = "axis"
     NEIGHBORS = "neighbors"  # plugin-defined (sparse neighborhoods)
     TRANSPORT = "transport"  # collective backend selector (DESIGN.md §7)
+    COMPRESSION = "compression"  # payload codec selector (DESIGN.md §10)
 
 
 # --------------------------------------------------------------------------
@@ -267,6 +269,27 @@ def transport(name) -> Param:
     communicator default (``Communicator(axis, transport=...)``) >
     ``"xla"``, checked at trace time."""
     return _mk(ParamKind.TRANSPORT, name)
+
+
+def compression(name, state=None) -> Param:
+    """Payload codec for this sum reduction (DESIGN.md §10):
+    ``"int8-ef"``, ``"fp8-e4m3"``, ``"topk"``, a :class:`Codec`
+    instance, or any codec registered via
+    :func:`repro.core.compression.register_codec`.  Accepted by the
+    reduction rows of the op-spec table (``allreduce``, ``reduce``,
+    ``reduce_scatter``); resolution is per-call parameter >
+    communicator default (``Communicator(axis, compression=...)``) >
+    uncompressed, checked at trace time.  ``compression(None)``
+    explicitly disables a communicator default.
+
+    ``state`` threads error-feedback state through the call: when
+    passed, the operation's :class:`~repro.core.result.Result` carries a
+    ``compression_state`` field with the new residual (the overlap
+    engine and ``TrainConfig(grad_compress=...)`` manage this
+    automatically)."""
+    p = _mk(ParamKind.COMPRESSION, name)
+    p.state = state  # type: ignore[attr-defined]
+    return p
 
 
 # --------------------------------------------------------------------------

@@ -35,7 +35,7 @@ from .params import Param, ParamKind as K
 from .plugins import Plugin, register_parameter
 from .result import make_result  # noqa: F401  (re-export compat)
 
-__all__ = ["SparseAlltoall", "neighbors"]
+__all__ = ["SparseAlltoall", "neighbors", "permute_from_neighbors"]
 
 
 def neighbors(offsets: Sequence[int]) -> Param:
@@ -61,12 +61,17 @@ def _offset_permutes(low: Lowering):
     return comm, low.p, low.value(K.NEIGHBORS)
 
 
-def _permute_from_neighbors(values_for, comm, p, offs):
+def permute_from_neighbors(values_for, comm, p, offs):
     """Stage one ppermute per non-self offset; slot i of the result is the
     value from rank (rank - offs[i]) % p.  Self-messages stage nothing.
     Offsets are communicator-relative: on a split communicator the shift
     runs inside each group (comm._ppermute maps the group-relative
-    schedule to one static global permutation — DESIGN.md §9)."""
+    schedule to one static global permutation — DESIGN.md §9).
+
+    Public machinery: besides the two sparse collectives below, the
+    top-k compression codec (:mod:`repro.core.compression`, DESIGN.md
+    §10) stages its (index, value) pair exchange through this helper —
+    the sparse-exchange idiom reused as a payload codec."""
     received = []
     for i, off in enumerate(offs):
         off = off % p
@@ -87,12 +92,12 @@ def _lower_alltoallv_sparse(low: Lowering):
             f"{low.spec.name}: send_buf leading dim {x.shape[0]} != "
             f"len(neighbors)={len(offs)}"
         )
-    buf = _permute_from_neighbors(lambda i: x[i], comm, p, offs)
+    buf = permute_from_neighbors(lambda i: x[i], comm, p, offs)
 
     if low.value(K.SEND_COUNTS) is not None:  # supplied, not *_out()
         def _recv_counts():
             sc = jnp.asarray(low.value(K.SEND_COUNTS), jnp.int32)
-            return _permute_from_neighbors(lambda i: sc[i], comm, p, offs)
+            return permute_from_neighbors(lambda i: sc[i], comm, p, offs)
 
         low.emit("recv_counts", _recv_counts)
     return buf
@@ -101,7 +106,7 @@ def _lower_alltoallv_sparse(low: Lowering):
 def _lower_neighbor_allgather(low: Lowering):
     comm, p, offs = _offset_permutes(low)
     x = low.value(K.SEND_BUF)
-    return _permute_from_neighbors(lambda i: x, comm, p, offs)
+    return permute_from_neighbors(lambda i: x, comm, p, offs)
 
 
 class SparseAlltoall(Plugin):

@@ -41,8 +41,8 @@ OPT_VARIANTS = {
 
 
 def build_cell(arch: str, shape_name: str, mesh, *, moe_grid=False,
-               grad_reduce="auto", cfg_override=None, variant="baseline",
-               remat=None):
+               grad_reduce="auto", grad_compress=None, cfg_override=None,
+               variant="baseline", remat=None):
     """Returns (fn, example_args, in_shardings) for one cell."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -120,7 +120,24 @@ def build_cell(arch: str, shape_name: str, mesh, *, moe_grid=False,
             mesh, {"step": P(), "master": pspecs, "mu": pspecs, "nu": pspecs}
         )
         b_sh = named_shardings(mesh, batch_specs(profile, specs["batch"]))
-        if grad_reduce == "compressed":
+        if grad_compress is not None and grad_reduce == "auto":
+            # CLI convenience: a codec requires a manual engine mode —
+            # --grad-compress alone means the table-generated allreduce.
+            grad_reduce = "allreduce"
+        tcfg = TrainConfig(grad_reduce=grad_reduce,
+                           grad_compress=grad_compress)
+        # Codec-aware wire accounting (DESIGN.md §10): the exact,
+        # hardware-independent bytes the gradient reduction puts on the
+        # fabric — the HLO term counts the staged exact accumulator
+        # (int32/fp32), so the codec's wire width is reported separately.
+        grad_wire = None
+        if tcfg.grad_compress is not None:
+            from repro.core.compression import wire_report
+
+            grad_wire = wire_report(
+                jax.tree.leaves(params_struct), tcfg.grad_compress
+            )
+        if tcfg.grad_compress is not None:
             # manual-DP island: error-feedback state (dp, *param) + FSDP off
             import dataclasses as _dc1
 
@@ -141,10 +158,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, moe_grid=False,
                 mesh,
                 jax.tree.map(lambda _: P(profile.dp), extra_struct),
             )
-            step = make_train_step(
-                cfg, TrainConfig(grad_reduce=grad_reduce), runtime, profile,
-                mesh,
-            )
+            step = make_train_step(cfg, tcfg, runtime, profile, mesh)
 
             def fn(p, o, e, b):
                 new_p, new_o, new_e, loss, _ = step(p, o, e, b)
@@ -155,11 +169,10 @@ def build_cell(arch: str, shape_name: str, mesh, *, moe_grid=False,
                       specs["batch"]), (p_sh, o_sh, e_sh, b_sh)),
                 None,
                 {"cfg": cfg, "profile": profile,
-                 "tokens": shape.global_batch * shape.seq_len},
+                 "tokens": shape.global_batch * shape.seq_len,
+                 "grad_wire": grad_wire},
             )
-        step = make_train_step(
-            cfg, TrainConfig(grad_reduce=grad_reduce), runtime, profile, mesh
-        )
+        step = make_train_step(cfg, tcfg, runtime, profile, mesh)
 
         def fn(p, o, b):
             new_p, new_o, _, loss, _ = step(p, o, None, b)
@@ -207,8 +220,8 @@ def build_cell(arch: str, shape_name: str, mesh, *, moe_grid=False,
 
 
 def run_cell(arch, shape_name, mesh, mesh_name, *, moe_grid=False,
-             grad_reduce="auto", verbose=True, variant="baseline",
-             remat=None):
+             grad_reduce="auto", grad_compress=None, verbose=True,
+             variant="baseline", remat=None):
     bench_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks")
     if os.path.abspath(bench_dir) not in [os.path.abspath(p) for p in sys.path]:
         sys.path.insert(0, os.path.abspath(bench_dir))
@@ -218,7 +231,8 @@ def run_cell(arch, shape_name, mesh, mesh_name, *, moe_grid=False,
     try:
         built, skip, meta = build_cell(
             arch, shape_name, mesh, moe_grid=moe_grid,
-            grad_reduce=grad_reduce, variant=variant, remat=remat,
+            grad_reduce=grad_reduce, grad_compress=grad_compress,
+            variant=variant, remat=remat,
         )
         if skip:
             return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -258,8 +272,8 @@ def run_cell(arch, shape_name, mesh, mesh_name, *, moe_grid=False,
             c_k = _dc.replace(cfg, **over)
             b_k, _, _ = build_cell(
                 arch, shape_name, mesh, moe_grid=moe_grid,
-                grad_reduce=grad_reduce, cfg_override=c_k, variant=variant,
-                remat=remat,
+                grad_reduce=grad_reduce, grad_compress=grad_compress,
+                cfg_override=c_k, variant=variant, remat=remat,
             )
             fnk, argsk, shk = b_k
             with mesh:
@@ -305,6 +319,11 @@ def run_cell(arch, shape_name, mesh, mesh_name, *, moe_grid=False,
             "model_flops": mf,
             "useful_flops_ratio": (mf / global_flops) if global_flops else 0.0,
         }
+        if meta.get("grad_wire"):
+            # Codec wire accounting: the gradient all-reduce's logical
+            # fabric bytes under TrainConfig.grad_compress (~4x smaller
+            # for int8-ef) next to the uncompressed payload.
+            rec["grad_wire"] = meta["grad_wire"]
         if verbose:
             print(
                 f"[{mesh_name}] {arch} × {shape_name}: OK "
@@ -333,6 +352,10 @@ def main():
     ap.add_argument("--moe-grid", action="store_true",
                     help="use grid (2-hop) all-to-all for MoE dispatch")
     ap.add_argument("--grad-reduce", default="auto")
+    ap.add_argument("--grad-compress", default=None,
+                    help="gradient payload codec (int8-ef | fp8-e4m3 | "
+                         "topk; DESIGN.md §10) — adds the grad_wire "
+                         "bytes record to each train cell")
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "opt"])
     ap.add_argument("--remat", default=None, choices=[None, "full", "dots", "none"])
@@ -363,6 +386,7 @@ def main():
                     run_cell(arch, shape, mesh, mesh_name,
                              moe_grid=args.moe_grid,
                              grad_reduce=args.grad_reduce,
+                             grad_compress=args.grad_compress,
                              variant=args.variant, remat=args.remat)
                 )
     if args.out:

@@ -141,7 +141,7 @@ def _dispatch_slots(experts, gates, e_pad: int, cap_e: int):
 
 def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
                          combine="gather", transport=None, overlap=False,
-                         pool=None, group_size=None):
+                         pool=None, group_size=None, compression=None):
     """EP MoE body — call INSIDE shard_map.
 
     p_local: expert bank sharded over ``ep_axis`` -> local (E_local, d, ff);
@@ -190,8 +190,20 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
     trainer's overlap scheduler via
     ``overlap_reduce_tree(..., pool=...)``); a fresh fixed-slot pool is
     created otherwise.  Results are identical to the blocking path.
+
+    ``compression`` (DESIGN.md §10): a payload codec (registered name or
+    :class:`~repro.core.Codec`) for the ``combine="reduce_scatter"``
+    return path — the gate-weighted expert outputs are quantized once
+    (stateless; activations have no cross-step error-feedback state) and
+    the combine's sum rides the codec's exact accumulator through
+    whatever ``transport`` moves it.  Only meaningful for the
+    reduce_scatter combine: the gather combine is pure data movement
+    with nothing to accumulate, so passing a codec there is a
+    trace-time error.
     """
     from repro.core import KampingError, RequestPool
+    from repro.core import compression as compression_param
+    from repro.core import get_codec
 
     comm = Communicator(ep_axis, transport=transport)
     if use_grid:
@@ -212,6 +224,17 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
             "overlap=True (the blocking path issues no pool-tracked "
             "requests); pass overlap=True or drop pool"
         )
+    if compression is not None and combine != "reduce_scatter":
+        raise KampingError(
+            "moe_forward_ep_local: compression= applies to the "
+            "combine='reduce_scatter' return path (the only summed "
+            f"collective in the layer); got combine={combine!r}. Drop "
+            "compression or switch the combine mode."
+        )
+    codec = get_codec(compression) if compression is not None else None
+    combine_cargs = (
+        (compression_param(codec),) if codec is not None else ()
+    )
     if overlap and pool is None:
         pool = RequestPool(slots=2)
     ep = comm.size()
@@ -309,14 +332,18 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
         contrib = contrib.at[jnp.arange(ep)[:, None], rows].add(weighted)
         if pool is not None:
             req = comm.ireduce_scatter(
-                send_buf(contrib[:, :n_loc]), op(operator.add)
+                send_buf(contrib[:, :n_loc]), op(operator.add),
+                *combine_cargs,
             )
             pool.submit(req)
             out = pool.collect(req)
         else:
             out = comm.reduce_scatter(
-                send_buf(contrib[:, :n_loc]), op(operator.add)
+                send_buf(contrib[:, :n_loc]), op(operator.add),
+                *combine_cargs,
             )
+        if codec is not None:
+            out = out.astype(contrib.dtype)  # codecs decode to float32
         return out + _shared_out(p_local, x_local, cfg), aux
     if combine != "gather":
         raise ValueError(f"unknown combine mode {combine!r}")

@@ -1,44 +1,47 @@
-"""Gradient compression plugin: int8-quantized all-reduce with error
-feedback — a distributed-optimization building block in the spirit of the
-paper's plugin collectives (§V): specialized reductions packaged as an
-off-the-shelf, explicitly-enabled library feature.
+"""Back-compat shim over the engine's codec registry (DESIGN.md §10).
 
-Scheme (1-bit-Adam-family): per-leaf symmetric int8 quantization with a
-shared fp32 scale (pmax of local absmax), psum in int32 (exact — no
-quantization noise is added *by the reduction itself*), dequantize, and
-carry the local quantization residual into the next step (error feedback),
-which keeps SGD/Adam convergence unaffected to first order.
+The int8 error-feedback gradient reduction that used to live here as a
+standalone helper is now the ``"int8-ef"`` codec in
+:mod:`repro.core.compression`, a first-class engine concern accepted by
+every reduction row of the op-spec table (``compression("int8-ef")``)
+and composing with every transport, process group, and the overlap
+engine.  These wrappers keep the original call signatures working and
+are pinned bitwise-identical to the old implementation by
+``tests/test_compression.py``.
 
-Wire volume: 1 byte/element instead of 4 (plus one scalar per leaf),
-a 4x reduction on the gradient all-reduce — visible in the dry-run's
-collective-bytes term.
+Prefer ``TrainConfig(grad_compress="int8-ef")`` (or the per-call
+``compression(...)`` parameter) in new code.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+
+from repro.core import Communicator
+from repro.core.compression import get_codec
+from repro.core.transports import resolve_transport
 
 __all__ = ["compressed_psum_leaf", "compressed_grad_allreduce", "init_error_state"]
 
 
 def init_error_state(grads):
+    """Zero error-feedback state mirroring ``grads`` (float32 leaves)."""
     return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
 
 
 def compressed_psum_leaf(g, err, axis):
     """int8 all-reduce of one leaf with error feedback. Call inside
-    shard_map (manual over the DP axis). Returns (reduced_mean, new_err)."""
-    gf = g.astype(jnp.float32) + err
-    amax = jnp.max(jnp.abs(gf))
-    scale = lax.pmax(amax, axis) / 127.0
-    scale = jnp.maximum(scale, 1e-30)
-    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
-    new_err = gf - q.astype(jnp.float32) * scale
-    total = lax.psum(q.astype(jnp.int32), axis)  # exact integer reduction
-    p = lax.axis_size(axis)
-    mean = total.astype(jnp.float32) * scale / p
-    return mean, new_err
+    shard_map (manual over the DP axis). Returns (reduced_mean, new_err).
+
+    Shim: delegates to the ``"int8-ef"`` codec over the communicator's
+    default transport; the mean is ``sum * scale / p`` exactly as
+    before."""
+    comm = Communicator(axis)
+    codec = get_codec("int8-ef")
+    total, new_err = codec.allreduce_sum(
+        comm, resolve_transport(comm), g, err
+    )
+    return total / comm.size(), new_err
 
 
 def compressed_grad_allreduce(grads, err_state, axis):

@@ -20,12 +20,20 @@ training options):
                       (``max_inflight``), so later buckets' communication
                       overlaps earlier buckets' completion work.  Rides
                       the same selectable transport as ``allreduce``.
-* ``compressed``    — manual-DP shard_map island; int8 + error-feedback
-                      all-reduce (4x less DP traffic; see compression.py).
+* ``compressed``    — back-compat alias for ``allreduce`` +
+                      ``grad_compress="int8-ef"`` (below).
 * ``reproducible``  — manual-DP island; per-microbatch leaf gradients
                       reduced with the p-invariant canonical tree
                       (bitwise-identical results for any power-of-two DP
                       size dividing the microbatch count).
+
+Orthogonally, ``grad_compress`` selects a payload codec from the engine
+registry (``repro.core.compression``, DESIGN.md §10) for the manual
+``allreduce``/``overlap`` modes: every floating-point gradient reduction
+carries ``compression(codec, state=err)`` (error feedback threaded
+through the op's result / the overlap engine's RequestPool plan), and
+the codec composes with whatever transport moves the bytes — ``xla``,
+``pallas`` rings, or the two-level ``hier`` schedule.
 """
 from __future__ import annotations
 
@@ -44,6 +52,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import (
     Communicator,
     ReproducibleReduce,
+    compression,
+    get_codec,
     op,
     overlap_reduce_tree,
     send_buf,
@@ -55,7 +65,6 @@ from repro.sharding.rules import (
     named_shardings,
     param_specs,
 )
-from .compression import compressed_grad_allreduce, init_error_state
 from .optimizer import AdamWConfig, adamw_init, adamw_update
 
 __all__ = ["TrainConfig", "Trainer", "make_train_step"]
@@ -85,6 +94,21 @@ class TrainConfig:
     bucket_bytes: int = 4 << 20
     max_inflight: int = 2
     overlap_mode: str = "allreduce"
+    # Payload codec for the manual allreduce/overlap gradient reduction
+    # (None = uncompressed; "int8-ef" | "fp8-e4m3" | "topk" | any
+    # registered codec name or Codec instance — repro.core.compression,
+    # DESIGN.md §10).  Error-feedback state lives in the trainer's
+    # `extra` state and is threaded through the engine automatically.
+    grad_compress: Optional[str] = None
+
+    def __post_init__(self):
+        # Back-compat: the pre-codec-registry mode string maps onto the
+        # engine path (bitwise-identical math — tests/test_compression.py
+        # pins the equivalence against the original helper).
+        if self.grad_reduce == "compressed":
+            self.grad_reduce = "allreduce"
+            if self.grad_compress is None:
+                self.grad_compress = "int8-ef"
 
 
 def _split_microbatches(batch, m):
@@ -102,11 +126,28 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
             params, batch, cfg, runtime, aux_weight=tcfg.aux_weight
         )
 
-    if tcfg.grad_reduce not in ("auto", "allreduce", "overlap", "compressed",
+    if tcfg.grad_reduce not in ("auto", "allreduce", "overlap",
                                 "reproducible"):
         raise ValueError(
             f"TrainConfig.grad_reduce={tcfg.grad_reduce!r}: expected one of "
-            "'auto', 'allreduce', 'overlap', 'compressed', 'reproducible'"
+            "'auto', 'allreduce', 'overlap', 'reproducible' (or the "
+            "back-compat alias 'compressed' = allreduce + "
+            "grad_compress='int8-ef')"
+        )
+    # Codec resolution (DESIGN.md §10): eager, so a typo is a
+    # construction-time error; only the manual engine modes reduce
+    # through the op-spec table where codecs live.
+    grad_codec = (
+        get_codec(tcfg.grad_compress) if tcfg.grad_compress is not None
+        else None
+    )
+    if grad_codec is not None and tcfg.grad_reduce not in ("allreduce",
+                                                           "overlap"):
+        raise ValueError(
+            f"TrainConfig.grad_compress={tcfg.grad_compress!r} requires "
+            f"grad_reduce='allreduce' or 'overlap' (got "
+            f"{tcfg.grad_reduce!r}): compression is an engine-level "
+            "parameter of the table-generated reductions"
         )
 
     if tcfg.grad_reduce == "auto":
@@ -191,20 +232,15 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
 
     def manual_grads(params, batch, err):
         """Runs inside shard_map (manual over dp): local grads + plugin
-        reduction. err=None for reproducible mode."""
-        if tcfg.grad_reduce == "compressed":
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True
-            )(params, batch)
-            grads, new_err = compressed_grad_allreduce(grads, err, dp_name)
-            loss = jax.lax.pmean(loss, dp_name)
-            return grads, new_err, loss
+        reduction. err=None unless a codec with error feedback is on."""
         if tcfg.grad_reduce in ("allreduce", "overlap"):
             # The table-generated allreduce over the configured transport
             # (DESIGN.md §7): the gradient fast path is a backend choice,
             # not a different training loop.  "overlap" keeps the same
             # loss/grad computation but hands the reduction to the
-            # bucketing scheduler (core/overlap.py, DESIGN.md §8).
+            # bucketing scheduler (core/overlap.py, DESIGN.md §8).  A
+            # grad_compress codec rides either reduction as the engine's
+            # compression(...) parameter (DESIGN.md §10).
             if tcfg.microbatches > 1:
                 stacked, losses = microbatch_grads(params, batch)
                 grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked)
@@ -217,14 +253,42 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
             inv_p = 1.0 / comm.size()
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
+            new_err = None
             if tcfg.grad_reduce == "overlap":
-                grads = overlap_reduce_tree(
-                    comm, grads,
-                    bucket_bytes=tcfg.bucket_bytes,
-                    max_inflight=tcfg.max_inflight,
-                    mode=tcfg.overlap_mode,
-                    scale=inv_p,
-                )
+                if grad_codec is not None:
+                    grads, new_err = overlap_reduce_tree(
+                        comm, grads,
+                        bucket_bytes=tcfg.bucket_bytes,
+                        max_inflight=tcfg.max_inflight,
+                        mode=tcfg.overlap_mode,
+                        scale=inv_p,
+                        compression=grad_codec,
+                        err_state=err,
+                    )
+                else:
+                    grads = overlap_reduce_tree(
+                        comm, grads,
+                        bucket_bytes=tcfg.bucket_bytes,
+                        max_inflight=tcfg.max_inflight,
+                        mode=tcfg.overlap_mode,
+                        scale=inv_p,
+                    )
+            elif grad_codec is not None:
+                flat_g, gdef = jax.tree.flatten(grads)
+                flat_e = gdef.flatten_up_to(err)
+
+                def reduce_leaf(g, e):
+                    # every leaf is float32 here (cast above), so the
+                    # codec applies unconditionally
+                    r = comm.allreduce(
+                        send_buf(g), op(operator.add),
+                        compression(grad_codec, state=e),
+                    )
+                    return r.recv_buf * inv_p, r.compression_state
+
+                out = [reduce_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+                grads = jax.tree.unflatten(gdef, [o[0] for o in out])
+                new_err = jax.tree.unflatten(gdef, [o[1] for o in out])
             else:
                 grads = jax.tree.map(
                     lambda g: comm.allreduce(
@@ -233,7 +297,7 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
                     grads,
                 )
             loss = jax.lax.pmean(loss, dp_name)
-            return grads, None, loss
+            return grads, new_err, loss
         # reproducible: per-microbatch leaf grads -> canonical tree
         stacked, losses = microbatch_grads(params, batch)
         comm = Communicator(dp_name, transport=grad_transport).extend(
@@ -252,7 +316,7 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
     def train_step(params, opt_state, extra, batch):
         bspec = jax.tree.map(lambda _: P(profile.dp), batch)
         pspec = jax.tree.map(lambda _: P(), params)
-        if tcfg.grad_reduce == "compressed":
+        if grad_codec is not None:
             espec = jax.tree.map(lambda _: P(profile.dp), extra)
 
             def body(p_, b_, e_):
@@ -336,7 +400,7 @@ class Trainer:
         )
         params, opt_state = jax.jit(init, out_shardings=out_shardings)()
         extra = None
-        if self.tcfg.grad_reduce == "compressed":
+        if self.tcfg.grad_compress is not None:
             dp_size = int(
                 np.prod([self.mesh.shape[a] for a in self.profile.dp_axes])
             )

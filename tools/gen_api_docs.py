@@ -27,6 +27,7 @@ sys.path.insert(
 
 import repro.core  # noqa: E402  (imports register core + plugin specs)
 from repro.core import OP_TABLE  # noqa: E402
+from repro.core.compression import available_codecs  # noqa: E402
 from repro.core.opspec import OP_OWNERS  # noqa: E402
 from repro.core.params import ParamKind as K  # noqa: E402
 
@@ -63,6 +64,18 @@ explicit calls.
   cross-group allreduce → intra-group allgather for reductions, the
   two-hop exchange for `all_to_all`, with per-level base backends
   (`HierTransport(group_size=..., intra=..., inter=...)`).
+* `compression({codecs})` — the payload codec for *sum
+  reductions* (DESIGN.md §10), accepted by the reduction rows
+  (`allreduce`, `reduce`, `reduce_scatter`) and registered via
+  `repro.core.compression.register_codec`.  Resolution: per-call
+  parameter > communicator default
+  (`Communicator(axis, compression=...)`; skips integer payloads) >
+  uncompressed; `compression(None)` disables a default.  Error-feedback
+  state passed as `compression(name, state=err)` returns on the result
+  as `compression_state`.  Codecs compose with every transport (the
+  codec encodes once; xla / pallas / hier move the exact accumulator —
+  quantize-once / dequantize-once at the hier boundary) and with
+  `comm.split()` groups (the scale exchange is group-relative).
 
 Non-blocking variants return a `NonBlockingResult`; bulk completion goes
 through `RequestPool` (`waitall` / `testany` / `collect`), the substrate
@@ -121,6 +134,8 @@ def _fmt_required(spec) -> str:
 def _fmt_accepted(spec) -> str:
     names = [f"`{_kind_name(k)}`" for k in spec.accepted]
     names.append("`transport`")  # engine-level: every row accepts it
+    if spec.compressible:
+        names.append("`compression`")  # engine-level: reduction rows
     return ", ".join(names)
 
 
@@ -218,6 +233,13 @@ def _section(spec) -> str:
         else "none (bulk-synchronous by construction)"
     )
     lines.append(f"| non-blocking | {nb} |")
+    if spec.compressible:
+        lines.append(
+            "| compression | sum payloads accept `compression(...)` "
+            "codecs (engine-level; DESIGN.md §10); "
+            "`compression(name, state=err)` returns the new residual as "
+            "the result's `compression_state` |"
+        )
     if spec.heavy_count_check:
         lines.append(
             "| HEAVY assertion | global sent == received, verified over "
@@ -235,7 +257,9 @@ def _section(spec) -> str:
 
 
 def generate() -> str:
-    parts = [HEADER, GROUPS_SECTION]
+    codecs = " | ".join(f'"{c}"' for c in available_codecs())
+    parts = [HEADER.format(codecs=f"{codecs} | <registered>"),
+             GROUPS_SECTION]
     # Grouping comes from registration provenance (attach_ops records the
     # owning class in OP_OWNERS), not from name heuristics.
     core = [s for s in OP_TABLE.values()
