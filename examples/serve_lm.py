@@ -1,5 +1,6 @@
 """End-to-end serving example: continuous-batching engine on a reduced
-qwen-family model with a stream of concurrent requests.
+qwen-family model with a stream of concurrent requests over two
+data-parallel replicas (DESIGN.md §11).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -21,27 +22,31 @@ from repro.serve import Request, ServeEngine
 def main():
     cfg = get_config("qwen1.5-0.5b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=64, num_slots=4)
+    engine = ServeEngine(cfg, params, max_len=64, num_slots=4,
+                         num_replicas=2)
 
     rng = np.random.RandomState(0)
     requests = [
         Request(rid=i,
                 prompt=rng.randint(1, cfg.vocab_size, (rng.randint(4, 12),))
                 .astype(np.int32),
-                max_new_tokens=int(rng.randint(4, 12)))
+                max_new_tokens=int(rng.randint(1, 12)))
         for i in range(10)
     ]
     t0 = time.perf_counter()
     for r in requests:
         engine.submit(r)
-    steps = engine.run_to_completion()
+    done = engine.run_to_completion()
     dt = time.perf_counter() - t0
-    total = sum(len(r.generated) for r in requests)
-    print(f"served {len(requests)} requests / {total} tokens in {dt:.2f}s "
-          f"({steps} engine steps, {total/dt:.1f} tok/s, "
-          f"{engine.num_slots} slots)")
-    for r in requests[:3]:
+    decode = engine.counters["decode_tokens"]
+    print(f"served {len(done)} requests in {dt:.2f}s "
+          f"({engine.counters['steps']} engine steps, "
+          f"{decode/dt:.1f} decode tok/s, {engine.num_replicas} replicas x "
+          f"{engine.num_slots} slots, "
+          f"{engine.prefill_cache_size()} prefill programs)")
+    for r in done[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
+    assert len(done) == len(requests) and not engine.truncated
     assert all(len(r.generated) == r.max_new_tokens for r in requests)
     print("serve_lm OK")
 

@@ -22,7 +22,13 @@ def list_configs() -> List[str]:
     return list(_REGISTRY)
 
 
+# Module names double as arch aliases ("qwen15_05b" == "qwen1.5-0.5b"),
+# so shell-safe ids work on launcher command lines.
+_ALIASES = {mod: disp for disp, mod in _REGISTRY.items()}
+
+
 def get_config(name: str, smoke: bool = False):
+    name = _ALIASES.get(name, name)
     if name not in _REGISTRY:
         raise KeyError(f"unknown arch {name!r}; available: {list(_REGISTRY)}")
     mod = importlib.import_module(f".{_REGISTRY[name]}", __package__)

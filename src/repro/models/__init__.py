@@ -10,10 +10,11 @@ from .transformer import (
     init_params,
     loss_and_metrics,
     prefill,
+    supports_padded_prefill,
 )
 
 __all__ = [
     "ModelConfig", "Model", "Runtime", "block_pattern", "decode_step",
     "forward_train", "init_decode_caches", "init_params",
-    "loss_and_metrics", "prefill",
+    "loss_and_metrics", "prefill", "supports_padded_prefill",
 ]

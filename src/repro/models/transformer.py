@@ -44,6 +44,7 @@ __all__ = [
     "prefill",
     "decode_step",
     "block_pattern",
+    "supports_padded_prefill",
     "Model",
 ]
 
@@ -520,6 +521,31 @@ def _cache_len(cfg, kind, max_len):
     return max_len
 
 
+_ATTN_CACHE_KINDS = ("attn_mlp", "attn_local", "attn_nc_mlp", "moe",
+                     "attn_cross_mlp")
+
+
+def supports_padded_prefill(cfg, seq_len, max_len=None):
+    """True when right-padded (bucketed) prefill is *exact* for this config.
+
+    Padded prefill (``prefill(..., true_len=...)``) feeds a right-padded
+    prompt of length ``seq_len`` and relies on two properties: (a) every
+    block is causal attention, so hidden states at positions
+    ``< true_len`` are bitwise independent of the padding; (b) every KV
+    cache is long enough (``>= seq_len``) that pad positions land in ring
+    slots that stay masked (``qpos > pos``) until the decode that would
+    make them visible overwrites them first.  Recurrent families
+    (SSD/RG-LRU) carry a terminal *state* that padding would corrupt, and
+    a window shorter than ``seq_len`` makes pad positions alias live ring
+    slots — both fall back to exact-length prefill.
+    """
+    max_len = max_len or seq_len
+    kinds = set(block_pattern(cfg))
+    if not kinds <= set(_ATTN_CACHE_KINDS):
+        return False
+    return all(_cache_len(cfg, k, max_len) >= seq_len for k in kinds)
+
+
 def _init_block_cache(cfg, kind, batch, max_len, dtype):
     kv = lambda L: {
         "k": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
@@ -691,9 +717,21 @@ def _decode_attention_abs(q, k_cache, v_cache, qpos, pos, window):
 
 def _decode_attention_sp(q, k_cache, v_cache, pos, L, window, runtime):
     """Sequence-parallel (flash-decode) attention: cache sharded over the
-    data axis, partial softmax stats combined with psum — the long-context
-    decode path (batch < data-axis size)."""
+    data axis, partial softmax stats combined over the communicator — the
+    long-context decode path (batch < data-axis size).
+
+    The cross-shard reductions (running max, normalizer, weighted-value
+    accumulator) are issued through the op-spec engine
+    (``Communicator.allreduce`` with the max/sum functors, DESIGN.md §3)
+    rather than raw ``lax`` calls, so serving's tensor-parallel decode
+    rides the same table rows — and the same transport/group resolution —
+    as every other collective in the system (DESIGN.md §11).
+    """
+    import builtins as _b
     import math as _m
+    import operator as _op
+
+    from repro.core import Communicator, op as _op_param, send_buf as _send
 
     P = jax.sharding.PartitionSpec
     mesh = runtime.mesh
@@ -704,7 +742,8 @@ def _decode_attention_sp(q, k_cache, v_cache, pos, L, window, runtime):
         B, Lloc, KV, D = kk.shape
         H = qq.shape[2]
         G = H // KV
-        i = jax.lax.axis_index(axis)
+        comm = Communicator(axis)
+        i = comm.global_rank()
         qg = qq.reshape(B, KV, G, D).astype(jnp.float32)
         s = jnp.einsum("bkgd,btkd->bkgt", qg, kk.astype(jnp.float32))
         s = s / _m.sqrt(D)
@@ -715,12 +754,13 @@ def _decode_attention_sp(q, k_cache, v_cache, pos, L, window, runtime):
             mask = mask & (qpos > pp[:, None] - window)
         s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
         m_loc = s.max(-1)
-        m = jax.lax.pmax(m_loc, axis)
+        m = comm.allreduce(_send(m_loc), _op_param(_b.max))
         m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
         p_ = jnp.where(mask[:, None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
-        l = jax.lax.psum(p_.sum(-1), axis)
-        acc = jax.lax.psum(
-            jnp.einsum("bkgt,btkd->bkgd", p_, vv.astype(jnp.float32)), axis
+        l = comm.allreduce(_send(p_.sum(-1)), _op_param(_op.add))
+        acc = comm.allreduce(
+            _send(jnp.einsum("bkgt,btkd->bkgd", p_, vv.astype(jnp.float32))),
+            _op_param(_op.add),
         )
         out = acc / jnp.maximum(l[..., None], 1e-37)
         return out.reshape(B, 1, H, D).astype(qq.dtype)
@@ -734,18 +774,37 @@ def _decode_attention_sp(q, k_cache, v_cache, pos, L, window, runtime):
     )(q, k_cache, v_cache, pos)
 
 
-def prefill(params, batch, cfg, runtime: Runtime = Runtime(), max_len=None):
+def prefill(params, batch, cfg, runtime: Runtime = Runtime(), max_len=None,
+            true_len=None):
     """Run the full prompt, build decode caches, return last-token logits.
 
     Implementation note: prefill reuses the training forward for the
     hidden states and *additionally* computes per-layer terminal states
     (attention KV within the cache window, SSD/LRU states).  For windowed
     caches the last ``window`` positions are written.
+
+    ``true_len`` (optional, ``(B,)`` int32, may be traced) enables
+    **padded prefill** — the serve engine's bucketed compile path
+    (DESIGN.md §11): ``batch["tokens"]`` is a right-padded prompt whose
+    real length per row is ``true_len``.  Logits are taken at position
+    ``true_len - 1`` (per row) and ``caches["pos"]`` starts at
+    ``true_len``, so one compiled program serves every prompt length in
+    the bucket.  Exactness is a static property of the config — see
+    :func:`supports_padded_prefill`; unsupported families raise at trace
+    time rather than silently corrupting the cache.
     """
     pattern = block_pattern(cfg)
     tokens = batch["tokens"]
     B, S = tokens.shape
     max_len = max_len or S
+    if true_len is not None and not supports_padded_prefill(cfg, S, max_len):
+        raise ValueError(
+            f"prefill(true_len=...): padded prefill is not exact for "
+            f"config {cfg.name!r} at padded length {S} (recurrent blocks "
+            f"or a KV window shorter than the padded prompt — see "
+            f"supports_padded_prefill); call prefill with the exact "
+            f"prompt length instead"
+        )
     caches = init_decode_caches(cfg, B, max_len)
 
     x = embed_tokens(params, batch, cfg)
@@ -794,8 +853,17 @@ def prefill(params, batch, cfg, runtime: Runtime = Runtime(), max_len=None):
         )
         caches["rem"][i] = nc
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = lm_logits(params, x[:, -1:, :], cfg, runtime)
-    caches["pos"] = jnp.full((B,), S, jnp.int32)
+    if true_len is None:
+        logits = lm_logits(params, x[:, -1:, :], cfg, runtime)
+        caches["pos"] = jnp.full((B,), S, jnp.int32)
+    else:
+        tl = jnp.asarray(true_len, jnp.int32).reshape(-1)
+        # per-row last *real* token; pad rows beyond true_len are causal
+        # downstream of it and never read
+        idx = jnp.clip(tl - 1, 0, S - 1)[:, None, None]
+        logits = lm_logits(params, jnp.take_along_axis(x, idx, axis=1), cfg,
+                           runtime)
+        caches["pos"] = tl
     return logits, caches
 
 

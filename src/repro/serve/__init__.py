@@ -1,3 +1,4 @@
-"""repro.serve — batched serving engine."""
-from .engine import Request, ServeEngine
-__all__ = ["Request", "ServeEngine"]
+"""repro.serve — engine-routed continuous-batching serving (DESIGN.md §11)."""
+from .engine import REPLICA_AXIS, Request, ServeEngine
+
+__all__ = ["REPLICA_AXIS", "Request", "ServeEngine"]

@@ -1,23 +1,80 @@
-"""Serving engine: jitted prefill/decode with continuous slot batching.
+"""Serving engine: engine-routed continuous slot batching (DESIGN.md §11).
 
-A fixed pool of batch slots; finished sequences free their slot and queued
-requests are spliced in (their prompt prefilled into the *slot's* cache
-region).  This is continuous batching in its simplest production-honest
-form — enough to serve the assigned decode shapes and to exercise the
-decode cache shardings (batch-sharded or sequence-parallel).
+A fixed pool of batch slots per replica; finished sequences free their
+slot and queued requests are spliced in (their prompt prefilled into the
+*slot's* cache rows).  This is continuous batching in its
+production-honest form, rebuilt on the op-spec machinery:
+
+* **Bucketed (paged) prefill** — prompts are right-padded to
+  power-of-two length buckets and prefilled with
+  ``prefill(..., true_len=...)``, so XLA compiles one prefill program per
+  *bucket*, not per prompt length; cache rows are addressed by
+  ``(rank, slot)``.  Families where padding is not exact (recurrent
+  state, short KV windows — :func:`~repro.models.supports_padded_prefill`)
+  fall back to exact-length prefill.
+* **Overlapped admission** — each admission's prefill is dispatched
+  asynchronously, wrapped in a
+  :class:`~repro.core.nonblocking.NonBlockingResult` and tracked in a
+  :class:`~repro.core.nonblocking.RequestPool` (DESIGN.md §8): the decode
+  step for the already-live slots is issued *before* the engine blocks on
+  any prefill, so admission work overlaps the running decode batch
+  instead of stalling it.
+* **Multi-replica decode through the engine** — ``num_replicas``
+  data-parallel replicas each serve their own queue and slot pool.  The
+  replica-parallel decode runs as one SPMD program over the ``"serve"``
+  axis (the same vmap-as-SPMD execution the differential suites use);
+  inside it, replica sets are formed with ``Communicator.split_by``
+  (DESIGN.md §9) and each step's liveness stats — the per-pool and global
+  live-slot counts a multi-host serving loop needs for routing and
+  termination — are exchanged with *grouped* and flat op-spec
+  ``allreduce`` rows rather than host-side state.  With
+  ``replica_shards > 1`` a replica's slot pool is itself sharded over
+  several serve ranks and the grouped reduction genuinely combines.
+
+Per-step phase timings (``admit`` / ``prefill`` / ``decode`` / ``reap``)
+are accumulated in :attr:`ServeEngine.phase_seconds` and feed
+``benchmarks/bench_serve.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import operator
+import time
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import Runtime, decode_step, init_decode_caches, prefill
+from repro.core import (
+    Communicator,
+    KampingError,
+    NonBlockingResult,
+    RequestPool,
+    op as op_param,
+    send_buf,
+)
+from repro.models import (
+    Runtime,
+    block_pattern,
+    decode_step,
+    init_decode_caches,
+    prefill,
+    supports_padded_prefill,
+)
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "REPLICA_AXIS"]
+
+# The serve SPMD axis: one rank per (replica, shard).  On this CPU-hosted
+# engine the axis is executed by the vmap SPMD interpreter; on a device
+# mesh the same axis name maps to the mesh's data-parallel serving axis.
+REPLICA_AXIS = "serve"
+
+# Smallest prompt bucket: prompts shorter than this still pad to it, so
+# the engine compiles at most log2(max_len / _MIN_BUCKET) + 1 prefill
+# programs however ragged the traffic is.
+_MIN_BUCKET = 4
 
 
 @dataclasses.dataclass
@@ -26,143 +83,430 @@ class Request:
 
     Attributes
     ----------
-    rid:
-        Caller-chosen request id (echoed back, never interpreted — use it
-        to correlate results with submissions).
     prompt:
         ``(S,)`` int32 token ids; prefilled into the assigned slot's
-        cache region on admission.
+        cache rows on admission.
     max_new_tokens:
-        Decode budget.  The first token comes from the prefill logits
-        (admission consumes one unit); each engine step spends one more
-        per live slot, and the slot is freed when the budget is gone.
+        Decode budget — the *exact* number of tokens generated.  The
+        first token comes from the prefill logits (admission consumes one
+        unit); each decode step spends one more, and the slot is freed
+        the moment the budget is exhausted.  ``max_new_tokens=1``
+        finishes at admission with exactly one token and never occupies a
+        decode slot.
     generated:
         Filled by the engine (``submit`` resets it to ``[]``): every
         generated token in order, starting with the prefill token.  A
-        finished request holds ``max(max_new_tokens, 2)`` tokens — the
-        prefill token plus at least one decode step, since the slot is
-        only reaped *after* the decode that exhausts the budget.
+        finished request holds exactly ``max_new_tokens`` tokens.
+    rid:
+        Request id (echoed back, never interpreted); ``submit`` assigns a
+        sequential one when left at the default.
     """
 
-    rid: int
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
     generated: Optional[List[int]] = None
+    rid: int = -1
 
 
 class ServeEngine:
+    """Continuous-batching engine over ``num_replicas`` slot pools.
+
+    Parameters
+    ----------
+    cfg, params:
+        Model config and parameter pytree.
+    max_len:
+        Per-slot cache capacity (prompt + decode positions; the KV ring
+        wraps beyond it).
+    num_slots:
+        Decode slots *per replica* (the continuous batch width).
+    runtime:
+        Model :class:`~repro.models.Runtime`.  A device-mesh runtime
+        (tensor-parallel / sequence-parallel decode) requires
+        ``num_replicas == replica_shards == 1`` — its decode collectives
+        are themselves engine-routed (DESIGN.md §11); the emulated
+        replica axis composes with ``mesh=None`` only.
+    greedy:
+        Sampling mode; only greedy argmax is implemented.
+    num_replicas:
+        Data-parallel replicas, each with its own queue and slot pool.
+    replica_shards:
+        Serve ranks per replica: a replica's ``num_slots`` are sharded
+        over this many ranks of the ``"serve"`` axis (``num_slots`` must
+        divide evenly).  The per-pool liveness reduction then combines
+        across a real group (``Communicator.split_by(block=replica_shards)``).
+    prompt_buckets:
+        Pad prompts to power-of-two buckets when exact for this config
+        (see module docstring); ``False`` forces exact-length prefill.
+    """
+
     def __init__(self, cfg, params, max_len: int, num_slots: int,
-                 runtime: Runtime = Runtime(), greedy: bool = True):
+                 runtime: Runtime = Runtime(), greedy: bool = True,
+                 num_replicas: int = 1, replica_shards: int = 1,
+                 prompt_buckets: bool = True):
+        if not greedy:
+            raise KampingError("ServeEngine: only greedy decoding is "
+                               "implemented (greedy=True)")
+        if num_replicas < 1 or replica_shards < 1:
+            raise KampingError(
+                "ServeEngine: num_replicas and replica_shards must be >= 1; "
+                f"got {num_replicas}, {replica_shards}"
+            )
+        if num_slots < 1 or num_slots % replica_shards:
+            raise KampingError(
+                f"ServeEngine: num_slots={num_slots} must be a positive "
+                f"multiple of replica_shards={replica_shards} (a replica's "
+                "pool is sharded evenly over its serve ranks)"
+            )
+        self.num_ranks = num_replicas * replica_shards
+        if runtime.mesh is not None and self.num_ranks > 1:
+            raise KampingError(
+                "ServeEngine: the emulated replica axis (num_replicas/"
+                "replica_shards > 1) composes with mesh=None runtimes only; "
+                "a device-mesh runtime serves one replica whose decode "
+                "collectives are engine-routed inside the model"
+            )
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.num_slots = num_slots
+        self.num_replicas = num_replicas
+        self.replica_shards = replica_shards
+        self.slots_per_rank = num_slots // replica_shards
         self.runtime = runtime
-        self.queue: List[Request] = []
-        self.active: Dict[int, Request] = {}  # slot -> request
-        self.remaining = np.zeros((num_slots,), np.int64)
 
+        self.pad_prompts = bool(
+            prompt_buckets and supports_padded_prefill(cfg, max_len, max_len)
+        )
+
+        # -- host-side pool state (rank-major layout) ----------------------
+        N, S = self.num_ranks, self.slots_per_rank
+        self.queues: List[List[Request]] = [[] for _ in range(num_replicas)]
+        self.active: Dict[Tuple[int, int], Request] = {}  # (rank, slot) -> req
+        self.finished: List[Request] = []
+        self.remaining = np.zeros((N, S), np.int64)
+        self.next_tokens = np.zeros((N, S), np.int32)
+        self.slot_live = np.zeros((N, S), bool)
+        self.slot_pending = np.zeros((N, S), bool)  # reserved by in-flight prefill
+        self.truncated = False
+
+        # Admission pool (DESIGN.md §8): every dispatched prefill rides a
+        # NonBlockingResult; the pool is drained (waitall) once per step,
+        # *after* the decode batch has been issued.
+        self._pool = RequestPool()
+        self._pending_meta: List[Tuple[int, int, Request]] = []
+        self._next_rid = 0
+
+        # -- device state ---------------------------------------------------
+        one = init_decode_caches(cfg, S, max_len)
+        self.caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (N,) + a.shape), one
+        )
+
+        # -- staged programs ------------------------------------------------
+        self._prefill = jax.jit(self._prefill_fn)
+        self._splice = jax.jit(self._splice_fn)
         self._decode = jax.jit(
-            lambda p, c, t: decode_step(p, c, t, cfg, runtime)
+            self._decode_island if runtime.mesh is None else self._decode_mesh
         )
-        self._prefill = jax.jit(
-            lambda p, b: prefill(p, b, cfg, runtime, max_len=max_len)
-        )
-        self.caches = init_decode_caches(cfg, num_slots, max_len)
-        self.next_tokens = np.zeros((num_slots,), np.int32)
-        self.slot_live = np.zeros((num_slots,), bool)
 
-    # -- request management ------------------------------------------------
-    def submit(self, req: Request):
+        # -- telemetry ------------------------------------------------------
+        self.phase_seconds = {"admit": 0.0, "prefill": 0.0, "decode": 0.0,
+                              "reap": 0.0}
+        self.counters = {"steps": 0, "prefills": 0, "decode_tokens": 0,
+                         "prefill_tokens": 0}
+        self.last_stats: Dict[str, Any] = {}
+
+    # -- staged programs ----------------------------------------------------
+    def _prefill_fn(self, p, toks, n):
+        """(1, bucket) padded prompt -> (prefill token (1,), row cache)."""
+        logits, pcache = prefill(
+            p, {"tokens": toks}, self.cfg, self.runtime, max_len=self.max_len,
+            true_len=(n if self.pad_prompts else None),
+        )
+        tok = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        return tok, pcache
+
+    def _splice_fn(self, caches, pcache, rank, slot):
+        """Copy a single-row prefill cache into cache rows (rank, slot).
+
+        ``rank``/``slot`` are traced scalars, so one program per prefill
+        bucket covers every slot (no per-slot recompiles)."""
+
+        def stk(d, s):  # stacked-unit leaves: (N, n_units, slots, ...)
+            return d.at[rank, :, slot].set(s[:, 0])
+
+        def one(d, s):  # remainder-block leaves: (N, slots, ...)
+            return d.at[rank, slot].set(s[0])
+
+        out = dict(caches)
+        out["units"] = [
+            jax.tree.map(stk, cu, pu)
+            for cu, pu in zip(caches["units"], pcache["units"])
+        ]
+        out["rem"] = [
+            jax.tree.map(one, cr, pr)
+            for cr, pr in zip(caches["rem"], pcache["rem"])
+        ]
+        out["pos"] = caches["pos"].at[rank, slot].set(pcache["pos"][0])
+        if pcache.get("cross") is not None and caches.get("cross") is not None:
+            out["cross"] = {
+                "units": [
+                    jax.tree.map(stk, cu, pu) if pu is not None else cu
+                    for cu, pu in zip(caches["cross"]["units"],
+                                      pcache["cross"]["units"])
+                ],
+                "rem": [
+                    jax.tree.map(one, cr, pr) if pr is not None else cr
+                    for cr, pr in zip(caches["cross"]["rem"],
+                                      pcache["cross"]["rem"])
+                ],
+            }
+        return out
+
+    def _decode_island(self, p, caches, toks, live, rem):
+        """One decode step for every rank of the ``"serve"`` axis.
+
+        Each rank advances its slot shard by one token (a fixed-shape
+        batched ``decode_step``), then exchanges liveness through the
+        op-spec engine: the *grouped* allreduce (replica sets via
+        ``split_by(block=replica_shards)``, DESIGN.md §9) yields each
+        pool's post-reap live count, the flat allreduce the global one —
+        the numbers a multi-host router/termination loop consumes.
+        """
+        shards = self.replica_shards
+
+        def body(c, t, lv, rm):
+            logits, nc = decode_step(p, c, t, self.cfg, self.runtime)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            # live after this step's budget spend: rem > 1 pre-decrement
+            still = (lv & (rm > 1)).sum().astype(jnp.int32)
+            comm = Communicator(REPLICA_AXIS)
+            pool_live = comm.split_by(block=shards).allreduce(
+                send_buf(still), op_param(operator.add)
+            )
+            global_live = comm.allreduce(send_buf(still), op_param(operator.add))
+            return nxt, nc, pool_live, global_live
+
+        return jax.vmap(body, axis_name=REPLICA_AXIS)(caches, toks, live, rem)
+
+    def _decode_mesh(self, p, caches, toks, live, rem):
+        """Single-replica decode on a device-mesh runtime: the model's own
+        TP/SP collectives are the engine-routed ones (DESIGN.md §11); the
+        liveness stats degenerate to the local count."""
+        c = jax.tree.map(lambda a: a[0], caches)
+        logits, nc = decode_step(p, c, toks[0], self.cfg, self.runtime)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        still = (live[0] & (rem[0] > 1)).sum().astype(jnp.int32)
+        return (nxt[None], jax.tree.map(lambda a: a[None], nc), still[None],
+                still[None])
+
+    # -- request management --------------------------------------------------
+    def submit(self, req: Request, replica: Optional[int] = None):
+        """Queue a request; ``replica=None`` routes to the least-loaded
+        replica (queue depth + occupied slots)."""
         req.generated = []
-        self.queue.append(req)
+        if req.rid < 0:
+            req.rid = self._next_rid
+            self._next_rid += 1
+        if replica is None:
+            replica = min(
+                range(self.num_replicas),
+                key=lambda r: (len(self.queues[r]) + self._replica_load(r), r),
+            )
+        if not 0 <= replica < self.num_replicas:
+            raise KampingError(
+                f"ServeEngine.submit: replica={replica} out of range "
+                f"[0, {self.num_replicas})"
+            )
+        self.queues[replica].append(req)
+
+    def _replica_load(self, replica: int) -> int:
+        lo = replica * self.replica_shards
+        hi = lo + self.replica_shards
+        return int(self.slot_live[lo:hi].sum() + self.slot_pending[lo:hi].sum())
+
+    @property
+    def queue(self) -> List[Request]:
+        """All queued (not yet admitted) requests, replica-major."""
+        return [r for q in self.queues for r in q]
+
+    def _bucket(self, n: int) -> int:
+        if n < 1:
+            raise KampingError("ServeEngine: empty prompt")
+        if n > self.max_len:
+            raise KampingError(
+                f"ServeEngine: prompt length {n} exceeds max_len="
+                f"{self.max_len} (the per-slot cache capacity)"
+            )
+        if not self.pad_prompts:
+            return n
+        b = _MIN_BUCKET
+        while b < n:
+            b <<= 1
+        return min(b, self.max_len)
 
     def _admit(self):
-        """Fill free slots from the queue (prefill into slot cache rows)."""
-        for slot in range(self.num_slots):
-            if self.slot_live[slot] or not self.queue:
+        """Dispatch (not complete) one prefill per free slot per queued
+        request — admission's device work overlaps the decode batch issued
+        later in the same step."""
+        for rep in range(self.num_replicas):
+            q = self.queues[rep]
+            if not q:
                 continue
-            req = self.queue.pop(0)
-            prompt = req.prompt[None, :]  # (1, S)
-            logits, pcache = self._prefill(self.params, {"tokens": prompt})
-            self._splice_cache(slot, pcache)
-            tok = int(jnp.argmax(logits[0, 0]))
-            req.generated.append(tok)
-            self.next_tokens[slot] = tok
-            self.remaining[slot] = req.max_new_tokens - 1
-            self.active[slot] = req
-            self.slot_live[slot] = True
-
-    def _splice_cache(self, slot, pcache):
-        """Copy a single-row prefill cache into slot ``slot``."""
-        def splice(dst, src, stacked):
-            idx = (slice(None), slot) if stacked else (slot,)
-            return dst.at[idx].set(src[(slice(None), 0) if stacked else (0,)])
-
-        c = self.caches
-        c["units"] = [
-            jax.tree.map(lambda d, s: splice(d, s, True), cu, pu)
-            for cu, pu in zip(c["units"], pcache["units"])
-        ]
-        c["rem"] = [
-            jax.tree.map(lambda d, s: splice(d, s, False), cr, pr)
-            for cr, pr in zip(c["rem"], pcache["rem"])
-        ]
-        c["pos"] = c["pos"].at[slot].set(pcache["pos"][0])
-        if "cross" in pcache and pcache.get("cross") is not None:
-            if c.get("cross") is None:
-                # allocate slot-wide cross kv on first admit
-                c["cross"] = jax.tree.map(
-                    lambda s: jnp.zeros(
-                        (s.shape[0], self.num_slots) + s.shape[2:], s.dtype
+            lo = rep * self.replica_shards
+            for rank in range(lo, lo + self.replica_shards):
+                for slot in range(self.slots_per_rank):
+                    if not q:
+                        break
+                    if self.slot_live[rank, slot] or self.slot_pending[rank, slot]:
+                        continue
+                    req = q.pop(0)
+                    S = int(len(req.prompt))
+                    bucket = self._bucket(S)
+                    toks = np.zeros((1, bucket), np.int32)
+                    toks[0, :S] = np.asarray(req.prompt, np.int32)
+                    res = self._prefill(
+                        self.params, jnp.asarray(toks),
+                        jnp.asarray([S], jnp.int32),
                     )
-                    if s.ndim >= 2
-                    else s,
-                    pcache["cross"],
-                )
-            c["cross"] = jax.tree.map(
-                lambda d, s: splice(d, s, True), c["cross"], pcache["cross"]
+                    self._pool.submit(
+                        NonBlockingResult(res, op_name="serve_prefill")
+                    )
+                    self._pending_meta.append((rank, slot, req))
+                    self.slot_pending[rank, slot] = True
+                    self.counters["prefills"] += 1
+
+    def _complete_prefills(self):
+        """Drain the admission pool (waitall): splice each finished
+        prefill's cache rows into its slot and hand the prefill token to
+        the request.  A request whose budget is one token finishes here —
+        at admission — without ever occupying a decode slot."""
+        if not self._pending_meta:
+            return
+        vals = self._pool.waitall()
+        meta, self._pending_meta = self._pending_meta, []
+        for (rank, slot, req), (tok, pcache) in zip(meta, vals):
+            self.caches = self._splice(
+                self.caches, pcache,
+                jnp.asarray(rank, jnp.int32), jnp.asarray(slot, jnp.int32),
             )
+            t = int(np.asarray(tok)[0])
+            req.generated.append(t)
+            self.counters["prefill_tokens"] += 1
+            self.slot_pending[rank, slot] = False
+            if req.max_new_tokens <= 1:
+                self.finished.append(req)
+            else:
+                self.slot_live[rank, slot] = True
+                self.next_tokens[rank, slot] = t
+                self.remaining[rank, slot] = req.max_new_tokens - 1
+                self.active[(rank, slot)] = req
 
     # -- stepping ------------------------------------------------------------
     def step(self) -> int:
-        """Admit queued requests, then run one decode step for all live
-        slots; returns the number of slots still live afterwards.
+        """One engine step; returns the number of live slots afterwards.
 
-        The continuous-batching inner loop:
+        The continuous-batching inner loop, ordered for overlap:
 
-        1. ``_admit`` splices queued prompts into free slots (one jitted
-           prefill per admission, cache rows copied into the slot);
-        2. one jitted ``decode_step`` advances *every* live slot by one
-           token — a single fixed-shape batched call, so XLA never
-           re-compiles as requests come and go;
-        3. finished sequences (decode budget exhausted) free their slot;
-           the next ``step()`` refills it from the queue.
-
-        Greedy argmax sampling; ``0`` means the engine is fully idle
-        (empty queue, no live slots) — ``run_to_completion`` loops on
-        that condition.
+        1. **admit** — queued prompts claim free slots; their bucketed
+           prefills are *dispatched* (async) into the request pool;
+        2. **decode** — one fixed-shape replica-parallel ``decode_step``
+           advances every live slot by one token (issued before any
+           prefill is waited on, so prefill device work overlaps it);
+        3. **prefill** — the admission pool drains; caches are spliced
+           into the new slots (budget-1 requests finish here);
+        4. **reap** — decode tokens land, budgets decrement, exhausted
+           slots free; the grouped/global live counts from the decode
+           island are published in :attr:`last_stats`.
         """
+        tic = time.perf_counter
+        t0 = tic()
         self._admit()
-        if not self.slot_live.any():
-            return 0
-        toks = jnp.asarray(self.next_tokens)
-        logits, self.caches = self._decode(self.params, self.caches, toks)
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
-        for slot, req in list(self.active.items()):
-            tok = int(nxt[slot])
-            req.generated.append(tok)
-            self.next_tokens[slot] = tok
-            self.remaining[slot] -= 1
-            if self.remaining[slot] <= 0:
-                self.slot_live[slot] = False
-                del self.active[slot]
+        t1 = tic()
+        out = None
+        if self.slot_live.any():
+            decoded = self.slot_live.copy()
+            out = self._decode(
+                self.params, self.caches, jnp.asarray(self.next_tokens),
+                jnp.asarray(self.slot_live),
+                jnp.asarray(self.remaining.astype(np.int32)),
+            )
+            self.caches = out[1]
+        t2 = tic()
+        self._complete_prefills()
+        t3 = tic()
+        t4 = t3
+        if out is not None:
+            nxt = np.asarray(out[0])  # host sync point for the decode batch
+            t4 = tic()
+            for (rank, slot), req in list(self.active.items()):
+                if not decoded[rank, slot]:
+                    continue  # spliced this step; first decode is next step
+                tok = int(nxt[rank, slot])
+                req.generated.append(tok)
+                self.next_tokens[rank, slot] = tok
+                self.remaining[rank, slot] -= 1
+                self.counters["decode_tokens"] += 1
+                if self.remaining[rank, slot] <= 0:
+                    self.slot_live[rank, slot] = False
+                    del self.active[(rank, slot)]
+                    self.finished.append(req)
+            self.last_stats = {
+                "pool_live": np.asarray(out[2])[:: self.replica_shards].copy(),
+                "global_live": int(np.asarray(out[3]).reshape(-1)[0]),
+            }
+        t5 = tic()
+        self.phase_seconds["admit"] += t1 - t0
+        self.phase_seconds["decode"] += (t2 - t1) + (t4 - t3)
+        self.phase_seconds["prefill"] += t3 - t2
+        self.phase_seconds["reap"] += t5 - t4
+        self.counters["steps"] += 1
         return int(self.slot_live.sum())
 
-    def run_to_completion(self, max_steps: int = 10_000):
-        done = []
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until every submitted request has finished (or
+        ``max_steps`` is hit); returns the requests that finished during
+        this call, in completion order.
+
+        Hitting ``max_steps`` with work still queued/live/admitting sets
+        :attr:`truncated` and emits a :class:`RuntimeWarning` — partial
+        results are returned, never silently dropped.
+        """
+        start = len(self.finished)
+        self.truncated = False
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while self._outstanding() and steps < max_steps:
             self.step()
             steps += 1
-        return steps
+        if self._outstanding():
+            self.truncated = True
+            warnings.warn(
+                f"ServeEngine.run_to_completion: max_steps={max_steps} "
+                f"reached with {sum(len(q) for q in self.queues)} queued, "
+                f"{len(self.active)} live and {len(self._pending_meta)} "
+                f"admitting request(s) outstanding; returning the "
+                f"{len(self.finished) - start} finished so far",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return self.finished[start:]
+
+    def _outstanding(self) -> bool:
+        return bool(
+            any(self.queues) or self.active or self._pending_meta
+        )
+
+    # -- telemetry -----------------------------------------------------------
+    def prefill_cache_size(self) -> int:
+        """Number of compiled prefill programs — with prompt buckets this
+        is the number of *buckets* seen, not prompt lengths (the
+        compile-count regression tests pin it)."""
+        return self._prefill._cache_size()
+
+    def reset_stats(self):
+        """Zero phase timers and counters (e.g. after a warmup run)."""
+        for k in self.phase_seconds:
+            self.phase_seconds[k] = 0.0
+        for k in self.counters:
+            self.counters[k] = 0

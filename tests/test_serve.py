@@ -1,10 +1,18 @@
-"""Serving engine: continuous slot batching correctness on a tiny model."""
-import dataclasses
+"""Serving engine: continuous slot batching correctness on a tiny model.
+
+Everything here is differential against ``_greedy_reference`` — the
+single-request greedy decode through the raw model API.  The engine's
+bucketed prefill, slot splicing, overlapped admission and multi-replica
+decode island must all be bitwise-invisible to the generated tokens.
+"""
+import warnings
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.models import ModelConfig, init_params, prefill, decode_step
+from repro.models import ModelConfig, decode_step, init_params, prefill
 from repro.serve import Request, ServeEngine
 
 CFG = ModelConfig(
@@ -14,23 +22,34 @@ CFG = ModelConfig(
 )
 
 
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
 def _greedy_reference(params, prompt, n_new):
     """Single-request greedy decode via the raw model API."""
+    prompt = np.asarray(prompt, np.int32)
     logits, caches = jax.jit(
         lambda p, b: prefill(p, b, CFG, max_len=prompt.shape[0] + n_new)
     )(params, {"tokens": prompt[None, :]})
     out = [int(np.argmax(np.asarray(logits[0, 0])))]
     step = jax.jit(lambda p, c, t: decode_step(p, c, t, CFG))
-    import jax.numpy as jnp
-
     for _ in range(n_new - 1):
         logits, caches = step(params, caches, jnp.asarray([out[-1]], jnp.int32))
         out.append(int(np.argmax(np.asarray(logits[0, 0]))))
     return out
 
 
-def test_engine_matches_single_request_decode():
-    params = init_params(CFG, jax.random.PRNGKey(0))
+def _mixed_requests(rng, specs):
+    return [
+        Request(prompt=rng.randint(1, CFG.vocab_size, (n,)).astype(np.int32),
+                max_new_tokens=m)
+        for n, m in specs
+    ]
+
+
+def test_engine_matches_single_request_decode(params):
     rng = np.random.RandomState(0)
     prompts = [rng.randint(1, 64, (6,)).astype(np.int32) for _ in range(3)]
     engine = ServeEngine(CFG, params, max_len=16, num_slots=2)
@@ -38,20 +57,178 @@ def test_engine_matches_single_request_decode():
             for i, p in enumerate(prompts)]
     for r in reqs:
         engine.submit(r)
-    steps = engine.run_to_completion()
-    assert steps > 0
+    done = engine.run_to_completion()
+    # satellite fix: the finished-request list is populated and returned
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert not engine.truncated
     for r in reqs:
         assert len(r.generated) == 5
         ref = _greedy_reference(params, r.prompt, 5)
         assert r.generated == ref, (r.rid, r.generated, ref)
 
 
-def test_engine_queue_overflow_handling():
-    params = init_params(CFG, jax.random.PRNGKey(0))
+def test_mixed_lengths_and_budgets_one_pool(params):
+    """Ragged traffic in one pool: every request still matches its own
+    single-request reference bitwise."""
+    rng = np.random.RandomState(2)
+    specs = [(3, 5), (6, 1), (9, 4), (5, 7), (7, 3), (2, 6)]
+    reqs = _mixed_requests(rng, specs)
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=2)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_to_completion()
+    assert len(done) == len(reqs) and not engine.truncated
+    for r in reqs:
+        assert len(r.generated) == r.max_new_tokens
+        assert r.generated == _greedy_reference(params, r.prompt,
+                                                r.max_new_tokens)
+
+
+def test_budget_one_finishes_at_admission(params):
+    """max_new_tokens=1 produces exactly one token (the prefill token)
+    and never occupies a decode slot."""
+    rng = np.random.RandomState(3)
+    req = Request(prompt=rng.randint(1, 64, (5,)).astype(np.int32),
+                  max_new_tokens=1)
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=2)
+    engine.submit(req)
+    done = engine.run_to_completion()
+    assert [r.rid for r in done] == [req.rid]
+    assert len(req.generated) == 1
+    assert req.generated == _greedy_reference(params, req.prompt, 1)
+    assert engine.counters["decode_tokens"] == 0  # never hit the decode batch
+    assert not engine.active and not engine.slot_live.any()
+
+
+def test_admission_mid_decode(params):
+    """A request submitted while other slots are mid-decode is admitted
+    into a free slot without perturbing the running sequences."""
+    rng = np.random.RandomState(4)
+    first = Request(prompt=rng.randint(1, 64, (4,)).astype(np.int32),
+                    max_new_tokens=8)
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=2)
+    engine.submit(first)
+    for _ in range(3):
+        engine.step()
+    assert engine.slot_live.sum() == 1  # first is mid-decode
+    late = Request(prompt=rng.randint(1, 64, (6,)).astype(np.int32),
+                   max_new_tokens=4)
+    engine.submit(late)
+    done = engine.run_to_completion()
+    assert sorted(r.rid for r in done) == sorted([first.rid, late.rid])
+    assert first.generated == _greedy_reference(params, first.prompt, 8)
+    assert late.generated == _greedy_reference(params, late.prompt, 4)
+
+
+def test_prefill_compiles_once_per_bucket(params):
+    """Compile-count regression: prompt lengths {3,5,6,7,9} fall into
+    pow2 buckets {4,8,16}, so prefill compiles exactly 3 programs."""
+    rng = np.random.RandomState(5)
+    specs = [(3, 2), (5, 2), (6, 2), (7, 2), (9, 2)]
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=2)
+    assert engine.pad_prompts
+    for r in _mixed_requests(rng, specs):
+        engine.submit(r)
+    engine.run_to_completion()
+    assert engine.prefill_cache_size() == 3
+    # a fresh length in an already-seen bucket must not recompile
+    engine.submit(Request(prompt=rng.randint(1, 64, (4,)).astype(np.int32),
+                          max_new_tokens=2))
+    engine.run_to_completion()
+    assert engine.prefill_cache_size() == 3
+
+
+def test_exact_length_fallback_matches(params):
+    """prompt_buckets=False forces exact-length prefill; tokens still
+    match the reference (and the bucketed engine)."""
+    rng = np.random.RandomState(6)
+    reqs = _mixed_requests(rng, [(3, 4), (6, 3)])
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=2,
+                         prompt_buckets=False)
+    assert not engine.pad_prompts
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion()
+    for r in reqs:
+        assert r.generated == _greedy_reference(params, r.prompt,
+                                                r.max_new_tokens)
+
+
+def test_truncation_warns_and_returns_partial(params):
+    """Hitting max_steps with work outstanding warns instead of silently
+    returning, sets .truncated, and returns what did finish."""
+    rng = np.random.RandomState(7)
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=1)
+    for r in _mixed_requests(rng, [(4, 6), (4, 6), (4, 6)]):
+        engine.submit(r)
+    with pytest.warns(RuntimeWarning, match="max_steps"):
+        done = engine.run_to_completion(max_steps=2)
+    assert engine.truncated
+    assert len(done) < 3 and engine._outstanding()
+    # a follow-up run drains the rest and clears the flag
+    rest = engine.run_to_completion()
+    assert not engine.truncated
+    assert len(done) + len(rest) == 3
+
+
+@pytest.mark.parametrize("replicas,shards,slots", [
+    (1, 1, 2), (2, 1, 2), (4, 1, 1), (2, 2, 2),
+])
+def test_multi_replica_bitwise(params, replicas, shards, slots):
+    """p ∈ {1,2,4} serve-axis configurations (incl. a sharded pool):
+    engine decode is bitwise-equal to the single-request reference."""
+    rng = np.random.RandomState(8)
+    specs = [(3, 5), (6, 1), (9, 4), (5, 7), (7, 3), (4, 6), (8, 2), (2, 5)]
+    reqs = _mixed_requests(rng, specs)
+    engine = ServeEngine(CFG, params, max_len=32, num_slots=slots,
+                         num_replicas=replicas, replica_shards=shards)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_to_completion()
+    assert len(done) == len(reqs) and not engine.truncated
+    for r in reqs:
+        assert r.generated == _greedy_reference(params, r.prompt,
+                                                r.max_new_tokens), r.rid
+    stats = engine.last_stats
+    assert len(stats["pool_live"]) == replicas
+    assert stats["global_live"] == 0  # everything drained
+
+
+def test_replica_liveness_stats(params):
+    """The decode island's grouped/global allreduce stats track host-side
+    slot liveness per replica."""
+    rng = np.random.RandomState(9)
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=1,
+                         num_replicas=2)
+    engine.submit(Request(prompt=rng.randint(1, 64, (4,)).astype(np.int32),
+                          max_new_tokens=6), replica=0)
+    engine.submit(Request(prompt=rng.randint(1, 64, (4,)).astype(np.int32),
+                          max_new_tokens=2), replica=1)
+    engine.step()   # both admitted, no decode yet
+    engine.step()   # first decode: replica 1 exhausts its budget here
+    live = engine.slot_live.reshape(2, -1).sum(axis=1)
+    assert list(engine.last_stats["pool_live"]) == list(live)
+    assert engine.last_stats["global_live"] == int(live.sum())
+    engine.run_to_completion()
+
+
+def test_engine_queue_overflow_handling(params):
     engine = ServeEngine(CFG, params, max_len=16, num_slots=1)
     rng = np.random.RandomState(1)
     for i in range(4):
-        engine.submit(Request(rid=i, prompt=rng.randint(1, 64, (4,)).astype(np.int32),
+        engine.submit(Request(rid=i,
+                              prompt=rng.randint(1, 64, (4,)).astype(np.int32),
                               max_new_tokens=3))
-    engine.run_to_completion()
+    done = engine.run_to_completion()
     assert not engine.queue and not engine.active
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+
+
+def test_request_validation(params):
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=2)
+    from repro.core import KampingError
+    with pytest.raises(KampingError, match="exceeds max_len"):
+        engine.submit(Request(prompt=np.arange(1, 30, dtype=np.int32)))
+        engine.run_to_completion()
+    with pytest.raises(KampingError, match="num_slots"):
+        ServeEngine(CFG, params, max_len=16, num_slots=3, replica_shards=2)
