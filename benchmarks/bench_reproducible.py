@@ -1,75 +1,154 @@
-"""Paper §V-C / Fig. 13: reproducible reduce.
+"""Paper §V-C / Fig. 13: deterministic (p-invariant) tree reduction.
 
-Validates bitwise p-invariance and compares cost against (a) the naive
-gather + local-reduce + broadcast the paper beats, and (b) the raw psum
-lower bound (which is *not* p-invariant)."""
+Exercises the engine-level ``deterministic("tree", leaves=m)`` parameter
+(DESIGN.md §12) under the vmap-as-SPMD interpreter:
+
+* **p-invariance** — the same global leaf stack reduced at
+  p ∈ {1, 2, 4, 8} must be bitwise identical (asserted, and recorded in
+  the artifact as ``bitwise_p_invariant``);
+* **cost** — at p = 8, the canonical tree (2·log2(p) ppermute hops on a
+  payload-sized vector) vs the naive gather + local-reduce + broadcast
+  the paper beats (p·payload wire) vs the raw psum lower bound (which is
+  *not* p-invariant);
+* **codec composition** — ``deterministic`` + ``compression("int8-ef")``
+  (quantized-leaf semantics: encode once, tree-accumulate the exact
+  int32 accumulator).
+
+On CPU the wall numbers characterize the *staged program*; the
+transferable number is the wire-volume column.  Emits the standard
+report JSON (benchmarks/artifacts/reproducible.json) plus csv_row lines;
+``--smoke``/``--out`` follow the bench-smoke conventions (tiny payload,
+1 rep, schema-identical rows).
+"""
 from __future__ import annotations
 
-import operator
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from common import csv_row, time_fn
-from repro.core import Communicator, ReproducibleReduce, op, send_buf
+from common import PAYLOAD_SIZES, SMOKE_PAYLOAD_SIZES, csv_row, make_timer
+from repro.core import Communicator, compression, deterministic, op, send_buf
 
-M_LEAVES = 32
-DIM = 4096
+M_LEAVES = 8          # global leaf count shared by every p
+P_RANKS = 8           # the timing comparison's fixed size
+PS = (1, 2, 4, 8)
 
 
-def run():
-    leaves = (np.random.RandomState(0).randn(M_LEAVES, DIM) * 1e3).astype(np.float32)
+def _spmd(f):
+    return jax.jit(jax.vmap(f, axis_name="x"))
 
-    results = {}
-    for p in (1, 2, 4, 8):
-        mesh = jax.make_mesh((p,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
 
-        def repro(x):
-            comm = Communicator("x").extend(ReproducibleReduce)
-            return comm.reproducible_allreduce(send_buf(x))
+def _det_allreduce_fn(m, codec=None):
+    def f(v):
+        comm = Communicator("x")
+        args = [send_buf(v), op("sum"), deterministic("tree", leaves=m)]
+        if codec is not None:
+            args.append(compression(codec))
+        return comm.allreduce(*args)
 
-        fn = jax.jit(jax.shard_map(repro, mesh=mesh, in_specs=P("x"),
-                                   out_specs=P(None), check_vma=False))
-        results[p] = np.asarray(fn(leaves))
-    invariant = all((results[p] == results[1]).all() for p in (2, 4, 8))
-    csv_row("reproducible_reduce_p_invariant", 0.0, f"bitwise={invariant}")
-    assert invariant
+    return _spmd(f)
 
-    mesh8 = jax.make_mesh((8,), ("x",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
 
-    def repro8(x):
-        comm = Communicator("x").extend(ReproducibleReduce)
-        return comm.reproducible_allreduce(send_buf(x))
+def _gather_reduce_fn():
+    # the naive baseline the paper beats: all-gather every rank's leaf,
+    # reduce locally (the "broadcast" is implicit — all ranks gather)
+    return _spmd(lambda v: jnp.sum(jax.lax.all_gather(v, "x"), axis=0))
 
-    def gather_reduce_bcast(x):
-        g = jax.lax.all_gather(x, "x", tiled=True)  # (M, DIM) on all
-        return jnp.sum(g, axis=0)
 
-    def raw_psum(x):
-        return jax.lax.psum(jnp.sum(x, 0), "x")
+def _raw_psum_fn():
+    return _spmd(lambda v: jax.lax.psum(jnp.sum(v, 0), "x"))
 
-    rows = {}
-    for name, fn in (("tree", repro8), ("gather_reduce", gather_reduce_bcast),
-                     ("raw_psum", raw_psum)):
-        jfn = jax.jit(jax.shard_map(fn, mesh=mesh8, in_specs=P("x"),
-                                    out_specs=P(None), check_vma=False))
-        t = time_fn(jfn, leaves)
-        vol = {"tree": "log2(p)*payload", "gather_reduce": "p*payload",
-               "raw_psum": "2*payload"}[name]
-        csv_row(f"reproducible_{name}", t * 1e6, f"wire_volume={vol}")
-        rows[name] = t
 
-    # correctness cross-check: tree == psum up to fp reassociation
-    a = np.asarray(jax.jit(jax.shard_map(repro8, mesh=mesh8, in_specs=P("x"),
-                                         out_specs=P(None), check_vma=False))(leaves))
-    b = leaves.sum(0)
-    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1.0)
-    return {"invariant": invariant, **rows}
+def run(smoke: bool = False, out: str | None = None):
+    time_fn = make_timer(smoke)
+    rows = []
+    for n in (SMOKE_PAYLOAD_SIZES if smoke else PAYLOAD_SIZES):
+        payload_bytes = n * 4
+        data = (np.random.RandomState(0).randn(M_LEAVES, n) * 1e3).astype(
+            np.float32
+        )
+
+        # -- bitwise p-invariance of the fixed global tree ----------------
+        vals = {}
+        for p in PS:
+            m = M_LEAVES // p
+            vals[p] = np.asarray(
+                _det_allreduce_fn(m)(jnp.asarray(data.reshape(p, m, n)))
+            )[0]
+        invariant = all(
+            np.array_equal(vals[p], vals[1]) for p in PS[1:]
+        )
+        assert invariant, "deterministic tree is not p-invariant"
+        csv_row(
+            f"reproducible_p_invariant_n{n}", 0.0,
+            f"bitwise={invariant};M={M_LEAVES};payload_bytes={payload_bytes}",
+        )
+        rows.append({
+            "mode": "p_invariance", "codec": None, "p": None,
+            "leaves": M_LEAVES, "payload_bytes": payload_bytes,
+            "bitwise_p_invariant": invariant, "wire_volume": None,
+            "us": None,
+        })
+
+        # -- cost at p = 8: tree vs gather+reduce vs raw psum -------------
+        m8 = M_LEAVES // P_RANKS
+        stacked = jnp.asarray(data.reshape(P_RANKS, m8, n))
+        flat = jnp.asarray(data.reshape(P_RANKS, n))
+        timed = (
+            ("tree", _det_allreduce_fn(m8), stacked, "2*log2(p)*payload"),
+            ("gather_reduce", _gather_reduce_fn(), flat, "p*payload"),
+            ("raw_psum", _raw_psum_fn(), stacked, "2*payload"),
+        )
+        for name, fn, x, vol in timed:
+            us = time_fn(fn, x) * 1e6
+            csv_row(
+                f"reproducible_{name}", us,
+                f"p={P_RANKS};payload_bytes={payload_bytes};"
+                f"wire_volume={vol}",
+            )
+            rows.append({
+                "mode": name, "codec": None, "p": P_RANKS,
+                "leaves": M_LEAVES, "payload_bytes": payload_bytes,
+                "bitwise_p_invariant": None, "wire_volume": vol,
+                "us": us,
+            })
+
+        # -- codec composition: deterministic + int8-ef -------------------
+        us = time_fn(_det_allreduce_fn(m8, codec="int8-ef"), stacked) * 1e6
+        csv_row(
+            "reproducible_tree_int8ef", us,
+            f"p={P_RANKS};payload_bytes={payload_bytes}",
+        )
+        rows.append({
+            "mode": "tree", "codec": "int8-ef", "p": P_RANKS,
+            "leaves": M_LEAVES, "payload_bytes": payload_bytes,
+            "bitwise_p_invariant": None, "wire_volume": "2*log2(p)*payload/4",
+            "us": us,
+        })
+
+        # correctness cross-check: tree == plain sum up to reassociation
+        np.testing.assert_allclose(
+            vals[1], data.sum(0), rtol=1e-4, atol=1.0
+        )
+
+    out_path = out or os.path.join(
+        os.path.dirname(__file__), "artifacts", "reproducible.json"
+    )
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny payloads, 1 rep (CI schema check)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    a = ap.parse_args()
+    run(smoke=a.smoke, out=a.out)

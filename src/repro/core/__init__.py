@@ -38,6 +38,7 @@ from .params import (
     axis,
     compression,
     dest,
+    deterministic,
     grow_only,
     move,
     no_resize,
@@ -73,7 +74,11 @@ from .transports import (
     register_transport,
 )
 from .hier import HierTransport, default_group_size
-from .reproducible import ReproducibleReduce, tree_reduce_canonical
+from .reproducible import (
+    ReproducibleReduce,
+    deterministic_reduce,
+    tree_reduce_canonical,
+)
 from .result import Result
 from .serialization import (
     Serialized,
@@ -99,7 +104,7 @@ __all__ = [
     "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
     "send_displs_out", "recv_displs", "recv_displs_out", "op", "root",
     "dest", "source", "tag", "axis", "move", "neighbors", "transport",
-    "compression",
+    "compression", "deterministic", "deterministic_reduce",
     "Transport", "XlaTransport", "PallasTransport", "HierTransport",
     "register_transport", "get_transport", "available_transports",
     "Codec", "QuantizedCodec", "Int8ErrorFeedbackCodec", "Fp8E4M3Codec",

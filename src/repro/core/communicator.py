@@ -86,7 +86,8 @@ class Communicator:
     """
 
     def __init__(self, axis: Any = "data", transport: Optional[str] = None,
-                 groups=None, compression: Optional[str] = None):
+                 groups=None, compression: Optional[str] = None,
+                 deterministic: Optional[str] = None):
         self.axis = axis
         self._axes: Tuple = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
         # Default collective backend for every op on this communicator
@@ -103,6 +104,16 @@ class Communicator:
         if compression is not None:
             get_codec(compression)
         self.compression_name = compression
+        # Default deterministic reduction schedule for every reduction on
+        # this communicator (DESIGN.md §12); a per-call deterministic(...)
+        # parameter overrides it (deterministic(None) disables it).  The
+        # default carries no leaf count — each rank's payload is one leaf.
+        if deterministic is not None and deterministic not in ("tree",):
+            raise KampingError(
+                f"Communicator(deterministic={deterministic!r}): the only "
+                "registered scheme is 'tree' (or None)"
+            )
+        self.deterministic_name = deterministic
         # Group scope (DESIGN.md §9): None = the flat communicator; else a
         # static partition of the axis ranks (tuple of equally-sized
         # tuples of global ranks).  Normally produced by split()/
@@ -298,10 +309,63 @@ class Communicator:
 
     # -- reduction kernel ----------------------------------------------------
     def _reduce_impl(self, x, op_param, transport=None, codec=None,
-                     codec_state=None, codec_explicit=True):
+                     codec_state=None, codec_explicit=True,
+                     deterministic=None, det_leaves=None):
         t = transport if transport is not None else resolve_transport(self)
         fn = op_param.value
         x = jnp.asarray(x)
+        if deterministic is not None:
+            # Deterministic path (DESIGN.md §12): the canonical tree is
+            # pure ppermute — it bypasses the transport's reduction
+            # primitives entirely, so the schedule (and the bits) are
+            # transport-invariant by construction, including hier.
+            from .reproducible import deterministic_reduce
+
+            if codec is not None:
+                if _try_hash_lookup(fn, _SUM_FNS):
+                    # Quantized-leaf semantics: encode once, tree-
+                    # accumulate the quantized partials exactly.
+                    return codec.deterministic_allreduce_sum(
+                        self, x, codec_state, leaves=det_leaves
+                    )
+                if codec_explicit:
+                    raise KampingError(
+                        f"compression('{codec.name}') requires a sum "
+                        f"reduction (op(operator.add)); got op={fn!r}. "
+                        "Drop the compression parameter for "
+                        "min/max/logical/lambda reductions."
+                    )
+                return (
+                    self._reduce_impl(
+                        x, op_param, transport=t,
+                        deterministic=deterministic, det_leaves=det_leaves,
+                    ),
+                    codec_state,
+                )
+            # Functor mapping onto a binary tree combiner.  The and/or
+            # functors keep the non-deterministic lowering's int32
+            # min/max semantics so the two paths agree bitwise.
+            if _try_hash_lookup(fn, _SUM_FNS):
+                tree_fn = jnp.add
+            elif _try_hash_lookup(fn, _MAX_FNS):
+                tree_fn = jnp.maximum
+            elif _try_hash_lookup(fn, _MIN_FNS):
+                tree_fn = jnp.minimum
+            elif _try_hash_lookup(fn, _AND_FNS):
+                out = deterministic_reduce(
+                    self, x.astype(jnp.int32), jnp.minimum,
+                    leaves=det_leaves,
+                )
+                return out.astype(x.dtype)
+            elif _try_hash_lookup(fn, _OR_FNS):
+                out = deterministic_reduce(
+                    self, x.astype(jnp.int32), jnp.maximum,
+                    leaves=det_leaves,
+                )
+                return out.astype(x.dtype)
+            else:
+                tree_fn = fn  # deterministic_reduce raises if not callable
+            return deterministic_reduce(self, x, tree_fn, leaves=det_leaves)
         if codec is not None:
             # Compressed path (DESIGN.md §10): a codec encodes a *sum*
             # payload — non-sum functors have no exact quantized
@@ -340,6 +404,13 @@ class Communicator:
         # supports non-commutative ops). Staged as gather + lax.scan; the
         # gather is pure data movement, so the result is bitwise identical
         # whichever transport moved it.
+        if not callable(fn):
+            raise KampingError(
+                f"kamping.op: {fn!r} is neither a recognized functor name "
+                "(operator.add, jnp.maximum, 'sum', 'max', ...) nor "
+                "callable; pass an STL-style functor, a jnp ufunc, or a "
+                "binary lambda"
+            )
         gathered = t.all_gather(self, x, tiled=False)
 
         def body(acc, v):
@@ -751,13 +822,19 @@ CORE_SPECS: Tuple[OpSpec, ...] = (
         required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
         accepted=(K.RECV_BUF,),
         compressible=True,
+        deterministic=True,
         doc=(
             "MPI_Allreduce with functor mapping / reduction-via-lambda.\n\n"
             "Sum reductions additionally accept ``compression(\"name\")`` "
             "(int8-ef / fp8-e4m3 / topk / registered codecs, DESIGN.md "
             "§10); error-feedback state passed via "
             "``compression(name, state=err)`` comes back as the result's "
-            "``compression_state`` field."
+            "``compression_state`` field.\n\n"
+            "``deterministic(\"tree\", leaves=m)`` (DESIGN.md §12) replaces "
+            "the transport's reduction with the canonical perfect-binary-"
+            "tree schedule over the global leaf order: send_buf is the "
+            "``(m, ...)`` stack of this rank's leaf partials and the result "
+            "is bitwise independent of p for fixed global leaf data."
         ),
     ),
     OpSpec(
@@ -766,10 +843,13 @@ CORE_SPECS: Tuple[OpSpec, ...] = (
         required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
         accepted=(K.ROOT, K.RECV_BUF),
         compressible=True,
+        deterministic=True,
         doc=(
             "MPI_Reduce: like allreduce; `root(...)` kept for API parity.\n\n"
             "Under SPMD every rank computes the value (documented deviation: "
-            "there is no cheaper root-only reduction on a TPU mesh)."
+            "there is no cheaper root-only reduction on a TPU mesh).  "
+            "Accepts ``compression(...)`` and ``deterministic(...)`` like "
+            "allreduce."
         ),
     ),
     OpSpec(
@@ -778,13 +858,18 @@ CORE_SPECS: Tuple[OpSpec, ...] = (
         required=((K.SEND_BUF, K.SEND_RECV_BUF), K.OP),
         accepted=(K.RECV_BUF,),
         compressible=True,
+        deterministic=True,
         doc=(
             "MPI_Reduce_scatter_block: ``send_buf(x)`` with x shaped "
             "``(p, chunk, ...)`` — slot j is this rank's contribution to "
             "rank j; returns the op-reduction of this rank's slot over all "
             "ranks, shaped ``(chunk, ...)``.  ``op(operator.add)`` on a "
             "single axis lowers to the hardware reduce-scatter "
-            "(lax.psum_scatter); other functors reduce then extract."
+            "(lax.psum_scatter); other functors reduce then extract.\n\n"
+            "``deterministic(\"tree\")`` (DESIGN.md §12) evaluates the "
+            "canonical cross-rank tree over the full payload and extracts "
+            "this rank's slot; ``leaves=`` is rejected here (the (p, "
+            "chunk, ...) layout already fixes one leaf per rank)."
         ),
     ),
     OpSpec(

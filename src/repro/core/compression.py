@@ -92,10 +92,36 @@ class Codec:
 
     name: str = "abstract"
 
+    # Whether the codec composes with the deterministic("tree") schedule
+    # (DESIGN.md §12).  True requires the encoded accumulator to sum
+    # *exactly* and the scale exchange to be p-invariant, so that tree-
+    # accumulating the quantized leaf partials is bitwise independent of
+    # p.  Codecs whose exchange order is rank-dependent (topk's
+    # scatter-add) must leave this False.
+    supports_deterministic: bool = False
+
     def allreduce_sum(self, comm, transport, x, state=None):
         """Compressed sum over the communicator; same value on all
         ranks.  Returns ``(sum, new_state)``."""
         raise NotImplementedError
+
+    def deterministic_allreduce_sum(self, comm, x, state=None, leaves=None):
+        """Compressed sum under the ``deterministic("tree")`` schedule:
+        encode once, evaluate the canonical tree over the encoded
+        accumulator, dequantize once.  Returns ``(sum, new_state)``.
+
+        The base implementation rejects the combination — a codec must
+        opt in by proving its accumulation is exact and its scale
+        exchange p-invariant (see :class:`QuantizedCodec`).
+        """
+        raise KampingError(
+            f"compression('{self.name}') does not compose with "
+            "deterministic('tree'): the codec's reduction order is not "
+            "p-invariant (e.g. topk's scatter-add order depends on which "
+            "rank shipped each coordinate).  Use an exact-accumulator "
+            "codec (int8-ef, fp8-e4m3) or drop the deterministic "
+            "parameter."
+        )
 
     def reduce_scatter_sum(self, comm, transport, x, state=None):
         """Compressed reduce-scatter of ``(p, chunk, ...)``
@@ -142,6 +168,10 @@ class QuantizedCodec(Codec):
     scale_floor: float = 1e-30
     acc_dtype = jnp.int32
     payload_bytes_per_element: int = 1
+    # The shared scale is a group-pmax (max is exact, so p-invariant for
+    # fixed global data) and the accumulator sums exactly, so the
+    # canonical tree over quantized leaf partials is bitwise p-invariant.
+    supports_deterministic = True
 
     def _quantize(self, y):
         """Map scaled values onto the codec grid (array -> array)."""
@@ -164,6 +194,24 @@ class QuantizedCodec(Codec):
         self._check_payload(x)
         q, scale, new_state = self._encode(comm, jnp.asarray(x), state)
         total = transport.allreduce_sum(comm, q.astype(self.acc_dtype))
+        return total.astype(jnp.float32) * scale, new_state
+
+    def deterministic_allreduce_sum(self, comm, x, state=None, leaves=None):
+        """Quantized-leaf semantics (DESIGN.md §12): encode once (scale =
+        group-pmax of the absmax over the *whole* local payload — exact,
+        hence p-invariant for fixed global leaf data), tree-accumulate
+        the quantized partials in ``acc_dtype`` with the canonical
+        schedule, dequantize once.  With ``leaves=m`` the state/residual
+        stays ``(m, ...)`` per-leaf — its partitioning over ranks follows
+        the leaves, so it is p-invariant too.
+        """
+        from .reproducible import deterministic_reduce
+
+        self._check_payload(x)
+        q, scale, new_state = self._encode(comm, jnp.asarray(x), state)
+        total = deterministic_reduce(
+            comm, q.astype(self.acc_dtype), jnp.add, leaves=leaves
+        )
         return total.astype(jnp.float32) * scale, new_state
 
     def reduce_scatter_sum(self, comm, transport, x, state=None):

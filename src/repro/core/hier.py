@@ -44,6 +44,14 @@ bitwise-identical to the flat transports whenever the payload sums
 exactly (the per-element additions merely re-associate), which the
 differential suite pins (tests/test_groups.py).
 
+A resolved ``deterministic("tree", ...)`` parameter (DESIGN.md §12)
+*bypasses* the two-level reduction schedule entirely: the canonical
+tree is pure ``ppermute`` over the global leaf order, staged by
+``Lowering.reduce`` before any transport primitive is consulted, so a
+hier communicator produces the exact same bits as xla/pallas under the
+deterministic schedule — topology independence by construction, not by
+re-deriving the tree per level.
+
 The registered default (``transport("hier")``) picks ``group_size`` as
 the largest divisor ``g`` of ``p`` with ``g*g <= p`` (the balanced
 √p-ish split); configure it explicitly with

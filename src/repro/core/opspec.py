@@ -106,6 +106,9 @@ class OpSpec:
     # Reduction rows additionally accept the engine-level
     # ``compression("name")`` parameter (payload codec, DESIGN.md §10).
     compressible: bool = False
+    # Reduction rows also accept the engine-level ``deterministic(...)``
+    # parameter (p-invariant canonical-tree schedule, DESIGN.md §12).
+    deterministic: bool = False
     # Auto-generate the non-blocking ``i<name>`` variant.
     nonblocking: bool = True
     # Attribute name on the communicator providing the dense-exchange
@@ -167,6 +170,17 @@ class Lowering:
             cparam is not None and getattr(cparam, "state", None) is not None
         )
         self._codec_new_state = None
+        # Deterministic-schedule resolution (DESIGN.md §12): per-call
+        # deterministic(...) param (None value = explicit disable) >
+        # communicator default (Communicator(axis, deterministic=...)) >
+        # off.  The static leaf count rides on the parameter.
+        dparam = pack.get(K.DETERMINISTIC)
+        if dparam is not None:
+            self.deterministic = dparam.value
+            self.det_leaves = getattr(dparam, "leaves", None)
+        else:
+            self.deterministic = getattr(comm, "deterministic_name", None)
+            self.det_leaves = None
         # Op-level routing override (grid 2-hop): wins over the transport.
         self._routing = (
             getattr(comm, spec.transport_attr)
@@ -242,19 +256,54 @@ class Lowering:
 
     def reduce(self, x, op_param):
         """Functor-mapped reduction over the resolved transport; a
-        resolved codec (DESIGN.md §10) compresses sum reductions."""
+        resolved codec (DESIGN.md §10) compresses sum reductions, and a
+        resolved deterministic(...) schedule (DESIGN.md §12) evaluates
+        the canonical tree instead of the transport's reduction."""
         codec = self._active_codec(x)
         if codec is not None:
             out, self._codec_new_state = self.comm._reduce_impl(
                 x, op_param, transport=self.transport,
                 codec=codec, codec_state=self._codec_state,
                 codec_explicit=self._codec_explicit,
+                deterministic=self.deterministic,
+                det_leaves=self.det_leaves,
             )
             return out
-        return self.comm._reduce_impl(x, op_param, transport=self.transport)
+        return self.comm._reduce_impl(
+            x, op_param, transport=self.transport,
+            deterministic=self.deterministic, det_leaves=self.det_leaves,
+        )
 
     def reduce_scatter_sum(self, x):
         codec = self._active_codec(x)
+        if self.deterministic is not None:
+            # Deterministic reduce-scatter: the (p, chunk, ...) send
+            # layout already fixes one contribution per rank, so the
+            # schedule is the cross-rank tree over the full payload
+            # followed by slot extraction (the per-slot additions are the
+            # same canonical grouping).  A separate leaf stack has no
+            # defined slot mapping here — reject it loudly.
+            if self.det_leaves is not None:
+                raise KampingError(
+                    f"kamping.{self.spec.name}: deterministic('tree', "
+                    "leaves=...) is not defined for reduce_scatter — the "
+                    "(p, chunk, ...) send layout already fixes one leaf "
+                    "per rank; drop leaves= (or use allreduce for leaf-"
+                    "stacked payloads)"
+                )
+            from .reproducible import deterministic_reduce
+
+            if codec is not None:
+                full, self._codec_new_state = (
+                    codec.deterministic_allreduce_sum(
+                        self.comm, x, self._codec_state, leaves=None
+                    )
+                )
+            else:
+                full = deterministic_reduce(self.comm, x, jnp.add)
+            return lax.dynamic_index_in_dim(
+                full, self.comm.rank(), 0, keepdims=False
+            )
         if codec is not None:
             out, self._codec_new_state = codec.reduce_scatter_sum(
                 self.comm, self.transport, x, self._codec_state
@@ -320,10 +369,13 @@ def execute(comm, spec: OpSpec, args, kw=None):
         # accepts it (it selects how the engine moves bytes, not what the
         # op means).  Permute-only lowerings are transport-invariant.
         # compression(...) is engine-level too, but only the reduction
-        # rows accept it (a codec encodes a sum payload; DESIGN.md §10).
+        # rows accept it (a codec encodes a sum payload; DESIGN.md §10),
+        # and the same rows accept deterministic(...) (the p-invariant
+        # canonical-tree schedule; DESIGN.md §12).
         accepted=tuple(spec.accepted)
-        + ((K.TRANSPORT, K.COMPRESSION) if spec.compressible
-           else (K.TRANSPORT,)),
+        + (K.TRANSPORT,)
+        + ((K.COMPRESSION,) if spec.compressible else ())
+        + ((K.DETERMINISTIC,) if spec.deterministic else ()),
         in_place_ignored=spec.in_place_ignored,
     )
     low = Lowering(comm, spec, pack, kw or {})

@@ -57,6 +57,7 @@ from .compression import get_codec
 from .errors import KampingError
 from .nonblocking import RequestPool
 from .params import compression as compression_param
+from .params import deterministic as deterministic_param
 from .params import op as op_param
 from .params import send_buf
 from .result import Result
@@ -156,20 +157,29 @@ def _flatten_bucket(bucket: Bucket, leaves):
 
 
 def _issue(comm, bucket: Bucket, leaves, mode: str, codec=None,
-           err_leaves=None):
+           err_leaves=None, deterministic=None):
     """Stage one bucket's non-blocking reduction; returns the request.
 
     With a codec (DESIGN.md §10) the bucket's collective carries the
     ``compression(...)`` parameter; the error-feedback state — the
     bucket's slice of ``err_leaves``, concatenated exactly like the
     payload — rides on the parameter and the new residual comes back in
-    the request's result (carried through the RequestPool plan)."""
+    the request's result (carried through the RequestPool plan).
+
+    With ``deterministic`` (DESIGN.md §12) every bucket's collective
+    additionally carries ``deterministic(scheme)`` — the whole bucket is
+    one leaf per rank (no leaf stack: buckets are flat concatenations,
+    not canonical leaf partials)."""
     flat = _flatten_bucket(bucket, leaves)
     codec = _bucket_codec(codec, bucket)
     state = (
         _flatten_bucket(bucket, err_leaves)
         if codec is not None and err_leaves is not None
         else None
+    )
+    dargs = (
+        (deterministic_param(deterministic),)
+        if deterministic is not None else ()
     )
     if mode == "reduce_scatter":
         p = comm.size()
@@ -184,12 +194,15 @@ def _issue(comm, bucket: Bucket, leaves, mode: str, codec=None,
                 state.reshape(p, -1) if state is not None else None
             )),)
         return comm.ireduce_scatter(
-            send_buf(flat.reshape(p, -1)), op_param(operator.add), *cargs
+            send_buf(flat.reshape(p, -1)), op_param(operator.add),
+            *cargs, *dargs
         )
     cargs = (
         (compression_param(codec, state=state),) if codec is not None else ()
     )
-    return comm.iallreduce(send_buf(flat), op_param(operator.add), *cargs)
+    return comm.iallreduce(
+        send_buf(flat), op_param(operator.add), *cargs, *dargs
+    )
 
 
 def _complete(comm, bucket: Bucket, value, mode: str, total: int):
@@ -228,6 +241,7 @@ def overlap_reduce_tree(
     pool: Optional[RequestPool] = None,
     compression=None,
     err_state=None,
+    deterministic=None,
 ):
     """Sum-reduce every leaf of ``tree`` over ``comm`` with bucketed,
     request-pool-scheduled non-blocking collectives.
@@ -279,6 +293,15 @@ def overlap_reduce_tree(
         ``compression``; the state is bucketed exactly like the payload,
         carried through the RequestPool plan, and the updated residual
         tree is returned alongside the reduction.
+    deterministic:
+        Optional scheme name (``"tree"``, DESIGN.md §12): every bucket's
+        collective carries ``deterministic(scheme)``, pinning the
+        reduction to the canonical cross-rank tree.  Each rank's whole
+        bucket is one leaf (buckets are flat concatenations, not leaf
+        partials), so this makes the bucketed reduction *transport-
+        invariant and run-to-run stable at fixed p* — for bitwise
+        p-invariance use the trainer's ``grad_reduce="reproducible"``
+        leaf-stacked path instead.
 
     Returns the tree of reduced (summed, optionally scaled) leaves —
     or ``(reduced_tree, new_err_state)`` when ``err_state`` was passed.
@@ -319,7 +342,8 @@ def overlap_reduce_tree(
         inflight: List[int] = []  # bucket ids, submission order
         for bi, bucket in enumerate(plan):
             evicted = pool.submit(
-                _issue(comm, bucket, leaves, mode, codec, err_leaves)
+                _issue(comm, bucket, leaves, mode, codec, err_leaves,
+                       deterministic)
             )
             inflight.append(bi)
             if evicted is not None:
@@ -333,7 +357,8 @@ def overlap_reduce_tree(
         # rest of the pool untouched.
         reqs: List[Any] = []
         for bucket in plan:
-            req = _issue(comm, bucket, leaves, mode, codec, err_leaves)
+            req = _issue(comm, bucket, leaves, mode, codec, err_leaves,
+                         deterministic)
             pool.submit(req)
             reqs.append(req)
         for bi, req in enumerate(reqs):

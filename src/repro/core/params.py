@@ -28,6 +28,7 @@ import enum
 from typing import Any, Callable, Optional
 
 from .errors import (
+    KampingError,
     MissingParameterError,
     ParameterConflictError,
     UnsupportedParameterError,
@@ -40,7 +41,7 @@ __all__ = [
     "recv_count", "recv_count_out",
     "send_counts_out", "recv_counts_out", "send_displs_out", "recv_displs_out",
     "op", "root", "dest", "source", "tag", "axis", "transport",
-    "compression",
+    "compression", "deterministic",
     # policies
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     # machinery
@@ -67,6 +68,7 @@ class ParamKind(enum.Enum):
     NEIGHBORS = "neighbors"  # plugin-defined (sparse neighborhoods)
     TRANSPORT = "transport"  # collective backend selector (DESIGN.md §7)
     COMPRESSION = "compression"  # payload codec selector (DESIGN.md §10)
+    DETERMINISTIC = "deterministic"  # fixed reduction schedule (DESIGN.md §12)
 
 
 # --------------------------------------------------------------------------
@@ -289,6 +291,57 @@ def compression(name, state=None) -> Param:
     automatically)."""
     p = _mk(ParamKind.COMPRESSION, name)
     p.state = state  # type: ignore[attr-defined]
+    return p
+
+
+_DETERMINISTIC_SCHEMES = ("tree",)
+
+
+def deterministic(scheme: str = "tree", leaves: Optional[int] = None) -> Param:
+    """Deterministic (p-invariant) reduction schedule for this reduction
+    (paper §V-C, DESIGN.md §12): the collective evaluates the canonical
+    perfect binary tree over the global leaf order instead of whatever
+    grouping the transport's topology implies, so the result is bitwise
+    identical for every power-of-two communicator size dividing the
+    global leaf count.  Accepted by the reduction rows of the op-spec
+    table (``allreduce``, ``reduce``, ``reduce_scatter``); resolution is
+    per-call parameter > communicator default
+    (``Communicator(axis, deterministic=...)``) > off.
+    ``deterministic(None)`` explicitly disables a communicator default.
+
+    ``scheme`` — ``"tree"`` (the only registered scheme) or ``None``.
+
+    ``leaves`` — the number of canonical *leaf partials* this rank
+    contributes: ``send_buf`` is then ``(leaves, ...)`` with global leaf
+    index ``rank·leaves + i``, and the reduction collapses the leaf
+    dimension (the result is shaped like one leaf).  ``None`` (default)
+    treats each rank's whole payload as a single leaf — deterministic
+    at fixed p, p-invariant only when the per-rank payloads are
+    themselves p-invariant.  Must be a power of two (checked at trace
+    time, where the communicator size is known)."""
+    if scheme is not None and scheme not in _DETERMINISTIC_SCHEMES:
+        raise KampingError(
+            f"deterministic({scheme!r}): unknown scheme; registered "
+            f"schemes: {', '.join(_DETERMINISTIC_SCHEMES)} (or None to "
+            "disable a communicator default)"
+        )
+    if leaves is not None:
+        if scheme is None:
+            raise KampingError(
+                "deterministic(None) disables the communicator default; "
+                "leaves= is meaningless without a scheme"
+            )
+        bad = isinstance(leaves, bool) or not hasattr(leaves, "__index__")
+        if not bad:
+            leaves = int(leaves.__index__())
+        if bad or leaves <= 0:
+            raise KampingError(
+                f"deterministic('tree', leaves={leaves!r}): leaves must be "
+                "a positive (power-of-two) static int — the canonical leaf "
+                "count is part of the static schedule"
+            )
+    p = _mk(ParamKind.DETERMINISTIC, scheme)
+    p.leaves = leaves  # type: ignore[attr-defined]
     return p
 
 

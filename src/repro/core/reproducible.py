@@ -1,4 +1,4 @@
-"""ReproducibleReduce plugin (paper §V-C, Fig. 13).
+"""Deterministic (p-invariant) tree reduction (paper §V-C, Fig. 13).
 
 IEEE-754 addition is commutative but not associative: the *grouping* of a
 distributed sum usually follows the machine topology, so results change
@@ -20,6 +20,19 @@ then broadcast from the tree root.  Because the *tree* depends only on M,
 the result is bitwise identical for every power-of-two p dividing M —
 verified in tests for p ∈ {1, 2, 4, 8}.
 
+:func:`deterministic_reduce` is the *engine-level* implementation behind
+the ``deterministic("tree", leaves=m)`` named parameter (DESIGN.md §12):
+the reduction rows of the op-spec table route through it from
+``Lowering.reduce`` / ``reduce_scatter_sum``, so the fixed schedule
+composes with every transport (the tree is pure ``ppermute`` — the same
+global pairing under xla, pallas, and the two-level hier transport),
+with ``comm.split()`` groups (``rank()``/``_ppermute`` are
+group-relative, so each group runs its own tree), and with the quantized
+codecs (:meth:`repro.core.compression.QuantizedCodec
+.deterministic_allreduce_sum` tree-accumulates the quantized leaf
+partials).  :class:`ReproducibleReduce` remains as the paper-§V plugin
+spelling, now a thin shim over the engine parameter.
+
 Cost: 2·log2(p) latency-bound permute hops on a vector of the payload
 size — vs. all-gather of p·payload for gather+local-reduce (the paper's
 "faster than gather + local reduction + broadcast").
@@ -30,10 +43,13 @@ import jax.numpy as jnp
 
 from .errors import KampingError
 from .params import ParamKind as K
-from .params import collect_params
+from .params import collect_params, deterministic as deterministic_param, op
+from .params import send_buf
 from .plugins import Plugin
 
-__all__ = ["ReproducibleReduce", "tree_reduce_canonical"]
+__all__ = [
+    "ReproducibleReduce", "deterministic_reduce", "tree_reduce_canonical",
+]
 
 
 def _is_pow2(n: int) -> bool:
@@ -43,8 +59,9 @@ def _is_pow2(n: int) -> bool:
 def tree_reduce_canonical(leaves, fn=jnp.add):
     """Reduce a stack of leaf partials (m, ...) with the canonical perfect
     binary tree: level l pairs blocks of 2^l adjacent leaves.  m must be a
-    power of two.  Pure function — the local phase of the plugin, also
-    usable standalone for p-invariant microbatch accumulation."""
+    power of two.  Pure function — the local phase of the deterministic
+    schedule, also usable standalone for p-invariant microbatch
+    accumulation."""
     m = leaves.shape[0]
     if not _is_pow2(m):
         raise KampingError(
@@ -54,6 +71,86 @@ def tree_reduce_canonical(leaves, fn=jnp.add):
     while x.shape[0] > 1:
         x = fn(x[0::2], x[1::2])
     return x[0]
+
+
+def deterministic_reduce(comm, x, fn=jnp.add, leaves=None):
+    """Evaluate the canonical perfect binary tree over ``comm``.
+
+    ``x`` — with ``leaves=m``: the ``(m, ...)`` stack of this rank's leaf
+    partials (global leaf index = ``rank·m + i``; global leaf count
+    ``M = p·m``); the leaf dimension is collapsed and the result is
+    shaped like one leaf.  With ``leaves=None``: the rank's whole payload
+    is a single leaf (M = p, no local levels).
+
+    ``fn`` must be a binary callable (the tree fixes the *grouping*; a
+    non-commutative fn still gets a deterministic, p-invariant grouping
+    but its value depends on the canonical leaf order, as in MPI).
+
+    Returns the tree-reduced value, identical on all ranks and bitwise
+    independent of p for fixed global leaf data.  On a split
+    communicator the tree runs inside each group over the group's own
+    leaf set (rank/permute/broadcast are all group-relative).
+    """
+    if not callable(fn):
+        raise KampingError(
+            f"deterministic('tree'): op {fn!r} is neither a recognized "
+            "functor name nor callable; pass op(operator.add), a jnp "
+            "ufunc, or a binary lambda"
+        )
+    if len(comm._axes) != 1:
+        raise KampingError(
+            "deterministic('tree') requires a single-axis communicator"
+        )
+    x = jnp.asarray(x)
+    p = comm.size()
+    if not _is_pow2(p):
+        raise KampingError(
+            f"deterministic('tree'): communicator size {p} must be a "
+            f"power of two (mesh axes on TPU pods are)"
+        )
+    if leaves is not None:
+        m = int(leaves)
+        if not _is_pow2(m):
+            raise KampingError(
+                f"deterministic('tree', leaves={m}): the per-rank leaf "
+                "count must be a power of two"
+            )
+        if x.ndim < 1 or x.shape[0] != m:
+            raise KampingError(
+                f"deterministic('tree', leaves={m}): send_buf must be "
+                f"(leaves, ...) = ({m}, ...); got shape {x.shape}"
+            )
+        # Local levels: canonical adjacent pairing over this rank's leaves.
+        partial = tree_reduce_canonical(x, fn)
+    else:
+        partial = x
+
+    # Cross-rank levels: at level k, partner pairs are (r, r + 2^k) for
+    # r ≡ 0 (mod 2^{k+1}); grouping fixed as fn(left=low rank, right=
+    # high rank).  All ranks execute the permute; non-roots carry a
+    # stale value that is excluded from the final broadcast.  The
+    # schedule is communicator-relative: on a split communicator the
+    # tree runs inside each group (rank() is group-relative and
+    # _ppermute maps the shifts to global permutations), so each
+    # group's result is p-invariant for its own leaf set.
+    rank = comm.rank()
+    k = 1
+    while k < p:
+        perm = [(r, (r - k) % p) for r in range(p)]  # shift partials down
+        incoming = comm._ppermute(partial, perm)
+        combined = fn(partial, incoming)
+        is_left = (rank % (2 * k)) == 0
+        partial = jnp.where(is_left, combined, partial)
+        k *= 2
+
+    # Broadcast the root (communicator rank 0) value.  jnp.where — NOT
+    # `partial * mask` — because non-root ranks carry *stale* partials:
+    # an inf/nan in a stale value would turn `0 * inf` into NaN and
+    # poison every rank's psum.
+    contrib = jnp.where(rank == 0, partial, jnp.zeros_like(partial))
+    if contrib.dtype == jnp.bool_:
+        return comm._pmax(contrib.astype(jnp.int32)).astype(jnp.bool_)
+    return comm._psum(contrib)
 
 
 class ReproducibleReduce(Plugin):
@@ -67,6 +164,11 @@ class ReproducibleReduce(Plugin):
 
         Returns the tree-reduced value, identical on all ranks and bitwise
         independent of p (for fixed M and leaf data).
+
+        This is the paper-§V *plugin* spelling; it delegates to the
+        engine-level ``deterministic("tree", leaves=m_local)`` parameter
+        on the table-generated ``allreduce`` (DESIGN.md §12), so it picks
+        up the communicator's transport/group scope like any other call.
         """
         pack = collect_params(
             "reproducible_allreduce",
@@ -76,45 +178,12 @@ class ReproducibleReduce(Plugin):
         )
         x = jnp.asarray(pack[K.SEND_BUF].value)
         fn = pack[K.OP].value if K.OP in pack else jnp.add
-        if not callable(fn):
-            fn = jnp.add
-        if len(self._axes) != 1:
-            raise KampingError(
-                "reproducible_allreduce requires a single-axis communicator"
-            )
-        p = self.size()
-        if not _is_pow2(p):
-            raise KampingError(
-                f"reproducible_allreduce: communicator size {p} must be a "
-                f"power of two (mesh axes on TPU pods are)"
-            )
-        if x.ndim < 1 or not _is_pow2(x.shape[0]):
+        if x.ndim < 1:
             raise KampingError(
                 "reproducible_allreduce: send_buf must be (m_local, ...) "
-                f"with power-of-two m_local; got shape {x.shape}"
+                f"leaf partials; got shape {x.shape}"
             )
-
-        # Local levels: canonical adjacent pairing.
-        partial = tree_reduce_canonical(x, fn)
-
-        # Cross-rank levels: at level k, partner pairs are (r, r + 2^k) for
-        # r ≡ 0 (mod 2^{k+1}); grouping fixed as fn(left=low rank, right=
-        # high rank).  All ranks execute the permute; non-roots carry a
-        # stale value that is masked out of the final broadcast.  The
-        # schedule is communicator-relative: on a split communicator the
-        # tree runs inside each group (rank() is group-relative and
-        # _ppermute maps the shifts to global permutations), so each
-        # group's result is p-invariant for its own leaf set.
-        rank = self.rank()
-        k = 1
-        while k < p:
-            perm = [(r, (r - k) % p) for r in range(p)]  # shift partials down
-            incoming = self._ppermute(partial, perm)
-            combined = fn(partial, incoming)
-            is_left = (rank % (2 * k)) == 0
-            partial = jnp.where(is_left, combined, partial)
-            k *= 2
-
-        # Broadcast the root (communicator rank 0) value.
-        mask = (rank == 0).astype(partial.dtype)
-        return self._psum(partial * mask)
+        return self.allreduce(
+            send_buf(x), op(fn),
+            deterministic_param("tree", leaves=x.shape[0]),
+        )

@@ -33,6 +33,12 @@ Backends:
 Plugins may register additional transports with
 :func:`register_transport`; the name becomes valid everywhere the
 ``transport`` parameter is accepted.
+
+One deliberate carve-out: a resolved ``deterministic("tree", ...)``
+parameter (DESIGN.md §12) replaces the reduction *before* the transport
+is consulted — the canonical tree is pure ``ppermute``, so the
+deterministic schedule (and its bits) is transport-invariant by
+construction.  Transports still move every other primitive of the call.
 """
 from __future__ import annotations
 

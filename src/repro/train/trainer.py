@@ -22,18 +22,26 @@ training options):
                       the same selectable transport as ``allreduce``.
 * ``compressed``    — back-compat alias for ``allreduce`` +
                       ``grad_compress="int8-ef"`` (below).
-* ``reproducible``  — manual-DP island; per-microbatch leaf gradients
-                      reduced with the p-invariant canonical tree
-                      (bitwise-identical results for any power-of-two DP
-                      size dividing the microbatch count).
+* ``reproducible``  — alias for ``allreduce`` + the engine-level
+                      ``deterministic("tree", leaves=microbatches)``
+                      parameter (DESIGN.md §12): per-microbatch leaf
+                      gradients reduced with the p-invariant canonical
+                      tree — bitwise-identical training runs for any
+                      power-of-two DP size, any transport (the tree is
+                      pure ppermute), for a fixed global leaf count
+                      ``M = dp_size * microbatches``.
 
 Orthogonally, ``grad_compress`` selects a payload codec from the engine
 registry (``repro.core.compression``, DESIGN.md §10) for the manual
-``allreduce``/``overlap`` modes: every floating-point gradient reduction
-carries ``compression(codec, state=err)`` (error feedback threaded
-through the op's result / the overlap engine's RequestPool plan), and
-the codec composes with whatever transport moves the bytes — ``xla``,
-``pallas`` rings, or the two-level ``hier`` schedule.
+``allreduce``/``overlap``/``reproducible`` modes: every floating-point
+gradient reduction carries ``compression(codec, state=err)`` (error
+feedback threaded through the op's result / the overlap engine's
+RequestPool plan), and the codec composes with whatever transport moves
+the bytes — ``xla``, ``pallas`` rings, or the two-level ``hier``
+schedule.  Under ``reproducible`` only deterministic-capable codecs are
+accepted (quantized-leaf semantics: exact tree accumulation of the
+quantized partials — int8-ef / fp8-e4m3; topk's rank-dependent
+scatter-add is rejected at construction time).
 """
 from __future__ import annotations
 
@@ -51,8 +59,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import (
     Communicator,
-    ReproducibleReduce,
     compression,
+    deterministic,
     get_codec,
     op,
     overlap_reduce_tree,
@@ -94,11 +102,14 @@ class TrainConfig:
     bucket_bytes: int = 4 << 20
     max_inflight: int = 2
     overlap_mode: str = "allreduce"
-    # Payload codec for the manual allreduce/overlap gradient reduction
-    # (None = uncompressed; "int8-ef" | "fp8-e4m3" | "topk" | any
-    # registered codec name or Codec instance — repro.core.compression,
-    # DESIGN.md §10).  Error-feedback state lives in the trainer's
-    # `extra` state and is threaded through the engine automatically.
+    # Payload codec for the manual allreduce/overlap/reproducible
+    # gradient reduction (None = uncompressed; "int8-ef" | "fp8-e4m3" |
+    # "topk" | any registered codec name or Codec instance —
+    # repro.core.compression, DESIGN.md §10).  Error-feedback state lives
+    # in the trainer's `extra` state and is threaded through the engine
+    # automatically.  Under grad_reduce="reproducible" only
+    # deterministic-capable codecs compose (quantized-leaf semantics,
+    # DESIGN.md §12); "topk" raises at construction.
     grad_compress: Optional[str] = None
 
     def __post_init__(self):
@@ -109,6 +120,21 @@ class TrainConfig:
             self.grad_reduce = "allreduce"
             if self.grad_compress is None:
                 self.grad_compress = "int8-ef"
+        # reproducible + codec: only deterministic-capable codecs have
+        # defined quantized-leaf semantics under the canonical tree
+        # (DESIGN.md §12); topk's scatter-add order is rank-dependent, so
+        # the combination is rejected here, at construction time.
+        if self.grad_reduce == "reproducible" and self.grad_compress is not None:
+            codec = get_codec(self.grad_compress)
+            if not codec.supports_deterministic:
+                raise ValueError(
+                    f"TrainConfig: grad_compress={self.grad_compress!r} does "
+                    "not compose with grad_reduce='reproducible': the "
+                    "codec's reduction order is not p-invariant (topk's "
+                    "scatter-add depends on which rank shipped each "
+                    "coordinate).  Use a deterministic-capable codec "
+                    "('int8-ef', 'fp8-e4m3') or drop grad_compress."
+                )
 
 
 def _split_microbatches(batch, m):
@@ -141,13 +167,26 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
         get_codec(tcfg.grad_compress) if tcfg.grad_compress is not None
         else None
     )
-    if grad_codec is not None and tcfg.grad_reduce not in ("allreduce",
-                                                           "overlap"):
+    if grad_codec is not None and tcfg.grad_reduce not in (
+        "allreduce", "overlap", "reproducible"
+    ):
         raise ValueError(
             f"TrainConfig.grad_compress={tcfg.grad_compress!r} requires "
-            f"grad_reduce='allreduce' or 'overlap' (got "
+            f"grad_reduce='allreduce', 'overlap', or 'reproducible' (got "
             f"{tcfg.grad_reduce!r}): compression is an engine-level "
             "parameter of the table-generated reductions"
+        )
+    if (
+        grad_codec is not None
+        and tcfg.grad_reduce == "reproducible"
+        and not grad_codec.supports_deterministic
+    ):
+        # Normally caught in TrainConfig.__post_init__; re-checked here
+        # for configs mutated after construction.
+        raise ValueError(
+            f"TrainConfig.grad_compress={tcfg.grad_compress!r} does not "
+            "compose with grad_reduce='reproducible' (codec reduction "
+            "order is not p-invariant); use 'int8-ef' or 'fp8-e4m3'"
         )
 
     if tcfg.grad_reduce == "auto":
@@ -298,20 +337,43 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
                 )
             loss = jax.lax.pmean(loss, dp_name)
             return grads, new_err, loss
-        # reproducible: per-microbatch leaf grads -> canonical tree
+        # reproducible: alias for allreduce + the engine-level
+        # deterministic("tree", leaves=microbatches) parameter
+        # (DESIGN.md §12).  Each microbatch gradient is one canonical
+        # leaf (global leaf index = rank*microbatches + i, the global
+        # data order), so the mean is bitwise independent of the DP size
+        # for a fixed global leaf count M = p*microbatches — under every
+        # transport (the tree is pure ppermute) and, with a quantized
+        # codec, over the quantized leaf partials (exact accumulation).
         stacked, losses = microbatch_grads(params, batch)
-        comm = Communicator(dp_name, transport=grad_transport).extend(
-            ReproducibleReduce
-        )
+        comm = Communicator(dp_name, transport=grad_transport)
+        denom = tcfg.microbatches * comm.size()
+        det = deterministic("tree", leaves=tcfg.microbatches)
 
-        def reduce_leaf(g):
-            return comm.reproducible_allreduce(send_buf(g)) / (
-                tcfg.microbatches * comm.size()
+        new_err = None
+        if grad_codec is not None:
+            flat_g, gdef = jax.tree.flatten(stacked)
+            flat_e = gdef.flatten_up_to(err)
+
+            def reduce_leaf_c(g, e):
+                r = comm.allreduce(
+                    send_buf(g), op(operator.add), det,
+                    compression(grad_codec, state=e),
+                )
+                return r.recv_buf / denom, r.compression_state
+
+            out = [reduce_leaf_c(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = jax.tree.unflatten(gdef, [o[0] for o in out])
+            new_err = jax.tree.unflatten(gdef, [o[1] for o in out])
+        else:
+            grads = jax.tree.map(
+                lambda g: comm.allreduce(
+                    send_buf(g), op(operator.add), det
+                ) / denom,
+                stacked,
             )
-
-        grads = jax.tree.map(reduce_leaf, stacked)
         loss = jax.lax.pmean(jnp.mean(losses), dp_name)
-        return grads, None, loss
+        return grads, new_err, loss
 
     def train_step(params, opt_state, extra, batch):
         bspec = jax.tree.map(lambda _: P(profile.dp), batch)
@@ -404,8 +466,14 @@ class Trainer:
             dp_size = int(
                 np.prod([self.mesh.shape[a] for a in self.profile.dp_axes])
             )
+            # Error-feedback residual, one slot per rank — and, under
+            # reproducible, per canonical leaf (the residual follows the
+            # leaf partitioning, so it is p-invariant too).
+            lead = (dp_size,)
+            if self.tcfg.grad_reduce == "reproducible":
+                lead = (dp_size, self.tcfg.microbatches)
             extra = jax.tree.map(
-                lambda p: jnp.zeros((dp_size,) + p.shape, jnp.float32), params
+                lambda p: jnp.zeros(lead + p.shape, jnp.float32), params
             )
         self.param_specs = pspecs
         self.opt_specs = ospecs

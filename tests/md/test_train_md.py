@@ -43,7 +43,7 @@ def _mesh(devs=None):
     )
 
 
-def _run(mode, mb, fsdp, steps=25):
+def _run(mode, mb, fsdp, steps=25, grad_compress=None):
     mesh = _mesh()
     profile = ShardingProfile(
         dp_axes=("data",), tp_axis="model",
@@ -52,7 +52,8 @@ def _run(mode, mb, fsdp, steps=25):
     tr = Trainer(CFG, mesh, profile,
                  TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=5,
                                              total_steps=60),
-                             grad_reduce=mode, microbatches=mb))
+                             grad_reduce=mode, microbatches=mb,
+                             grad_compress=grad_compress))
     state = tr.init_state(jax.random.PRNGKey(0))
     data = SyntheticLM(vocab_size=256, seq_len=32, batch_size=16, seed=1)
     state, hist = tr.run(state, data, steps=steps, log_every=steps - 1)
@@ -68,6 +69,52 @@ def _run(mode, mb, fsdp, steps=25):
 def test_training_converges(mode, mb, fsdp):
     hist = _run(mode, mb, fsdp)
     assert hist[-1][1] < hist[0][1] - 0.5, (mode, hist)
+
+
+@needs_partial_auto
+def test_training_converges_reproducible_compressed():
+    """grad_reduce="reproducible" + grad_compress="int8-ef": the
+    quantized-leaf deterministic path (DESIGN.md §12) still learns."""
+    hist = _run("reproducible", 4, False, grad_compress="int8-ef")
+    assert hist[-1][1] < hist[0][1] - 0.5, hist
+
+
+@needs_partial_auto
+@pytest.mark.parametrize("grad_compress", [None, "int8-ef"])
+def test_reproducible_training_bitwise_across_p(grad_compress):
+    """The ISSUE-7 acceptance gate at the real-Trainer level: a short
+    run with grad_reduce="reproducible" and a fixed global leaf count
+    M = dp_size * microbatches = 8 yields bitwise-identical parameters
+    at every power-of-two dp size (the global batch is sharded
+    contiguously, so global leaf index = rank*mb + i holds the same
+    rows for every p)."""
+    M = 8
+
+    def run(p, steps=4):
+        devs = jax.devices()[:p]
+        mesh = jax.sharding.Mesh(
+            np.asarray(devs).reshape(p, 1), ("data", "model")
+        )
+        profile = ShardingProfile(dp_axes=("data",), tp_axis="model")
+        tr = Trainer(CFG, mesh, profile,
+                     TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=5,
+                                                 total_steps=60),
+                                 grad_reduce="reproducible",
+                                 microbatches=M // p,
+                                 grad_compress=grad_compress))
+        state = tr.init_state(jax.random.PRNGKey(0))
+        data = SyntheticLM(vocab_size=256, seq_len=32, batch_size=16,
+                           seed=1)
+        (params, _, _), _ = tr.run(state, data, steps=steps,
+                                   log_every=steps)
+        return jax.tree.map(np.asarray, params)
+
+    ref = run(1)
+    for p in (2, 4, 8):
+        got = run(p)
+        assert jax.tree.structure(ref) == jax.tree.structure(got)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(a, b)
 
 
 @needs_partial_auto

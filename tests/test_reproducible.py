@@ -1,0 +1,660 @@
+"""Deterministic reduction as an engine param (DESIGN.md §12).
+
+Acceptance contract of the PR that promoted the paper-§V-C reproducible
+reduce from the ``ReproducibleReduce`` plugin to the engine-level
+``deterministic("tree", leaves=m)`` parameter on the reduction rows:
+
+(a) bitwise p-invariance at p ∈ {1, 2, 4, 8} against a NumPy
+    canonical-tree oracle, under every transport (xla / pallas / hier —
+    the tree is pure ppermute, so the bits are transport-invariant by
+    construction) and under ``comm.split()`` groups (group-relative
+    trees);
+(b) the two seed-era bugs are pinned by regressions that fail on the
+    pre-PR code: the ``partial * mask`` broadcast that turned a stale
+    ``inf`` on a non-root rank into ``0 * inf = nan`` on every rank, and
+    the silent ``if not callable(fn): fn = jnp.add`` fallback;
+(c) quantized codecs compose (quantized-leaf semantics: encode once,
+    tree-accumulate the exact accumulator) — ``int8-ef`` + deterministic
+    is bitwise p-invariant including the error-feedback residual —
+    while topk's rank-dependent scatter-add is rejected loudly;
+(d) a short training run (tiny MLP + AdamW, the trainer's
+    ``grad_reduce="reproducible"`` math) is bitwise identical across
+    p ∈ {1, 2, 4, 8} and across transports — the CI cross-p gate.
+"""
+import operator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Communicator,
+    KampingError,
+    ReproducibleReduce,
+    compression,
+    deterministic,
+    deterministic_reduce,
+    op,
+    overlap_reduce_tree,
+    send_buf,
+    tree_reduce_canonical,
+)
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+PS = (1, 2, 4, 8)
+TRANSPORTS = ("xla", "pallas", "hier")
+M = 8  # global leaf count shared by the p-invariance suites
+
+
+def spmd(f, *stacked):
+    return jax.vmap(f, axis_name="x")(*stacked)
+
+
+def leafdata(shape=(M, 5), seed=0, scale=100.0):
+    """Global leaf stack — the SAME array for every p; rank r of a p-way
+    run holds rows [r*M/p, (r+1)*M/p)."""
+    rng = np.random.RandomState(seed)
+    return (rng.randn(*shape) * scale).astype(np.float32)
+
+
+def oracle_tree(x, fn=np.add):
+    """NumPy canonical perfect-binary-tree oracle: level l pairs blocks
+    of 2^l adjacent leaves."""
+    while x.shape[0] > 1:
+        x = fn(x[0::2], x[1::2])
+    return x[0]
+
+
+def det_allreduce(data, p, transport=None, fn=operator.add):
+    """Run the engine-level deterministic allreduce of the global leaf
+    stack ``data`` at DP size p; returns the (p, ...) rank-stacked out."""
+    m = M // p
+    comm = Communicator("x", transport=transport)
+    return spmd(
+        lambda v: comm.allreduce(
+            send_buf(v), op(fn), deterministic("tree", leaves=m)
+        ),
+        jnp.asarray(data.reshape((p, m) + data.shape[1:])),
+    )
+
+
+# ---------------------------------------------------------------------------
+# (a) bitwise p-invariance vs the NumPy oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.pallas
+@pytest.mark.parametrize("p", PS)
+def test_p_invariance_vs_oracle(p):
+    data = leafdata()
+    out = np.asarray(det_allreduce(data, p))
+    want = oracle_tree(data)
+    for r in range(p):
+        np.testing.assert_array_equal(out[r], want)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("p", (2, 8))
+def test_transport_invariance(p, transport):
+    """The tree is pure ppermute: identical bits whichever transport the
+    communicator resolves (including the two-level hier schedule)."""
+    data = leafdata(seed=1)
+    out = np.asarray(det_allreduce(data, p, transport=transport))
+    np.testing.assert_array_equal(out[0], oracle_tree(data))
+    np.testing.assert_array_equal(
+        out, np.broadcast_to(out[0], out.shape)
+    )
+
+
+def test_reduce_row_deterministic():
+    """The `reduce` row accepts the parameter too (root kept for parity;
+    every rank computes the tree value)."""
+    data = leafdata(seed=2)
+    p, m = 4, M // 4
+    comm = Communicator("x")
+    out = spmd(
+        lambda v: comm.reduce(
+            send_buf(v), op("sum"), deterministic("tree", leaves=m)
+        ),
+        jnp.asarray(data.reshape(p, m, 5)),
+    )
+    np.testing.assert_array_equal(np.asarray(out)[0], oracle_tree(data))
+
+
+def test_nonblocking_variant():
+    """ideterministic rides the auto-generated iallreduce."""
+    data = leafdata(seed=3)
+    p, m = 4, M // 4
+    comm = Communicator("x")
+    out = spmd(
+        lambda v: comm.iallreduce(
+            send_buf(v), op("sum"), deterministic("tree", leaves=m)
+        ).wait(),
+        jnp.asarray(data.reshape(p, m, 5)),
+    )
+    np.testing.assert_array_equal(np.asarray(out)[0], oracle_tree(data))
+
+
+@pytest.mark.parametrize("p", (2, 4, 8))
+def test_leaves_none_one_leaf_per_rank(p):
+    """leaves=None: each rank's payload is one leaf, M = p — the
+    cross-rank tree only (deterministic at fixed p, matching the
+    oracle over the rank stack)."""
+    rng = np.random.RandomState(4)
+    data = (rng.randn(p, 6) * 50).astype(np.float32)
+    comm = Communicator("x")
+    out = spmd(
+        lambda v: comm.allreduce(
+            send_buf(v), op("sum"), deterministic("tree")
+        ),
+        jnp.asarray(data),
+    )
+    np.testing.assert_array_equal(np.asarray(out)[0], oracle_tree(data))
+
+
+def test_m_local_one_edge():
+    """leaves=1: the local tree is trivial; equal to leaves=None bits."""
+    p = 8
+    rng = np.random.RandomState(5)
+    data = (rng.randn(p, 3) * 50).astype(np.float32)
+    comm = Communicator("x")
+    with_stack = spmd(
+        lambda v: comm.allreduce(
+            send_buf(v), op("sum"), deterministic("tree", leaves=1)
+        ),
+        jnp.asarray(data.reshape(p, 1, 3)),
+    )
+    without = spmd(
+        lambda v: comm.allreduce(
+            send_buf(v), op("sum"), deterministic("tree")
+        ),
+        jnp.asarray(data),
+    )
+    np.testing.assert_array_equal(np.asarray(with_stack), np.asarray(without))
+
+
+def test_p1_edge():
+    """p=1: the tree degenerates to the local levels; still the oracle."""
+    data = leafdata(seed=6)
+    out = np.asarray(det_allreduce(data, 1))
+    np.testing.assert_array_equal(out[0], oracle_tree(data))
+
+
+# ---------------------------------------------------------------------------
+# non-sum ops
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", (2, 8))
+@pytest.mark.parametrize(
+    "fn,np_fn", [("max", np.maximum), ("min", np.minimum)]
+)
+def test_min_max_functors(p, fn, np_fn):
+    data = leafdata(seed=7)
+    out = np.asarray(det_allreduce(data, p, fn=fn))
+    np.testing.assert_array_equal(out[0], oracle_tree(data, np_fn))
+
+
+@pytest.mark.parametrize("p", (2, 4))
+def test_noncommutative_callable_fixed_grouping(p):
+    """A custom binary callable gets the canonical grouping: the value
+    depends on the leaf order (as in MPI) but not on p."""
+    data = leafdata(seed=8, scale=3.0)
+    fn = lambda a, b: a + 2.0 * b  # noqa: E731 - deliberately non-assoc
+    out = np.asarray(det_allreduce(data, p, fn=fn))
+    want = oracle_tree(data, lambda a, b: a + 2.0 * b)
+    np.testing.assert_array_equal(out[0], want)
+
+
+@pytest.mark.parametrize("fn,np_red", [("and", np.logical_and.reduce),
+                                       ("or", np.logical_or.reduce)])
+def test_logical_functors(fn, np_red):
+    """and/or keep the non-deterministic lowering's int32 min/max
+    semantics (trees of min/max are order-insensitive, so this equals
+    the plain reduction bitwise)."""
+    p = 4
+    rng = np.random.RandomState(9)
+    data = rng.rand(p, 2, 6) > 0.4
+    comm = Communicator("x")
+    out = spmd(
+        lambda v: comm.allreduce(
+            send_buf(v), op(fn), deterministic("tree", leaves=2)
+        ),
+        jnp.asarray(data),
+    )
+    want = np_red(data.reshape(p * 2, 6), axis=0)
+    np.testing.assert_array_equal(np.asarray(out)[0], want)
+
+
+# ---------------------------------------------------------------------------
+# (b) the two seed-era bug regressions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", (4, 8))
+def test_inf_on_nonroot_rank_not_poisoned(p):
+    """Pre-PR, the final broadcast computed `partial * (rank == 0)` +
+    psum: non-root ranks carry STALE partials after the masked tree
+    hops, so an inf gradient on a non-root rank became 0 * inf = nan and
+    poisoned every rank.  The fix (jnp.where before the psum) must
+    propagate the inf through the tree and nothing else."""
+    data = leafdata(seed=10)
+    data[M - 1] = np.inf  # lives on the LAST rank for every p > 1
+    out = np.asarray(det_allreduce(data, p))
+    assert not np.any(np.isnan(out)), "stale-partial inf poisoned the psum"
+    assert np.all(np.isinf(out))
+    np.testing.assert_array_equal(out[0], oracle_tree(data))
+
+
+@pytest.mark.parametrize("p", (4,))
+def test_inf_on_nonroot_rank_plugin_shim(p):
+    """Same regression through the paper-§V plugin spelling."""
+    data = leafdata(seed=10)
+    data[M - 1] = np.inf
+    m = M // p
+    out = spmd(
+        lambda v: Communicator("x").extend(
+            ReproducibleReduce
+        ).reproducible_allreduce(send_buf(v)),
+        jnp.asarray(data.reshape(p, m, 5)),
+    )
+    out = np.asarray(out)
+    assert not np.any(np.isnan(out))
+    np.testing.assert_array_equal(out[0], oracle_tree(data))
+
+
+def test_bad_op_raises_not_silently_summed():
+    """Pre-PR: `if not callable(fn): fn = jnp.add` silently reduced with
+    the wrong op.  Now a trace-time KampingError names the bad value."""
+    data = leafdata(seed=11)
+    with pytest.raises(KampingError, match="123"):
+        spmd(
+            lambda v: Communicator("x").extend(
+                ReproducibleReduce
+            ).reproducible_allreduce(send_buf(v), op(123)),
+            jnp.asarray(data.reshape(4, 2, 5)),
+        )
+
+
+def test_bad_op_raises_on_plain_allreduce():
+    """The same eager validation on the engine's lambda-fold path."""
+    with pytest.raises(KampingError, match="123"):
+        spmd(
+            lambda v: Communicator("x").allreduce(send_buf(v), op(123)),
+            jnp.ones((4, 5), jnp.float32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# plugin shim == engine param
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", (2, 8))
+def test_plugin_shim_equals_engine_param(p):
+    data = leafdata(seed=12)
+    m = M // p
+    stacked = jnp.asarray(data.reshape(p, m, 5))
+    shim = spmd(
+        lambda v: Communicator("x").extend(
+            ReproducibleReduce
+        ).reproducible_allreduce(send_buf(v)),
+        stacked,
+    )
+    engine = det_allreduce(data, p)
+    np.testing.assert_array_equal(np.asarray(shim), np.asarray(engine))
+
+
+# ---------------------------------------------------------------------------
+# groups: the tree is communicator-relative
+# ---------------------------------------------------------------------------
+def test_split_groups_run_group_relative_trees():
+    """A strided split of p=8 into two groups of 4: each group's tree
+    over its own leaves equals a flat p=4 run on the group's slice."""
+    p, m = 8, 2
+    rng = np.random.RandomState(13)
+    data = (rng.randn(p, m, 5) * 50).astype(np.float32)
+    colors = [r % 2 for r in range(p)]
+    groups = ([r for r in range(p) if r % 2 == 0],
+              [r for r in range(p) if r % 2 == 1])
+    out = spmd(
+        lambda v: Communicator("x").split(colors).allreduce(
+            send_buf(v), op("sum"), deterministic("tree", leaves=m)
+        ),
+        jnp.asarray(data),
+    )
+    for members in groups:
+        flat = spmd(
+            lambda v: Communicator("x").allreduce(
+                send_buf(v), op("sum"), deterministic("tree", leaves=m)
+            ),
+            jnp.asarray(data[members]),
+        )
+        for i, r in enumerate(members):
+            np.testing.assert_array_equal(
+                np.asarray(out)[r], np.asarray(flat)[i]
+            )
+
+
+# ---------------------------------------------------------------------------
+# communicator default + param factory validation
+# ---------------------------------------------------------------------------
+def test_communicator_default_and_explicit_disable():
+    p = 4
+    rng = np.random.RandomState(14)
+    data = (rng.randn(p, 6) * 50).astype(np.float32)
+    by_default = spmd(
+        lambda v: Communicator("x", deterministic="tree").allreduce(
+            send_buf(v), op("sum")
+        ),
+        jnp.asarray(data),
+    )
+    by_param = spmd(
+        lambda v: Communicator("x").allreduce(
+            send_buf(v), op("sum"), deterministic("tree")
+        ),
+        jnp.asarray(data),
+    )
+    np.testing.assert_array_equal(np.asarray(by_default), np.asarray(by_param))
+    disabled = spmd(
+        lambda v: Communicator("x", deterministic="tree").allreduce(
+            send_buf(v), op("sum"), deterministic(None)
+        ),
+        jnp.asarray(data),
+    )
+    plain = spmd(
+        lambda v: Communicator("x").allreduce(send_buf(v), op("sum")),
+        jnp.asarray(data),
+    )
+    np.testing.assert_array_equal(np.asarray(disabled), np.asarray(plain))
+
+
+def test_factory_validation():
+    with pytest.raises(KampingError, match="unknown scheme"):
+        deterministic("bogus")
+    with pytest.raises(KampingError, match="positive"):
+        deterministic("tree", leaves=0)
+    with pytest.raises(KampingError, match="positive"):
+        deterministic("tree", leaves=True)
+    with pytest.raises(KampingError, match="leaves"):
+        deterministic(None, leaves=2)
+    with pytest.raises(KampingError):
+        Communicator("x", deterministic="bogus")
+
+
+def test_shape_and_size_validation():
+    # leaf-count mismatch with the send_buf shape
+    with pytest.raises(KampingError, match="leaves=4"):
+        spmd(
+            lambda v: Communicator("x").allreduce(
+                send_buf(v), op("sum"), deterministic("tree", leaves=4)
+            ),
+            jnp.ones((2, 2, 3), jnp.float32),
+        )
+    # non-power-of-two leaf count
+    with pytest.raises(KampingError, match="power of two"):
+        spmd(
+            lambda v: Communicator("x").allreduce(
+                send_buf(v), op("sum"), deterministic("tree", leaves=3)
+            ),
+            jnp.ones((2, 3, 4), jnp.float32),
+        )
+    # non-power-of-two communicator size
+    with pytest.raises(KampingError, match="power of two"):
+        spmd(
+            lambda v: Communicator("x").allreduce(
+                send_buf(v), op("sum"), deterministic("tree")
+            ),
+            jnp.ones((6, 4), jnp.float32),
+        )
+
+
+def test_tree_reduce_canonical_validates():
+    with pytest.raises(KampingError, match="power of two"):
+        tree_reduce_canonical(jnp.ones((3, 2)))
+    with pytest.raises(KampingError, match="callable"):
+        jax.vmap(
+            lambda v: deterministic_reduce(Communicator("x"), v, fn=7),
+            axis_name="x",
+        )(jnp.ones((2, 3)))
+
+
+# ---------------------------------------------------------------------------
+# reduce_scatter under the deterministic schedule
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p", (2, 4))
+def test_reduce_scatter_deterministic(p):
+    rng = np.random.RandomState(15)
+    x = (rng.randn(p, p, 3) * 50).astype(np.float32)
+    comm = Communicator("x")
+    out = spmd(
+        lambda v: comm.reduce_scatter(
+            send_buf(v), op("sum"), deterministic("tree")
+        ),
+        jnp.asarray(x),
+    )
+    np.testing.assert_array_equal(np.asarray(out), oracle_tree(x))
+
+
+def test_reduce_scatter_rejects_leaves():
+    with pytest.raises(KampingError, match="not defined for reduce_scatter"):
+        spmd(
+            lambda v: Communicator("x").reduce_scatter(
+                send_buf(v), op("sum"), deterministic("tree", leaves=2)
+            ),
+            jnp.ones((2, 2, 3), jnp.float32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# (c) codec composition: quantized-leaf semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ("int8-ef", "fp8-e4m3"))
+def test_codec_deterministic_p_invariant(codec):
+    """Value AND error-feedback residual are bitwise p-invariant: the
+    scale is a global pmax (exact), the accumulator sums through the
+    canonical tree, and the residual follows the leaf partitioning."""
+    data = leafdata(seed=16, scale=3.0)
+    outs = {}
+    for p in (1, 2, 4, 8):
+        m = M // p
+        comm = Communicator("x")
+
+        def f(v, e):
+            r = comm.allreduce(
+                send_buf(v), op("sum"),
+                deterministic("tree", leaves=m),
+                compression(codec, state=e),
+            )
+            return r.recv_buf, r.compression_state
+
+        stacked = jnp.asarray(data.reshape(p, m, 5))
+        val, st = spmd(f, stacked, jnp.zeros_like(stacked))
+        outs[p] = (np.asarray(val)[0], np.asarray(st).reshape(M, 5))
+    for p in (2, 4, 8):
+        np.testing.assert_array_equal(outs[p][0], outs[1][0])
+        np.testing.assert_array_equal(outs[p][1], outs[1][1])
+
+
+@pytest.mark.pallas
+def test_codec_deterministic_transport_invariant():
+    data = leafdata(seed=17, scale=3.0)
+    p, m = 4, M // 4
+    vals = []
+    for t in TRANSPORTS:
+        comm = Communicator("x", transport=t)
+        out = spmd(
+            lambda v: comm.allreduce(
+                send_buf(v), op("sum"),
+                deterministic("tree", leaves=m),
+                compression("int8-ef"),
+            ),
+            jnp.asarray(data.reshape(p, m, 5)),
+        )
+        vals.append(np.asarray(out))
+    np.testing.assert_array_equal(vals[0], vals[1])
+    np.testing.assert_array_equal(vals[0], vals[2])
+
+
+def test_topk_deterministic_rejected():
+    with pytest.raises(KampingError, match="topk"):
+        spmd(
+            lambda v: Communicator("x").allreduce(
+                send_buf(v), op("sum"), deterministic("tree"),
+                compression("topk"),
+            ),
+            jnp.ones((4, 8), jnp.float32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# overlap engine: fixed-p deterministic buckets
+# ---------------------------------------------------------------------------
+@pytest.mark.pallas
+def test_overlap_deterministic_transport_invariant():
+    """deterministic= pins every bucket's reduction to the cross-rank
+    tree: identical bits across transports at fixed p (not p-invariant —
+    buckets are flat concatenations, not canonical leaf stacks)."""
+    p = 4
+    rng = np.random.RandomState(18)
+    tree = {
+        "w": (rng.randn(p, 17, 3) * 50).astype(np.float32),
+        "b": (rng.randn(p, 5) * 50).astype(np.float32),
+    }
+    outs = []
+    for t in TRANSPORTS:
+        out = spmd(
+            lambda w, b: overlap_reduce_tree(
+                Communicator("x", transport=t),
+                {"w": w, "b": b},
+                bucket_bytes=64,
+                deterministic="tree",
+            ),
+            tree["w"], tree["b"],
+        )
+        outs.append(jax.tree.map(np.asarray, out))
+    for other in outs[1:]:
+        np.testing.assert_array_equal(outs[0]["w"], other["w"])
+        np.testing.assert_array_equal(outs[0]["b"], other["b"])
+    # and the value is the canonical cross-rank tree per element
+    np.testing.assert_array_equal(
+        outs[0]["w"][0], oracle_tree(tree["w"])
+    )
+
+
+# ---------------------------------------------------------------------------
+# (d) the cross-p bitwise training-run gate (trainer math, tiny MLP)
+# ---------------------------------------------------------------------------
+def _mlp_init():
+    rng = np.random.RandomState(42)
+    return {
+        "w1": jnp.asarray(rng.randn(6, 16).astype(np.float32) * 0.3),
+        "b1": jnp.zeros((16,), jnp.float32),
+        "w2": jnp.asarray(rng.randn(16, 1).astype(np.float32) * 0.3),
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _mlp_loss(params, xb, yb):
+    h = jnp.tanh(xb @ params["w1"] + params["b1"])
+    pred = h @ params["w2"] + params["b2"]
+    return jnp.mean((pred - yb) ** 2)
+
+
+def _train_run(p, steps=3, transport=None, codec=None):
+    """The trainer's grad_reduce="reproducible" math under the vmap SPMD
+    interpreter: per-microbatch leaf grads, engine-level deterministic
+    allreduce (optionally compressed), AdamW update — returns the final
+    fp32 param tree (identical on all ranks; rank 0's copy)."""
+    m = M // p
+    bsz = 4
+    rng = np.random.RandomState(19)
+    # the SAME global data for every p, sliced by rank in leaf order
+    gx = rng.randn(steps, M, bsz, 6).astype(np.float32)
+    gy = rng.randn(steps, M, bsz, 1).astype(np.float32)
+    params0 = _mlp_init()
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=100)
+    comm = Communicator("x", transport=transport)
+    det = deterministic("tree", leaves=m)
+
+    def rank_run(xs, ys, err):
+        # xs: (steps, m, bsz, 6) — this rank's microbatches each step
+        params = params0
+        opt = adamw_init(params)
+        for s in range(steps):
+            grads_m = jax.vmap(
+                lambda xb, yb: jax.grad(_mlp_loss)(params, xb, yb)
+            )(xs[s], ys[s])  # leaves stacked (m, ...)
+            if codec is not None:
+                flat_g, gdef = jax.tree.flatten(grads_m)
+                flat_e = gdef.flatten_up_to(err)
+                red, new_e = [], []
+                for g, e in zip(flat_g, flat_e):
+                    r = comm.allreduce(
+                        send_buf(g), op("sum"), det,
+                        compression(codec, state=e),
+                    )
+                    red.append(r.recv_buf / M)
+                    new_e.append(r.compression_state)
+                grads = jax.tree.unflatten(gdef, red)
+                err = jax.tree.unflatten(gdef, new_e)
+            else:
+                grads = jax.tree.map(
+                    lambda g: comm.allreduce(send_buf(g), op("sum"), det)
+                    / M,
+                    grads_m,
+                )
+            params, opt, _ = adamw_update(
+                ocfg, grads, opt, param_dtype=jnp.float32
+            )
+        return params
+
+    err0 = jax.tree.map(
+        lambda v: jnp.zeros((p, m) + v.shape, jnp.float32), params0
+    )
+    xs = jnp.asarray(gx.reshape(steps, p, m, bsz, 6).swapaxes(0, 1))
+    ys = jnp.asarray(gy.reshape(steps, p, m, bsz, 1).swapaxes(0, 1))
+    out = spmd(rank_run, xs, ys, err0)
+    return jax.tree.map(lambda v: np.asarray(v)[0], out)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("p", (2, 4, 8))
+def test_training_run_bitwise_p_invariant(p):
+    ref = _train_run(1)
+    got = _train_run(p)
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("transport", ("pallas", "hier"))
+def test_training_run_bitwise_transport_invariant(transport):
+    ref = _train_run(4, transport=None)
+    got = _train_run(4, transport=transport)
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("p", (2, 8))
+def test_training_run_with_codec_bitwise_p_invariant(p):
+    """grad_compress="int8-ef" + reproducible: quantized-leaf semantics
+    keep the whole run bitwise p-invariant (error feedback included)."""
+    ref = _train_run(1, codec="int8-ef")
+    got = _train_run(p, codec="int8-ef")
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# TrainConfig surface (construction-time semantics)
+# ---------------------------------------------------------------------------
+def test_trainconfig_reproducible_topk_rejected():
+    from repro.train.trainer import TrainConfig
+
+    with pytest.raises(ValueError, match="topk"):
+        TrainConfig(grad_reduce="reproducible", grad_compress="topk")
+
+
+def test_trainconfig_reproducible_quantized_accepted():
+    from repro.train.trainer import TrainConfig
+
+    t = TrainConfig(grad_reduce="reproducible", grad_compress="int8-ef",
+                    microbatches=2)
+    assert t.grad_reduce == "reproducible"
+    assert t.grad_compress == "int8-ef"

@@ -76,6 +76,20 @@ explicit calls.
   codec encodes once; xla / pallas / hier move the exact accumulator —
   quantize-once / dequantize-once at the hier boundary) and with
   `comm.split()` groups (the scale exchange is group-relative).
+* `deterministic("tree", leaves=m)` — p-invariant reduction order for
+  the reduction rows (DESIGN.md §12, paper §V-C): the payload's leading
+  axis holds `m` local leaves and the reduction is evaluated as the
+  canonical perfect binary tree over the *global* leaf sequence
+  (`rank * m + i`), so the result is bitwise identical for every
+  power-of-two p that partitions the same leaves.  Resolution: per-call
+  parameter > communicator default
+  (`Communicator(axis, deterministic="tree")`) > off;
+  `deterministic(None)` disables a default.  The tree bypasses the
+  transport's reduction primitive entirely (pure `ppermute` hops), so
+  the bits are also invariant across `transport(...)` backends and
+  group-relative under `comm.split()`.  Composes with quantized
+  `compression(...)` codecs (the exact accumulator is tree-reduced;
+  `topk` raises — its scatter-add order is not p-invariant).
 
 Non-blocking variants return a `NonBlockingResult`; bulk completion goes
 through `RequestPool` (`waitall` / `testany` / `collect`), the substrate
@@ -136,6 +150,8 @@ def _fmt_accepted(spec) -> str:
     names.append("`transport`")  # engine-level: every row accepts it
     if spec.compressible:
         names.append("`compression`")  # engine-level: reduction rows
+    if spec.deterministic:
+        names.append("`deterministic`")  # engine-level: reduction rows
     return ", ".join(names)
 
 
@@ -239,6 +255,14 @@ def _section(spec) -> str:
             "codecs (engine-level; DESIGN.md §10); "
             "`compression(name, state=err)` returns the new residual as "
             "the result's `compression_state` |"
+        )
+    if spec.deterministic:
+        lines.append(
+            "| deterministic | accepts `deterministic(\"tree\", "
+            "leaves=m)` (engine-level; DESIGN.md §12): the canonical "
+            "perfect-binary-tree order over the global leaf sequence, "
+            "bitwise invariant across p, transports, and `comm.split()` "
+            "groups |"
         )
     if spec.heavy_count_check:
         lines.append(
