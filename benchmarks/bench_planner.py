@@ -1,0 +1,209 @@
+"""Hand-tuned overlap knobs vs the cost-model planner (DESIGN.md §13).
+
+For each payload sweep (a synthetic gradient pytree under the vmap SPMD
+interpreter at p=8, the bench_transports.py idiom) this times
+
+* ``hand`` — a grid of explicit knob settings (transport × per-bucket
+  collective × ``bucket_bytes``), the way a user would tune
+  ``overlap_reduce_tree`` by hand; and
+* ``auto`` — ``plan="auto"``: the :class:`~repro.core.CostModel` fitted
+  from the checked-in ``benchmarks/artifacts/*.json`` picks transport /
+  mode / bucket bytes / in-flight bound, and the rewrite rules
+  (fuse / merge / hoist / reorder) reshape the schedule — all
+  bitwise-neutral (tests/test_planner_equivalence.py).
+
+Each row also reports ``wire_bytes_per_rank``, computed from the staged
+schedule: every collective node's payload counted once (quantized
+buckets at the codec's wire width plus a 4-byte scale per bucket; an
+allreduce's internal RS+AG double-pass is a transport property, not a
+schedule one).  The ``auto`` rows carry ``auto_vs_hand`` — auto time
+over the sweep's best hand time; <= 1.05 means the planner matched or
+beat hand tuning on that sweep (the acceptance bar: at least one sweep
+must).
+
+Emits benchmarks/artifacts/planner.json (schema-gated by
+check_artifacts.py on the CI bench-smoke leg).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from common import csv_row, make_timer
+from repro.core import (
+    ALL_RULES,
+    Communicator,
+    get_codec,
+    overlap_reduce_tree,
+    plan_buckets,
+)
+from repro.core.overlap import _build_schedule
+from repro.core.planner import apply_rules, resolve_plan
+
+P_RANKS = 8
+TRANSPORTS = ("xla", "pallas")
+MODES = ("allreduce", "reduce_scatter")
+BUCKET_BYTES = (1 << 14, 1 << 18, 1 << 22)
+MAX_INFLIGHT = 2
+CODECS = (None, "int8-ef")
+
+# Payload sweeps: bias/norm-heavy (many tiny leaves, latency-bound),
+# transformer mix (the bench_overlap.py tree, bandwidth + schedule).
+PAYLOADS = {
+    "small-leaves": [64] * 48 + [1024] * 8,
+    "transformer-mix": [64] * 24 + [4096] * 8 + [65536] * 4,
+}
+SMOKE_PAYLOADS = {"smoke": [64] * 4 + [1024] * 2}
+SMOKE_BUCKET_BYTES = (1 << 12,)
+
+
+def make_tree(p, leaf_sizes):
+    rng = np.random.RandomState(0)
+    return {
+        f"leaf{i:02d}": rng.randn(p, n).astype(np.float32)
+        for i, n in enumerate(leaf_sizes)
+    }
+
+
+def reduction(transport, codec, **kw):
+    def f(tree):
+        comm = Communicator("x", transport=transport)
+        # no err_state: the engine returns just the reduced tree
+        return overlap_reduce_tree(
+            comm, tree, scale=1.0 / comm.size(),
+            compression=codec, **kw
+        )
+
+    return f
+
+
+def spmd(f):
+    return jax.jit(jax.vmap(f, axis_name="x"))
+
+
+def wire_bytes_per_rank(tree, *, bucket_bytes, mode, codec_name, rules, p):
+    """Interconnect bytes per rank per step, from the staged schedule."""
+    leaves = [v[0] for v in jax.tree.leaves(tree)]
+    codec = get_codec(codec_name) if codec_name else None
+    prog = _build_schedule(
+        plan_buckets(leaves, bucket_bytes),
+        mode=mode, codec=codec, deterministic=None, p=p,
+    )
+    prog = apply_rules(prog, rules, {
+        "bucket_bytes": bucket_bytes,
+        "codec_quantized": codec is not None,
+    })
+    total = 0
+    for node in prog.ops:
+        if node.op == "scale_exchange":
+            total += 4 * len(node.meta["buckets"])
+        elif node.param("compression") is not None:
+            # quantized wire width (1 byte for int8-ef / fp8-e4m3) + the
+            # per-bucket scale, unless a hoisted exchange already sent it
+            total += node.meta["total"]
+            if not any(
+                prog.ops[d].op == "scale_exchange" for d in node.deps
+            ):
+                total += 4 * len(node.meta["buckets"])
+        else:
+            total += node.nbytes
+    return total
+
+
+def run(smoke: bool = False, out: str | None = None):
+    time_fn = make_timer(smoke)
+    payloads = SMOKE_PAYLOADS if smoke else PAYLOADS
+    bucket_grid = SMOKE_BUCKET_BYTES if smoke else BUCKET_BYTES
+    rows = []
+    for pname, leaf_sizes in payloads.items():
+        tree = make_tree(P_RANKS, leaf_sizes)
+        grad_bytes = sum(v.nbytes // P_RANKS for v in tree.values())
+        for codec_name in CODECS:
+            codec = get_codec(codec_name) if codec_name else None
+            best_us, best_cell = None, None
+            for t in TRANSPORTS:
+                for mode in MODES:
+                    for bb in bucket_grid:
+                        fn = reduction(
+                            t, codec, bucket_bytes=bb, mode=mode,
+                            max_inflight=MAX_INFLIGHT,
+                        )
+                        us = time_fn(spmd(fn), tree) * 1e6
+                        wire = wire_bytes_per_rank(
+                            tree, bucket_bytes=bb, mode=mode,
+                            codec_name=codec_name, rules=(), p=P_RANKS,
+                        )
+                        csv_row(
+                            f"planner_hand_{pname}_{codec_name or 'raw'}",
+                            us,
+                            f"t={t};mode={mode};bucket={bb};wire={wire}",
+                        )
+                        rows.append({
+                            "payload": pname, "p": P_RANKS,
+                            "grad_bytes": grad_bytes,
+                            "codec": codec_name, "strategy": "hand",
+                            "transport": t, "mode": mode,
+                            "bucket_bytes": bb,
+                            "max_inflight": MAX_INFLIGHT,
+                            "n_rules": 0, "us": us,
+                            "wire_bytes_per_rank": wire,
+                            "auto_vs_hand": None,
+                        })
+                        if best_us is None or us < best_us:
+                            best_us, best_cell = us, (t, mode, bb)
+
+            plan = resolve_plan(
+                "auto", total_bytes=grad_bytes, p=P_RANKS,
+                codec=codec_name,
+            )
+            fn = reduction(None, codec, plan=plan)
+            us = time_fn(spmd(fn), tree) * 1e6
+            wire = wire_bytes_per_rank(
+                tree,
+                bucket_bytes=plan.bucket_bytes or (4 << 20),
+                mode=plan.mode or "allreduce",
+                codec_name=codec_name, rules=plan.rules, p=P_RANKS,
+            )
+            ratio = us / best_us
+            csv_row(
+                f"planner_auto_{pname}_{codec_name or 'raw'}", us,
+                f"plan={plan.describe()};auto_vs_hand={ratio:.3f};"
+                f"hand_best={best_cell};wire={wire}",
+            )
+            rows.append({
+                "payload": pname, "p": P_RANKS, "grad_bytes": grad_bytes,
+                "codec": codec_name, "strategy": "auto",
+                "transport": plan.transport, "mode": plan.mode,
+                "bucket_bytes": plan.bucket_bytes,
+                "max_inflight": plan.max_inflight,
+                "n_rules": len(plan.rules), "us": us,
+                "wire_bytes_per_rank": wire,
+                "auto_vs_hand": ratio,
+            })
+    out_path = out or os.path.join(
+        os.path.dirname(__file__), "artifacts", "planner.json"
+    )
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    autos = [r for r in rows if r["strategy"] == "auto"]
+    hit = [r for r in autos if r["auto_vs_hand"] <= 1.05]
+    print(
+        f"auto within 5% of (or beating) best hand-tuned on "
+        f"{len(hit)}/{len(autos)} sweeps"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tree, 1 rep (CI schema check)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    a = ap.parse_args()
+    run(smoke=a.smoke, out=a.out)

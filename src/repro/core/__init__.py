@@ -29,6 +29,7 @@ from .compression import (
 )
 from .flatten import bucketize_by_destination, flatten_buckets, with_flattened
 from .grid import GridCommunicator
+from .ir import IROp, Program, Recorder, annotate, recording, trace_collectives
 from .nonblocking import NonBlockingResult, RequestPool
 from .opspec import OP_TABLE, OpSpec
 from .overlap import Bucket, overlap_reduce_tree, plan_buckets
@@ -43,6 +44,7 @@ from .params import (
     move,
     no_resize,
     op,
+    plan,
     recv_buf,
     recv_count,
     recv_count_out,
@@ -89,6 +91,13 @@ from .serialization import (
     host_pack,
     host_unpack,
 )
+from .planner import (
+    ALL_RULES,
+    REWRITE_RULES,
+    CostModel,
+    Plan,
+    apply_rules,
+)
 from .sparse import SparseAlltoall, neighbors
 from .ulfm import DeviceFailureDetected, RevokedError, WorldComm
 
@@ -104,7 +113,10 @@ __all__ = [
     "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
     "send_displs_out", "recv_displs", "recv_displs_out", "op", "root",
     "dest", "source", "tag", "axis", "move", "neighbors", "transport",
-    "compression", "deterministic", "deterministic_reduce",
+    "compression", "deterministic", "deterministic_reduce", "plan",
+    "IROp", "Program", "Recorder", "recording", "annotate",
+    "trace_collectives",
+    "Plan", "CostModel", "REWRITE_RULES", "ALL_RULES", "apply_rules",
     "Transport", "XlaTransport", "PallasTransport", "HierTransport",
     "register_transport", "get_transport", "available_transports",
     "Codec", "QuantizedCodec", "Int8ErrorFeedbackCodec", "Fp8E4M3Codec",

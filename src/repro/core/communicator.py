@@ -87,7 +87,7 @@ class Communicator:
 
     def __init__(self, axis: Any = "data", transport: Optional[str] = None,
                  groups=None, compression: Optional[str] = None,
-                 deterministic: Optional[str] = None):
+                 deterministic: Optional[str] = None, plan=None):
         self.axis = axis
         self._axes: Tuple = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
         # Default collective backend for every op on this communicator
@@ -114,6 +114,22 @@ class Communicator:
                 "registered scheme is 'tree' (or None)"
             )
         self.deterministic_name = deterministic
+        # Default cost-model plan for every op on this communicator
+        # (DESIGN.md §13): "auto" (fitted cost model picks the cheapest
+        # measured transport per call) or a planner.Plan with an explicit
+        # transport override.  A plan only speaks when no per-call
+        # transport(...) parameter and no communicator transport default
+        # is set — explicit choices always win.  A per-call plan(...)
+        # parameter overrides it (plan(None) disables it).
+        if plan is not None:
+            from .planner import Plan as _Plan
+
+            if plan != "auto" and not isinstance(plan, _Plan):
+                raise KampingError(
+                    f"Communicator(plan={plan!r}): expected None, 'auto', "
+                    "or a repro.core.Plan instance"
+                )
+        self.plan = plan
         # Group scope (DESIGN.md §9): None = the flat communicator; else a
         # static partition of the axis ranks (tuple of equally-sized
         # tuples of global ranks).  Normally produced by split()/
@@ -310,7 +326,7 @@ class Communicator:
     # -- reduction kernel ----------------------------------------------------
     def _reduce_impl(self, x, op_param, transport=None, codec=None,
                      codec_state=None, codec_explicit=True,
-                     deterministic=None, det_leaves=None):
+                     deterministic=None, det_leaves=None, codec_scale=None):
         t = transport if transport is not None else resolve_transport(self)
         fn = op_param.value
         x = jnp.asarray(x)
@@ -326,7 +342,8 @@ class Communicator:
                     # Quantized-leaf semantics: encode once, tree-
                     # accumulate the quantized partials exactly.
                     return codec.deterministic_allreduce_sum(
-                        self, x, codec_state, leaves=det_leaves
+                        self, x, codec_state, leaves=det_leaves,
+                        scale=codec_scale,
                     )
                 if codec_explicit:
                     raise KampingError(
@@ -375,7 +392,8 @@ class Communicator:
             # payloads — the same rule as integer payloads), keeping the
             # (value, state) caller contract with the state unchanged.
             if _try_hash_lookup(fn, _SUM_FNS):
-                return codec.allreduce_sum(self, t, x, codec_state)
+                return codec.allreduce_sum(self, t, x, codec_state,
+                                           scale=codec_scale)
             if codec_explicit:
                 raise KampingError(
                     f"compression('{codec.name}') requires a sum reduction "

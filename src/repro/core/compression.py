@@ -100,12 +100,27 @@ class Codec:
     # scatter-add) must leave this False.
     supports_deterministic: bool = False
 
-    def allreduce_sum(self, comm, transport, x, state=None):
+    def allreduce_sum(self, comm, transport, x, state=None, scale=None):
         """Compressed sum over the communicator; same value on all
-        ranks.  Returns ``(sum, new_state)``."""
+        ranks.  Returns ``(sum, new_state)``.
+
+        ``scale`` (quantized codecs only) supplies a precomputed shared
+        scale — the planner's hoisted scale exchange (DESIGN.md §13);
+        the encode then skips its own group-pmax.  Codecs without a
+        shared scale must reject it (see :meth:`_reject_scale`)."""
         raise NotImplementedError
 
-    def deterministic_allreduce_sum(self, comm, x, state=None, leaves=None):
+    def _reject_scale(self, scale):
+        if scale is not None:
+            raise KampingError(
+                f"compression('{self.name}', scale=...): this codec has "
+                "no shared quantization scale to precompute; scale= is "
+                "only meaningful for quantized codecs (int8-ef, "
+                "fp8-e4m3)"
+            )
+
+    def deterministic_allreduce_sum(self, comm, x, state=None, leaves=None,
+                                    scale=None):
         """Compressed sum under the ``deterministic("tree")`` schedule:
         encode once, evaluate the canonical tree over the encoded
         accumulator, dequantize once.  Returns ``(sum, new_state)``.
@@ -123,7 +138,7 @@ class Codec:
             "parameter."
         )
 
-    def reduce_scatter_sum(self, comm, transport, x, state=None):
+    def reduce_scatter_sum(self, comm, transport, x, state=None, scale=None):
         """Compressed reduce-scatter of ``(p, chunk, ...)``
         contributions; returns ``(this rank's chunk, new_state)`` with
         ``new_state`` shaped like ``x`` (the residual of the *local*
@@ -177,26 +192,33 @@ class QuantizedCodec(Codec):
         """Map scaled values onto the codec grid (array -> array)."""
         raise NotImplementedError
 
-    def _encode(self, comm, x, state):
+    def _encode(self, comm, x, state, scale=None):
         gf = x.astype(jnp.float32)
         if state is not None:
             gf = gf + state.astype(jnp.float32)
-        amax = jnp.max(jnp.abs(gf))
-        # Group-relative scale exchange: _pmax is group-scoped, so each
-        # comm.split() group compresses against its own absmax.
-        scale = comm._pmax(amax) / self.qmax
-        scale = jnp.maximum(scale, self.scale_floor)
+        if scale is None:
+            amax = jnp.max(jnp.abs(gf))
+            # Group-relative scale exchange: _pmax is group-scoped, so
+            # each comm.split() group compresses against its own absmax.
+            scale = comm._pmax(amax) / self.qmax
+            scale = jnp.maximum(scale, self.scale_floor)
+            from . import ir
+
+            rec = ir.active()
+            if rec is not None:
+                ir.record_scale_exchange(rec, comm, self, amax, scale)
         q = self._quantize(gf / scale)
         new_state = gf - q.astype(jnp.float32) * scale
         return q, scale, (new_state if state is not None else None)
 
-    def allreduce_sum(self, comm, transport, x, state=None):
+    def allreduce_sum(self, comm, transport, x, state=None, scale=None):
         self._check_payload(x)
-        q, scale, new_state = self._encode(comm, jnp.asarray(x), state)
+        q, scale, new_state = self._encode(comm, jnp.asarray(x), state, scale)
         total = transport.allreduce_sum(comm, q.astype(self.acc_dtype))
         return total.astype(jnp.float32) * scale, new_state
 
-    def deterministic_allreduce_sum(self, comm, x, state=None, leaves=None):
+    def deterministic_allreduce_sum(self, comm, x, state=None, leaves=None,
+                                    scale=None):
         """Quantized-leaf semantics (DESIGN.md §12): encode once (scale =
         group-pmax of the absmax over the *whole* local payload — exact,
         hence p-invariant for fixed global leaf data), tree-accumulate
@@ -208,18 +230,18 @@ class QuantizedCodec(Codec):
         from .reproducible import deterministic_reduce
 
         self._check_payload(x)
-        q, scale, new_state = self._encode(comm, jnp.asarray(x), state)
+        q, scale, new_state = self._encode(comm, jnp.asarray(x), state, scale)
         total = deterministic_reduce(
             comm, q.astype(self.acc_dtype), jnp.add, leaves=leaves
         )
         return total.astype(jnp.float32) * scale, new_state
 
-    def reduce_scatter_sum(self, comm, transport, x, state=None):
+    def reduce_scatter_sum(self, comm, transport, x, state=None, scale=None):
         self._check_payload(x)
         # Encode ONCE over the full (p, chunk, ...) buffer, then let the
         # transport scatter the exact accumulator — the bandwidth-right
         # decomposition (wire win on the reduce-scatter leg).
-        q, scale, new_state = self._encode(comm, jnp.asarray(x), state)
+        q, scale, new_state = self._encode(comm, jnp.asarray(x), state, scale)
         chunk = transport.reduce_scatter_sum(comm, q.astype(self.acc_dtype))
         return chunk.astype(jnp.float32) * scale, new_state
 
@@ -303,9 +325,10 @@ class TopKCodec(Codec):
     def _k(self, n: int) -> int:
         return max(1, int(math.ceil(self.ratio * n)))
 
-    def allreduce_sum(self, comm, transport, x, state=None):
+    def allreduce_sum(self, comm, transport, x, state=None, scale=None):
         from .sparse import permute_from_neighbors
 
+        self._reject_scale(scale)
         self._check_payload(x)
         x = jnp.asarray(x)
         shape = x.shape
@@ -331,10 +354,10 @@ class TopKCodec(Codec):
             None if state is None else new_state.reshape(shape),
         )
 
-    def reduce_scatter_sum(self, comm, transport, x, state=None):
+    def reduce_scatter_sum(self, comm, transport, x, state=None, scale=None):
         # No bandwidth-optimal sparse reduce-scatter exists (the top-k
         # coordinates are rank-dependent): reduce densely, take my slot.
-        full, new_state = self.allreduce_sum(comm, transport, x, state)
+        full, new_state = self.allreduce_sum(comm, transport, x, state, scale)
         mine = jax.lax.dynamic_index_in_dim(
             full, comm.rank(), 0, keepdims=False
         )

@@ -1,0 +1,376 @@
+"""Trace-time collective IR (DESIGN.md §13).
+
+The op-spec table (DESIGN.md §3) is a declarative description of one
+collective; this module raises the description one altitude: the
+*sequence* of collectives a program issues — bucketed gradient
+reductions, MoE dispatch/combine, codec scale exchanges, serve liveness
+stats — captured at trace time as a small dependency-ordered IR,
+modeled on the xdsl/MLIR MPI dialect (SNIPPETS.md §1–2): one SSA-ish
+:class:`IROp` per issued table row, with the payload shape/dtype, the
+resolved engine-parameter bindings (transport, compression,
+deterministic, functor), and data-dependency edges inferred from buffer
+identity.
+
+Two producers write this IR:
+
+* **Observation** — :func:`trace_collectives` (or the :func:`recording`
+  context) installs a :class:`Recorder`; every ``execute`` of an op-spec
+  row (and every codec scale exchange) appends an op.  Because all user
+  code runs at trace time, recording costs nothing at run time and
+  composes with ``jit`` / ``shard_map`` / the vmap SPMD interpreter —
+  the golden-snapshot tests (tests/test_ir.py) pin the issued-collective
+  sequence of the trainer step, the MoE forward, and serve decode.
+* **Scheduling** — the overlap engine builds a :class:`Program` for its
+  bucket schedule *before* issuing anything, hands it to the planner's
+  rewrite rules (:mod:`repro.core.planner`), and then executes the
+  rewritten program.  Rewrites are therefore real executable
+  transformations, and "planned == unplanned, bitwise" is a testable
+  property (tests/test_planner_equivalence.py).
+
+Dependency inference is by buffer identity: an op that consumes a traced
+array another op produced depends on it (the reduce-scatter → allgather
+chain of the RS+AG decomposition is one such edge).  Identity tracking
+under-approximates dependence for values that were *transformed* between
+ops (a reshape breaks the id), which is safe for the planner: a missing
+edge can only appear between ops whose payloads are already independent
+buffers, and the rewrite rules only ever touch ops they created
+themselves (the overlap schedule) or ops joined by an explicit edge.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "IROp",
+    "Program",
+    "Recorder",
+    "active",
+    "recording",
+    "annotate",
+    "trace_collectives",
+]
+
+
+def _fn_label(fn) -> str:
+    """Canonical name for a reduction functor (for stable pretty-prints)."""
+    import builtins
+    import operator
+
+    import jax.numpy as jnp
+
+    table = (
+        ((operator.add, jnp.add, builtins.sum, "sum", "+", "plus"), "add"),
+        ((builtins.max, jnp.maximum, "max"), "max"),
+        ((builtins.min, jnp.minimum, "min"), "min"),
+        ((operator.and_, jnp.logical_and, "and", "land"), "and"),
+        ((operator.or_, jnp.logical_or, "or", "lor"), "or"),
+    )
+    for fns, name in table:
+        try:
+            if fn in fns:
+                return name
+        except TypeError:
+            pass
+    return getattr(fn, "__name__", None) or repr(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class IROp:
+    """One issued collective: an op-spec row instance.
+
+    ``idx`` is the op's position (SSA-ish value number), ``deps`` the
+    indices of ops whose outputs this op consumes.  ``params`` holds the
+    *resolved* engine bindings as sorted ``(key, value-string)`` pairs —
+    strings so the pretty-print (and the golden snapshots diffing it)
+    are stable across jax versions.  ``meta`` is opaque scheduler
+    payload (the overlap engine's bucket objects); it is excluded from
+    equality and from the pretty-print.
+    """
+
+    idx: int
+    op: str
+    shape: Tuple[int, ...]
+    dtype: str
+    params: Tuple[Tuple[str, str], ...] = ()
+    deps: Tuple[int, ...] = ()
+    label: str = ""
+    meta: Any = dataclasses.field(default=None, compare=False, repr=False)
+
+    @property
+    def nbytes(self) -> int:
+        import numpy as np
+
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n * np.dtype(self.dtype).itemsize
+
+    def param(self, key: str, default: Optional[str] = None) -> Optional[str]:
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+    def pretty(self) -> str:
+        args = ", ".join(f"%{d}" for d in self.deps)
+        attrs = ", ".join(
+            [f"shape={tuple(self.shape)}", f"dtype={self.dtype}"]
+            + [f"{k}={v}" for k, v in self.params]
+        )
+        line = f"%{self.idx} = kamping.{self.op}({args}) {{{attrs}}}"
+        if self.label:
+            line += f"  // {self.label}"
+        return line
+
+
+class Program:
+    """A dependency-ordered sequence of :class:`IROp`.
+
+    Ops are stored in issue order with ``idx`` equal to position
+    (rewrites renumber); ``deps`` always point backwards.  Equality and
+    the byte-stable :meth:`pretty` text ignore ``meta``.
+    """
+
+    def __init__(self, ops: Sequence[IROp]):
+        self.ops: Tuple[IROp, ...] = tuple(ops)
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def __iter__(self):
+        return iter(self.ops)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Program) and self.ops == other.ops
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"<Program of {len(self.ops)} collectives>"
+
+    def validate(self) -> "Program":
+        """Check the structural invariants; returns self for chaining."""
+        from .errors import KampingError
+
+        for pos, op in enumerate(self.ops):
+            if op.idx != pos:
+                raise KampingError(
+                    f"ir.Program: op at position {pos} has idx {op.idx}; "
+                    "ops must be numbered by position (renumber after "
+                    "rewrites)"
+                )
+            for d in op.deps:
+                if not (0 <= d < pos):
+                    raise KampingError(
+                        f"ir.Program: %{pos} depends on %{d}, which is not "
+                        "an earlier op — deps must point backwards (the "
+                        "program is issue-ordered)"
+                    )
+            if len(set(op.deps)) != len(op.deps):
+                raise KampingError(f"ir.Program: %{pos} has duplicate deps")
+        return self
+
+    def pretty(self) -> str:
+        return "\n".join(op.pretty() for op in self.ops)
+
+    # -- dependence queries (rewrite legality) -----------------------------
+    def ancestors(self, idx: int) -> frozenset:
+        """Transitive dependency closure of op ``idx`` (excluding it)."""
+        seen: set = set()
+        stack = list(self.ops[idx].deps)
+        while stack:
+            d = stack.pop()
+            if d not in seen:
+                seen.add(d)
+                stack.extend(self.ops[d].deps)
+        return frozenset(seen)
+
+    def partial_order(self) -> frozenset:
+        """All ordered pairs ``(a, b)`` with a transitive dependency
+        a → b — the partial order every rewrite must preserve."""
+        pairs = set()
+        for op in self.ops:
+            for a in self.ancestors(op.idx):
+                pairs.add((a, op.idx))
+        return frozenset(pairs)
+
+    def consumers(self, idx: int) -> Tuple[int, ...]:
+        return tuple(o.idx for o in self.ops if idx in o.deps)
+
+
+class Recorder:
+    """Appends one :class:`IROp` per issued collective.
+
+    Dependency edges come from buffer identity: :meth:`record` looks
+    every input array up in the producer map and registers every output
+    array for downstream ops.  Internal sub-collectives staged *during*
+    a row's lowering (a codec's scale exchange) are recorded first and
+    attached as dependencies of the enclosing row when it lands.
+    """
+
+    def __init__(self):
+        self.ops: List[IROp] = []
+        self._producers: Dict[int, int] = {}  # id(array) -> op idx
+        self._label: str = ""
+        self._pending_internal: List[int] = []
+
+    # -- core ---------------------------------------------------------------
+    def record(
+        self,
+        op: str,
+        *,
+        shape: Tuple[int, ...] = (),
+        dtype: str = "float32",
+        inputs: Iterable[Any] = (),
+        outputs: Iterable[Any] = (),
+        params: Iterable[Tuple[str, str]] = (),
+        deps: Iterable[int] = (),
+        label: Optional[str] = None,
+        meta: Any = None,
+    ) -> int:
+        dep_set = set(deps)
+        for x in inputs:
+            p = self._producers.get(id(x))
+            if p is not None:
+                dep_set.add(p)
+        idx = len(self.ops)
+        self.ops.append(
+            IROp(
+                idx=idx,
+                op=op,
+                shape=tuple(int(d) for d in shape),
+                dtype=str(dtype),
+                params=tuple(sorted((str(k), str(v)) for k, v in params)),
+                deps=tuple(sorted(dep_set)),
+                label=self._label if label is None else label,
+                meta=meta,
+            )
+        )
+        for x in outputs:
+            if x is not None:
+                self._producers[id(x)] = idx
+        return idx
+
+    def program(self) -> Program:
+        return Program(self.ops).validate()
+
+
+# --------------------------------------------------------------------------
+# The active-recorder machinery
+# --------------------------------------------------------------------------
+_ACTIVE: List[Recorder] = []
+
+
+def active() -> Optional[Recorder]:
+    """The innermost active recorder, or None (recording off)."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def recording(recorder: Optional[Recorder] = None):
+    """Install a recorder for the dynamic extent of the block."""
+    rec = recorder if recorder is not None else Recorder()
+    _ACTIVE.append(rec)
+    try:
+        yield rec
+    finally:
+        _ACTIVE.pop()
+
+
+@contextlib.contextmanager
+def annotate(label: str):
+    """Label every collective recorded inside the block (no-op when
+    recording is off) — e.g. ``with ir.annotate("moe.dispatch"): ...``."""
+    rec = active()
+    if rec is None:
+        yield
+        return
+    prev, rec._label = rec._label, label
+    try:
+        yield
+    finally:
+        rec._label = prev
+
+
+def trace_collectives(fn: Callable, *args, **kwargs) -> Tuple[Any, Program]:
+    """Run ``fn`` under a fresh recorder; returns ``(result, Program)``.
+
+    ``fn`` runs exactly as it would otherwise (the recorder only
+    observes), so this works inside or around ``jit``/``shard_map``/the
+    vmap SPMD interpreter — tracing is where all collective-issuing
+    Python runs.  Note that ``jit`` caches traces: a function that was
+    already compiled with identical abstract inputs will not re-trace,
+    and records nothing.
+    """
+    with recording() as rec:
+        out = fn(*args, **kwargs)
+    return out, rec.program()
+
+
+# --------------------------------------------------------------------------
+# Hooks called by the engine (opspec.execute / compression codecs)
+# --------------------------------------------------------------------------
+def record_table_op(rec: Recorder, comm, spec, low, pack, out_fields) -> int:
+    """Append the IROp for one executed op-spec row (called by
+    :func:`repro.core.opspec.execute` when a recorder is active)."""
+    from .params import ParamKind as K
+
+    inputs = []
+    for kind in (K.SEND_BUF, K.SEND_RECV_BUF, K.SEND_COUNTS, K.RECV_COUNTS):
+        p = pack.get(kind)
+        if p is not None and p.value is not None:
+            inputs.append(p.value)
+    state = getattr(low, "_codec_state", None)
+    if state is not None:
+        inputs.append(state)
+
+    params: List[Tuple[str, str]] = [
+        ("p", str(low.p)),
+        ("transport", low.transport.name),
+    ]
+    opp = pack.get(K.OP)
+    if opp is not None:
+        params.append(("op", _fn_label(opp.value)))
+    if low.codec is not None:
+        params.append(("compression", low.codec.name))
+    if getattr(low, "deterministic", None) is not None:
+        det = str(low.deterministic)
+        if getattr(low, "det_leaves", None) is not None:
+            det += f"[leaves={low.det_leaves}]"
+        params.append(("deterministic", det))
+    groups = getattr(comm, "groups", None)
+    if groups is not None:
+        params.append(("groups", str(len(groups))))
+
+    buf = out_fields[0][1]
+    shape = tuple(getattr(buf, "shape", ()) or ())
+    dtype = str(getattr(buf, "dtype", "float32"))
+    outputs = [v for _, v in out_fields]
+    deps = tuple(rec._pending_internal)
+    rec._pending_internal = []
+    return rec.record(
+        spec.name,
+        shape=shape,
+        dtype=dtype,
+        inputs=inputs,
+        outputs=outputs,
+        params=params,
+        deps=deps,
+    )
+
+
+def record_scale_exchange(rec: Recorder, comm, codec, amax, scale) -> int:
+    """Append the IROp for a codec's shared-scale exchange (called from
+    :class:`repro.core.compression.QuantizedCodec` when a recorder is
+    active).  The enclosing compressed reduction, recorded when its
+    lowering returns, picks the node up as a dependency."""
+    idx = rec.record(
+        "scale_exchange",
+        shape=tuple(getattr(amax, "shape", ()) or ()),
+        dtype=str(getattr(scale, "dtype", "float32")),
+        inputs=(amax,),
+        outputs=(scale,),
+        params=(("codec", codec.name), ("p", str(comm.size()))),
+    )
+    rec._pending_internal.append(idx)
+    return idx

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from . import ir
 from . import params as kp
 from .compression import resolve_codec
 from .errors import AssertionLevel, KampingError, check_enabled
@@ -75,6 +76,19 @@ _OUT_FIELDS = {
 def is_static(value) -> bool:
     """True when a count-like value is known at trace time."""
     return isinstance(value, (int, np.integer, np.ndarray))
+
+
+def _payload_nbytes(pack) -> int:
+    """Static per-rank payload size of a call's send buffer (0 when no
+    buffer or no static shape) — the cost model's interpolation key."""
+    p = pack.get(K.SEND_BUF) or pack.get(K.SEND_RECV_BUF)
+    if p is None or p.value is None:
+        return 0
+    try:
+        v = jnp.asarray(p.value)
+        return int(v.size) * v.dtype.itemsize
+    except (TypeError, ValueError):
+        return 0
 
 
 def static_int(value) -> Optional[int]:
@@ -146,10 +160,29 @@ class Lowering:
         self.kw = kw
         # Backend resolution (DESIGN.md §7): per-call transport(...) param
         # > communicator default > "xla".  Resolved once, at trace time.
+        # A resolved plan (per-call plan(...) param > communicator
+        # default, DESIGN.md §13) may pick the transport — but only when
+        # neither an explicit transport parameter nor a communicator
+        # transport default exists: a plan never overrides an explicit
+        # choice.  Transport selection is bitwise-neutral (§7 contract).
         tparam = pack.get(K.TRANSPORT)
-        self.transport = resolve_transport(
-            comm, tparam.value if tparam is not None else None
+        tvalue = tparam.value if tparam is not None else None
+        pparam = pack.get(K.PLAN)
+        plan_v = (
+            pparam.value if pparam is not None else getattr(comm, "plan", None)
         )
+        if (
+            tvalue is None
+            and plan_v is not None
+            and getattr(comm, "transport_name", None) is None
+            and spec.transport_attr is None
+        ):
+            from .planner import plan_call_transport
+
+            tvalue = plan_call_transport(
+                plan_v, spec.name, _payload_nbytes(pack)
+            )
+        self.transport = resolve_transport(comm, tvalue)
         # Codec resolution (DESIGN.md §10): per-call compression(...)
         # param (None value = explicit disable) > communicator default >
         # uncompressed.  Only compressible (reduction) rows accept the
@@ -159,9 +192,13 @@ class Lowering:
         if cparam is not None:
             self.codec = resolve_codec(comm, cparam.value)
             self._codec_state = getattr(cparam, "state", None)
+            # Precomputed quantization scale (planner's hoisted scale
+            # exchange, DESIGN.md §13): rides the compression(...) param.
+            self._codec_scale = getattr(cparam, "scale", None)
         else:
             self.codec = resolve_codec(comm)
             self._codec_state = None
+            self._codec_scale = None
         # Explicit per-call codec on an integer payload is a loud
         # trace-time error; a communicator *default* codec silently
         # skips integer payloads (they reduce exactly already).
@@ -267,6 +304,7 @@ class Lowering:
                 codec_explicit=self._codec_explicit,
                 deterministic=self.deterministic,
                 det_leaves=self.det_leaves,
+                codec_scale=self._codec_scale,
             )
             return out
         return self.comm._reduce_impl(
@@ -296,7 +334,8 @@ class Lowering:
             if codec is not None:
                 full, self._codec_new_state = (
                     codec.deterministic_allreduce_sum(
-                        self.comm, x, self._codec_state, leaves=None
+                        self.comm, x, self._codec_state, leaves=None,
+                        scale=self._codec_scale,
                     )
                 )
             else:
@@ -306,7 +345,8 @@ class Lowering:
             )
         if codec is not None:
             out, self._codec_new_state = codec.reduce_scatter_sum(
-                self.comm, self.transport, x, self._codec_state
+                self.comm, self.transport, x, self._codec_state,
+                scale=self._codec_scale,
             )
             return out
         return self.transport.reduce_scatter_sum(self.comm, x)
@@ -367,13 +407,14 @@ def execute(comm, spec: OpSpec, args, kw=None):
         required=spec.required,
         # transport(...) is an engine-level parameter: every table row
         # accepts it (it selects how the engine moves bytes, not what the
-        # op means).  Permute-only lowerings are transport-invariant.
+        # op means), as is plan(...) (cost-model transport planning,
+        # DESIGN.md §13).  Permute-only lowerings are transport-invariant.
         # compression(...) is engine-level too, but only the reduction
         # rows accept it (a codec encodes a sum payload; DESIGN.md §10),
         # and the same rows accept deterministic(...) (the p-invariant
         # canonical-tree schedule; DESIGN.md §12).
         accepted=tuple(spec.accepted)
-        + (K.TRANSPORT,)
+        + (K.TRANSPORT, K.PLAN)
         + ((K.COMPRESSION,) if spec.compressible else ())
         + ((K.DETERMINISTIC,) if spec.deterministic else ()),
         in_place_ignored=spec.in_place_ignored,
@@ -407,6 +448,15 @@ def execute(comm, spec: OpSpec, args, kw=None):
     ):
         buf = _stage_global_count_check(low, buf)
         out_fields[0] = ("recv_buf", buf)
+
+    rec = ir.active()
+    if rec is not None:
+        # Trace-time IR capture (DESIGN.md §13): every collective issued
+        # through the engine lands in the active recorder as one op with
+        # its payload shape/dtype, resolved param bindings, and dep
+        # edges inferred from buffer identity.  Zero overhead when no
+        # recorder is active (one None check).
+        ir.record_table_op(rec, comm, spec, low, pack, out_fields)
 
     return make_result(out_fields)
 

@@ -60,6 +60,7 @@ from .params import compression as compression_param
 from .params import deterministic as deterministic_param
 from .params import op as op_param
 from .params import send_buf
+from .params import transport as transport_param
 from .result import Result
 
 __all__ = ["Bucket", "plan_buckets", "overlap_reduce_tree"]
@@ -99,6 +100,16 @@ def plan_buckets(
     Oversized single leaves get a bucket of their own; zero-size leaves
     ride along wherever they fall.  Works on concrete arrays and on
     ``jax.ShapeDtypeStruct``-like abstract values alike.
+
+    **Identity-plan / no-op guarantee** (pinned by
+    tests/test_overlap.py): an empty ``leaves`` sequence returns the
+    empty plan ``[]`` — the identity plan, under which
+    :func:`overlap_reduce_tree` stages *no* collective and returns its
+    input tree unchanged — and a bucket whose total element count is
+    zero (every leaf empty) likewise stages no collective: its leaves
+    complete to their exact (empty) sums without touching the wire.
+    All-scalar pytrees are ordinary payloads: each scalar is one
+    1-element leaf, packed and reduced like any other.
     """
     if bucket_bytes <= 0:
         raise KampingError(
@@ -157,7 +168,7 @@ def _flatten_bucket(bucket: Bucket, leaves):
 
 
 def _issue(comm, bucket: Bucket, leaves, mode: str, codec=None,
-           err_leaves=None, deterministic=None):
+           err_leaves=None, deterministic=None, scale=None, transport=None):
     """Stage one bucket's non-blocking reduction; returns the request.
 
     With a codec (DESIGN.md §10) the bucket's collective carries the
@@ -169,7 +180,11 @@ def _issue(comm, bucket: Bucket, leaves, mode: str, codec=None,
     With ``deterministic`` (DESIGN.md §12) every bucket's collective
     additionally carries ``deterministic(scheme)`` — the whole bucket is
     one leaf per rank (no leaf stack: buckets are flat concatenations,
-    not canonical leaf partials)."""
+    not canonical leaf partials).
+
+    ``scale`` is a precomputed quantization scale from the planner's
+    hoisted scale exchange; ``transport`` a plan-chosen backend name —
+    both ride the corresponding named parameters (DESIGN.md §13)."""
     flat = _flatten_bucket(bucket, leaves)
     codec = _bucket_codec(codec, bucket)
     state = (
@@ -181,6 +196,7 @@ def _issue(comm, bucket: Bucket, leaves, mode: str, codec=None,
         (deterministic_param(deterministic),)
         if deterministic is not None else ()
     )
+    targs = (transport_param(transport),) if transport is not None else ()
     if mode == "reduce_scatter":
         p = comm.size()
         pad = (-flat.shape[0]) % p
@@ -192,20 +208,22 @@ def _issue(comm, bucket: Bucket, leaves, mode: str, codec=None,
         if codec is not None:
             cargs = (compression_param(codec, state=(
                 state.reshape(p, -1) if state is not None else None
-            )),)
+            ), scale=scale),)
         return comm.ireduce_scatter(
             send_buf(flat.reshape(p, -1)), op_param(operator.add),
-            *cargs, *dargs
+            *cargs, *dargs, *targs
         )
     cargs = (
-        (compression_param(codec, state=state),) if codec is not None else ()
+        (compression_param(codec, state=state, scale=scale),)
+        if codec is not None else ()
     )
     return comm.iallreduce(
-        send_buf(flat), op_param(operator.add), *cargs, *dargs
+        send_buf(flat), op_param(operator.add), *cargs, *dargs, *targs
     )
 
 
-def _complete(comm, bucket: Bucket, value, mode: str, total: int):
+def _complete(comm, bucket: Bucket, value, mode: str, total: int,
+              transport=None):
     """Turn a completed request's value back into the bucket's flat sum.
 
     Returns ``(flat_sum, new_err_flat_or_None)`` — a compressed bucket
@@ -223,7 +241,8 @@ def _complete(comm, bucket: Bucket, value, mode: str, total: int):
         # codec the wire win rides the reduce-scatter leg (the payload is
         # encoded once over the full bucket); the residual is local and
         # reshapes back from the (p, chunk) layout.
-        flat = comm.allgather(send_buf(value))
+        targs = (transport_param(transport),) if transport is not None else ()
+        flat = comm.allgather(send_buf(value), *targs)
         if new_err is not None:
             new_err = new_err.reshape(-1)[:total]
         return flat[:total], new_err
@@ -242,6 +261,7 @@ def overlap_reduce_tree(
     compression=None,
     err_state=None,
     deterministic=None,
+    plan=None,
 ):
     """Sum-reduce every leaf of ``tree`` over ``comm`` with bucketed,
     request-pool-scheduled non-blocking collectives.
@@ -302,6 +322,22 @@ def overlap_reduce_tree(
         invariant and run-to-run stable at fixed p* — for bitwise
         p-invariance use the trainer's ``grad_reduce="reproducible"``
         leaf-stacked path instead.
+    plan:
+        Cost-model planning (DESIGN.md §13).  ``None`` (default) is the
+        direct path above, byte-for-byte unchanged.  ``"auto"`` fits the
+        cost model from the checked-in benchmark artifacts and autotunes
+        transport × mode × bucket-bytes × max-inflight for this payload;
+        a :class:`~repro.core.planner.Plan` applies its explicit
+        overrides (``None`` fields keep the arguments above; an explicit
+        ``Communicator(transport=...)`` default always beats a plan's
+        transport).  Either way the bucket schedule is built as an IR
+        :class:`~repro.core.ir.Program`, rewritten by ``plan.rules``
+        (fuse RS+AG, reorder issue-before-completion, merge small
+        same-dtype buckets, hoist scale exchanges), and executed —
+        bitwise identical to the unplanned schedule at equal knobs
+        (tests/test_planner_equivalence.py).  ``plan.compression`` is
+        advisory and never applied implicitly — pass ``compression=``
+        to actually encode payloads.
 
     Returns the tree of reduced (summed, optionally scaled) leaves —
     or ``(reduced_tree, new_err_state)`` when ``err_state`` was passed.
@@ -331,16 +367,29 @@ def overlap_reduce_tree(
                 "tree's structure"
             )
     shapes = [l.shape for l in leaves]
-    plan = plan_buckets(leaves, bucket_bytes)
+
+    if plan is not None:
+        return _planned_reduce(
+            comm, leaves, shapes, treedef, err_leaves, plan,
+            bucket_bytes=bucket_bytes, max_inflight=max_inflight,
+            mode=mode, scale=scale, pool=pool, codec=codec,
+            deterministic=deterministic,
+        )
+
+    bplan = plan_buckets(leaves, bucket_bytes)
 
     done: dict = {}
+    skip = {bi for bi, b in enumerate(bplan) if sum(b.sizes) == 0}
     if pool is None:
         # Private pool: eviction order == submission order, so each
         # evicted value maps to the oldest of our outstanding buckets;
-        # the tail drains with waitall.
+        # the tail drains with waitall.  Zero-size buckets stage nothing
+        # (the plan_buckets no-op guarantee).
         pool = RequestPool(slots=max_inflight)
         inflight: List[int] = []  # bucket ids, submission order
-        for bi, bucket in enumerate(plan):
+        for bi, bucket in enumerate(bplan):
+            if bi in skip:
+                continue
             evicted = pool.submit(
                 _issue(comm, bucket, leaves, mode, codec, err_leaves,
                        deterministic)
@@ -355,22 +404,40 @@ def overlap_reduce_tree(
         # submit return is not ours to claim — targeted collect retrieves
         # exactly our buckets (evicted-or-pending alike) and leaves the
         # rest of the pool untouched.
-        reqs: List[Any] = []
-        for bucket in plan:
+        reqs: dict = {}
+        for bi, bucket in enumerate(bplan):
+            if bi in skip:
+                continue
             req = _issue(comm, bucket, leaves, mode, codec, err_leaves,
                          deterministic)
             pool.submit(req)
-            reqs.append(req)
-        for bi, req in enumerate(reqs):
+            reqs[bi] = req
+        for bi, req in reqs.items():
             done[bi] = pool.collect(req)
 
+    completed: dict = {}
+    for bi, bucket in enumerate(bplan):
+        if bi in skip:
+            completed[bi] = (jnp.zeros((0,), jnp.dtype(bucket.dtype)), None)
+        else:
+            completed[bi] = _complete(
+                comm, bucket, done[bi], mode, sum(bucket.sizes)
+            )
+    return _unpack_buckets(
+        bplan, completed, leaves, shapes, treedef, err_leaves, scale
+    )
+
+
+def _unpack_buckets(bplan, completed, leaves, shapes, treedef, err_leaves,
+                    scale):
+    """Scatter completed bucket flats back into the leaf tree (shared by
+    the direct and planned paths — identical unpack, identical bits)."""
     reduced: List[Any] = [None] * len(leaves)
     # Integer buckets (and stateless calls) have no residual: the error
     # state passes through unchanged for their leaves.
     new_err: List[Any] = list(err_leaves) if err_leaves is not None else []
-    for bi, bucket in enumerate(plan):
-        total = sum(bucket.sizes)
-        flat, err_flat = _complete(comm, bucket, done[bi], mode, total)
+    for bi, bucket in enumerate(bplan):
+        flat, err_flat = completed[bi]
         off = 0
         for idx, n in zip(bucket.indices, bucket.sizes):
             piece = flat[off:off + n].reshape(shapes[idx])
@@ -384,3 +451,217 @@ def overlap_reduce_tree(
     if err_leaves is None:
         return out
     return out, jax.tree.unflatten(treedef, new_err)
+
+
+# --------------------------------------------------------------------------
+# The planned path (DESIGN.md §13): build the bucket schedule as an IR
+# Program, rewrite it with the plan's rules, execute the rewritten
+# program.  Bitwise identical to the direct path at equal knobs — the
+# rewrite-equivalence harness (tests/test_planner_equivalence.py) pins
+# this per rule and for all rules combined.
+# --------------------------------------------------------------------------
+def _build_schedule(bplan, *, mode, codec, deterministic, p):
+    """The direct path's issue sequence as a schedule Program: one
+    allreduce node per bucket, or an RS node plus its dependent AG
+    completion node.  Zero-size buckets stage nothing (the no-op
+    guarantee) and carry no node.  ``meta`` carries the bucket ids the
+    node covers — the executor's only key into the payload."""
+    from .ir import IROp, Program
+
+    ops = []
+    for bi, bucket in enumerate(bplan):
+        total = sum(bucket.sizes)
+        if total == 0:
+            continue
+        bcodec = _bucket_codec(codec, bucket)
+        params = [("p", str(p)), ("op", "add")]
+        if bcodec is not None:
+            params.append(("compression", bcodec.name))
+        if deterministic is not None:
+            params.append(("deterministic", str(deterministic)))
+        dtype = str(jnp.dtype(bucket.dtype))
+        meta = {"buckets": (bi,), "total": total}
+        if mode == "reduce_scatter":
+            chunk = (total + (-total) % p) // p
+            idx = len(ops)
+            ops.append(IROp(
+                idx=idx, op="reduce_scatter", shape=(p, chunk), dtype=dtype,
+                params=tuple(sorted(params)), label=f"bucket{bi}", meta=meta,
+            ))
+            ops.append(IROp(
+                idx=idx + 1, op="allgather", shape=(total,), dtype=dtype,
+                params=(("p", str(p)),), deps=(idx,), label=f"bucket{bi}",
+                meta=meta,
+            ))
+        else:
+            ops.append(IROp(
+                idx=len(ops), op="allreduce", shape=(total,), dtype=dtype,
+                params=tuple(sorted(params)), label=f"bucket{bi}", meta=meta,
+            ))
+    return Program(ops).validate()
+
+
+def _execute_schedule(comm, prog, bplan, leaves, err_leaves, *, codec,
+                      deterministic, pool, transport):
+    """Walk a (rewritten) schedule Program in order, issuing each node
+    through the op-spec engine; returns ``{bucket id: (flat, err)}``.
+
+    Completion is targeted ``pool.collect`` throughout (works for both
+    private and shared pools; holding the request keeps an evicted
+    value's stash entry alive), so the reorder rule really does keep
+    every issue node airborne before the first completion blocks."""
+    flats: dict = {}
+
+    def flat_of(bi):
+        if bi not in flats:
+            flats[bi] = _flatten_bucket(bplan[bi], leaves)
+        return flats[bi]
+
+    dargs = (
+        (deterministic_param(deterministic),)
+        if deterministic is not None else ()
+    )
+    targs = (transport_param(transport),) if transport is not None else ()
+    scales: dict = {}
+    reqs: dict = {}  # node idx -> (request, node)
+    completed: dict = {}
+
+    for node in prog:
+        if node.op == "scale_exchange":
+            # The hoisted exchange: stack each covered bucket's local
+            # absmax (computed exactly as QuantizedCodec._encode does —
+            # gf = payload + error state in f32; RS-mode padding adds
+            # zeros, which never raise an absmax), one elementwise
+            # vector pmax, then the per-bucket /qmax + floor clamp.
+            # Elementwise throughout => bitwise equal to the per-bucket
+            # scalar exchanges it replaces.
+            bids = node.meta["buckets"]
+            amaxes = []
+            for bi in bids:
+                gf = flat_of(bi).astype(jnp.float32)
+                if err_leaves is not None:
+                    gf = gf + _flatten_bucket(
+                        bplan[bi], err_leaves
+                    ).astype(jnp.float32)
+                amaxes.append(jnp.max(jnp.abs(gf)))
+            ex = comm._pmax(jnp.stack(amaxes))
+            for k, bi in enumerate(bids):
+                scales[bi] = jnp.maximum(
+                    ex[k] / codec.qmax, codec.scale_floor
+                )
+        elif node.op == "reduce_scatter":
+            bi = node.meta["buckets"][0]
+            req = _issue(
+                comm, bplan[bi], leaves, "reduce_scatter", codec,
+                err_leaves, deterministic, scale=scales.get(bi),
+                transport=transport,
+            )
+            pool.submit(req)
+            reqs[node.idx] = (req, node)
+        elif node.op == "allreduce":
+            bids = node.meta["buckets"]
+            if len(bids) == 1:
+                req = _issue(
+                    comm, bplan[bids[0]], leaves, "allreduce", codec,
+                    err_leaves, deterministic, scale=scales.get(bids[0]),
+                    transport=transport,
+                )
+            else:
+                # A merged node (merge_buckets rule): one collective over
+                # the concatenated payloads.  Merged nodes are always
+                # uncompressed and dependency-free by rule construction.
+                merged = jnp.concatenate([flat_of(bi) for bi in bids])
+                req = comm.iallreduce(
+                    send_buf(merged), op_param(operator.add),
+                    *dargs, *targs,
+                )
+            pool.submit(req)
+            reqs[node.idx] = (req, node)
+        elif node.op == "allgather":
+            src = next(
+                d for d in node.deps if prog.ops[d].op == "reduce_scatter"
+            )
+            req, src_node = reqs.pop(src)
+            bi = src_node.meta["buckets"][0]
+            completed[bi] = _complete(
+                comm, bplan[bi], pool.collect(req), "reduce_scatter",
+                src_node.meta["total"], transport=transport,
+            )
+        else:  # pragma: no cover - builder/rules never emit other kinds
+            raise KampingError(
+                f"overlap planner: unexecutable schedule node "
+                f"kamping.{node.op}"
+            )
+
+    # Drain the allreduce nodes (they have no completion node), in
+    # program order.
+    for idx in list(reqs):
+        req, node = reqs.pop(idx)
+        val = pool.collect(req)
+        bids = node.meta["buckets"]
+        if len(bids) == 1:
+            completed[bids[0]] = _complete(
+                comm, bplan[bids[0]], val, "allreduce", node.meta["total"]
+            )
+        else:
+            flat = val.recv_buf if isinstance(val, Result) else val
+            off = 0
+            for bi in bids:
+                t = sum(bplan[bi].sizes)
+                completed[bi] = (flat[off:off + t], None)
+                off += t
+    return completed
+
+
+def _planned_reduce(comm, leaves, shapes, treedef, err_leaves, plan, *,
+                    bucket_bytes, max_inflight, mode, scale, pool, codec,
+                    deterministic):
+    """Resolve the plan, apply its knob overrides, build + rewrite +
+    execute the schedule Program."""
+    from .compression import QuantizedCodec
+    from .planner import apply_rules, resolve_plan
+
+    p = comm.size()
+    total_bytes = sum(
+        int(np.prod(l.shape, dtype=np.int64)) * l.dtype.itemsize
+        for l in leaves
+    )
+    rplan = resolve_plan(
+        plan, total_bytes=total_bytes, p=p,
+        codec=codec.name if codec is not None else None,
+    )
+    bucket_bytes = rplan.bucket_bytes or bucket_bytes
+    mode = rplan.mode or mode
+    if rplan.max_inflight is not None:
+        max_inflight = rplan.max_inflight
+    if mode not in ("allreduce", "reduce_scatter"):
+        raise KampingError(
+            f"overlap_reduce_tree: plan mode={mode!r}; expected "
+            "'allreduce' or 'reduce_scatter'"
+        )
+    # An explicit communicator transport default always beats a plan's
+    # choice (plans only speak where nothing was chosen, DESIGN.md §13).
+    transport = rplan.transport
+    if getattr(comm, "transport_name", None) is not None:
+        transport = None
+
+    bplan = plan_buckets(leaves, bucket_bytes)
+    prog = _build_schedule(
+        bplan, mode=mode, codec=codec, deterministic=deterministic, p=p
+    )
+    prog = apply_rules(prog, rplan.rules, {
+        "bucket_bytes": bucket_bytes,
+        "codec_quantized": isinstance(codec, QuantizedCodec),
+    })
+    if pool is None:
+        pool = RequestPool(slots=max_inflight)
+    completed = _execute_schedule(
+        comm, prog, bplan, leaves, err_leaves, codec=codec,
+        deterministic=deterministic, pool=pool, transport=transport,
+    )
+    for bi, bucket in enumerate(bplan):
+        if sum(bucket.sizes) == 0:
+            completed[bi] = (jnp.zeros((0,), jnp.dtype(bucket.dtype)), None)
+    return _unpack_buckets(
+        bplan, completed, leaves, shapes, treedef, err_leaves, scale
+    )

@@ -41,7 +41,7 @@ __all__ = [
     "recv_count", "recv_count_out",
     "send_counts_out", "recv_counts_out", "send_displs_out", "recv_displs_out",
     "op", "root", "dest", "source", "tag", "axis", "transport",
-    "compression", "deterministic",
+    "compression", "deterministic", "plan",
     # policies
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     # machinery
@@ -69,6 +69,7 @@ class ParamKind(enum.Enum):
     TRANSPORT = "transport"  # collective backend selector (DESIGN.md §7)
     COMPRESSION = "compression"  # payload codec selector (DESIGN.md §10)
     DETERMINISTIC = "deterministic"  # fixed reduction schedule (DESIGN.md §12)
+    PLAN = "plan"  # cost-model transport planning (DESIGN.md §13)
 
 
 # --------------------------------------------------------------------------
@@ -273,7 +274,7 @@ def transport(name) -> Param:
     return _mk(ParamKind.TRANSPORT, name)
 
 
-def compression(name, state=None) -> Param:
+def compression(name, state=None, scale=None) -> Param:
     """Payload codec for this sum reduction (DESIGN.md §10):
     ``"int8-ef"``, ``"fp8-e4m3"``, ``"topk"``, a :class:`Codec`
     instance, or any codec registered via
@@ -288,9 +289,19 @@ def compression(name, state=None) -> Param:
     passed, the operation's :class:`~repro.core.result.Result` carries a
     ``compression_state`` field with the new residual (the overlap
     engine and ``TrainConfig(grad_compress=...)`` manage this
-    automatically)."""
+    automatically).
+
+    ``scale`` supplies a precomputed quantization scale for quantized
+    codecs: the encode then skips its own absmax group-exchange and
+    quantizes against the given (post-floor) scale.  This is how the
+    planner's hoisted scale exchange (DESIGN.md §13) hands each bucket
+    its slot of the batched vector pmax; the value must be bitwise
+    equal to what the in-encode exchange would have produced — the
+    caller owns that contract.  Codecs without a shared scale (topk)
+    reject it at trace time."""
     p = _mk(ParamKind.COMPRESSION, name)
     p.state = state  # type: ignore[attr-defined]
+    p.scale = scale  # type: ignore[attr-defined]
     return p
 
 
@@ -343,6 +354,22 @@ def deterministic(scheme: str = "tree", leaves: Optional[int] = None) -> Param:
     p = _mk(ParamKind.DETERMINISTIC, scheme)
     p.leaves = leaves  # type: ignore[attr-defined]
     return p
+
+
+def plan(value) -> Param:
+    """Cost-model planning for this call (DESIGN.md §13): ``"auto"``
+    lets the planner pick the cheapest measured transport for this op
+    and payload size from the fitted cost model
+    (:meth:`repro.core.planner.CostModel.fit`), a
+    :class:`~repro.core.planner.Plan` instance applies its explicit
+    ``transport`` override, and ``plan(None)`` explicitly disables a
+    communicator default (``Communicator(axis, plan=...)``).  Accepted
+    by every table-generated collective; a plan only speaks when
+    neither a per-call ``transport(...)`` parameter nor a communicator
+    transport default is present — explicit choices always win.
+    Transport selection is bitwise-neutral here by the transport
+    equivalence contract (DESIGN.md §7)."""
+    return _mk(ParamKind.PLAN, value)
 
 
 # --------------------------------------------------------------------------

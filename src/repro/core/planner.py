@@ -1,0 +1,668 @@
+"""Rewrite engine + cost-model planner over the collective IR (DESIGN.md §13).
+
+The four hand-picked knobs — transport × codec × bucket-bytes ×
+schedule shape — become one optimizing scheduler in two parts:
+
+* **Rewrite rules** transform a schedule :class:`~repro.core.ir.Program`
+  (the bucket schedule the overlap engine builds before issuing
+  anything).  Every rule is *bitwise semantics-preserving* — the
+  rewritten program executes to the same bits as the original under
+  every transport, split groups, hier, quantized-EF codecs, and the
+  deterministic("tree") schedule (tests/test_planner_equivalence.py
+  pins this differentially, rule by rule).  Rule legality arguments
+  live next to each rule below.
+
+* A **cost model** fitted from the checked-in benchmark artifacts
+  (``benchmarks/artifacts/*.json`` — the measurements every hand-picked
+  config was chosen from) estimates per-collective microseconds by
+  log-log interpolation over payload bytes and scores whole reduction
+  schedules; :meth:`CostModel.autotune_reduction` sweeps the knob grid
+  and returns the best :class:`Plan`.
+
+A :class:`Plan` is the user-facing carrier: ``TrainConfig(plan="auto")``
+and ``overlap_reduce_tree(..., plan=...)`` autotune the gradient
+reduction; ``Communicator(axis, plan=...)`` and the per-call ``plan(...)``
+engine parameter pick the transport of single table calls;
+``moe_forward_ep_local(..., plan=...)`` resolves the dispatch/combine
+transport.  ``plan.compression`` is **advisory**: the planner reports
+which codec its cost model favors but never silently applies one — a
+codec changes the numerics, so turning it on stays an explicit caller
+decision (the rewrite-equivalence contract is bitwise identity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import math
+import os
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .errors import KampingError
+from .ir import IROp, Program
+
+__all__ = [
+    "Plan",
+    "CostModel",
+    "REWRITE_RULES",
+    "ALL_RULES",
+    "apply_rules",
+    "fuse_rs_ag",
+    "reorder_independent",
+    "merge_buckets",
+    "hoist_scale_exchange",
+    "resolve_plan",
+    "plan_call_transport",
+]
+
+
+# --------------------------------------------------------------------------
+# The Plan carrier
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A resolved schedule decision: knob overrides + enabled rewrites.
+
+    Every field is an *override*: ``None`` leaves the caller's (or the
+    config's) choice in place, so ``Plan()`` with no arguments — or
+    :meth:`Plan.none` — is the identity plan.  ``compression`` is
+    advisory (see module docstring): it names the codec the cost model
+    favors but is never applied implicitly.
+    """
+
+    transport: Optional[Any] = None      # name or Transport instance
+    compression: Optional[str] = None    # ADVISORY — never auto-applied
+    bucket_bytes: Optional[int] = None
+    mode: Optional[str] = None           # "allreduce" | "reduce_scatter"
+    max_inflight: Optional[int] = None
+    rules: Tuple[str, ...] = ()
+    source: str = "manual"               # "manual" | "auto" | "none"
+
+    def __post_init__(self):
+        for r in self.rules:
+            if r not in REWRITE_RULES:
+                raise KampingError(
+                    f"Plan: unknown rewrite rule {r!r}; registered rules: "
+                    f"{', '.join(REWRITE_RULES)}"
+                )
+        if self.mode is not None and self.mode not in (
+            "allreduce", "reduce_scatter"
+        ):
+            raise KampingError(
+                f"Plan: mode={self.mode!r}; expected 'allreduce' or "
+                "'reduce_scatter' (or None to keep the caller's mode)"
+            )
+
+    @classmethod
+    def none(cls) -> "Plan":
+        """The identity plan: no overrides, no rewrites."""
+        return cls(source="none")
+
+    def describe(self) -> str:
+        bits = [
+            f"{k}={v}"
+            for k, v in (
+                ("transport", self.transport),
+                ("compression", self.compression),
+                ("bucket_bytes", self.bucket_bytes),
+                ("mode", self.mode),
+                ("max_inflight", self.max_inflight),
+            )
+            if v is not None
+        ]
+        bits.append(f"rules=[{','.join(self.rules)}]")
+        return f"Plan({', '.join(bits)}; source={self.source})"
+
+
+# --------------------------------------------------------------------------
+# Rewrite rules.  Each rule: (Program, ctx: dict) -> Program.  Rules are
+# pure graph transforms over schedule programs; the overlap engine
+# executes whatever comes out (`meta` carries the bucket payload ids).
+# Application order is canonical (see apply_rules) so a rule set is a
+# *set*, not a sequence.
+# --------------------------------------------------------------------------
+def _renumber(ops_in_order: List[IROp], remap: Dict[int, int]) -> Program:
+    """Rebuild a Program from ops listed in their new order, remapping
+    dep indices through ``remap`` (old idx -> new idx)."""
+    out = []
+    for pos, o in enumerate(ops_in_order):
+        deps = tuple(sorted({remap[d] for d in o.deps}))
+        out.append(dataclasses.replace(o, idx=pos, deps=deps))
+    return Program(out).validate()
+
+
+def fuse_rs_ag(prog: Program, ctx: Optional[dict] = None) -> Program:
+    """Fuse a reduce_scatter whose only consumer is its allgather leg
+    into one allreduce.
+
+    Legality (bitwise): RS+AG is the chunked decomposition of the same
+    elementwise sum — every output element's addend set, the per-element
+    reduction primitive (psum / psum_scatter sum over the same axis),
+    and, under a quantized codec, the shared scale (pad zeros never
+    raise an absmax) and the exact integer accumulator are identical;
+    the AG leg is pure data movement.  Under deterministic("tree") both
+    forms evaluate the same canonical per-element tree.  So the fused
+    allreduce reproduces the unfused bits exactly — on every transport,
+    on split groups, and on hier (tests/test_planner_equivalence.py).
+    """
+    ag_to_rs: Dict[int, int] = {}
+    for o in prog:
+        if o.op == "allgather" and len(o.deps) == 1:
+            d = o.deps[0]
+            if prog.ops[d].op == "reduce_scatter" and prog.consumers(d) == (
+                o.idx,
+            ):
+                ag_to_rs[o.idx] = d
+    if not ag_to_rs:
+        return prog
+    fused_rs = set(ag_to_rs.values())
+    new_ops: List[IROp] = []
+    remap: Dict[int, int] = {}
+    for o in prog:
+        if o.idx in ag_to_rs:
+            # The AG's consumers now read the fused allreduce.
+            remap[o.idx] = remap[ag_to_rs[o.idx]]
+            continue
+        remap[o.idx] = len(new_ops)
+        if o.idx in fused_rs:
+            meta = o.meta if isinstance(o.meta, dict) else {}
+            total = meta.get("total")
+            o = dataclasses.replace(
+                o,
+                op="allreduce",
+                shape=(total,) if total is not None else o.shape,
+            )
+        new_ops.append(o)
+    return _renumber(new_ops, remap)
+
+
+def reorder_independent(prog: Program, ctx: Optional[dict] = None) -> Program:
+    """Issue-first stable topological reorder: every non-completion op
+    (reductions, scale exchanges) moves before the allgather completion
+    legs its dependencies allow, widening the RequestPool's in-flight
+    window (all RS collectives are airborne before the first AG blocks
+    on one).
+
+    Legality (bitwise): only *independent* ops trade places — the rule
+    is a topological sort of the existing dependency DAG, so every
+    producer still precedes its consumers; collectives are staged pure
+    functions of their inputs, so program position does not change any
+    op's value.
+    """
+    n = len(prog.ops)
+    children: Dict[int, List[int]] = defaultdict(list)
+    indeg = {}
+    for o in prog:
+        indeg[o.idx] = len(o.deps)
+        for d in o.deps:
+            children[d].append(o.idx)
+
+    def prio(i: int) -> Tuple[int, int]:
+        return (1 if prog.ops[i].op == "allgather" else 0, i)
+
+    ready = [prio(o.idx) for o in prog if indeg[o.idx] == 0]
+    heapq.heapify(ready)
+    order: List[int] = []
+    while ready:
+        _, i = heapq.heappop(ready)
+        order.append(i)
+        for c in children[i]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                heapq.heappush(ready, prio(c))
+    if order == list(range(n)):
+        return prog
+    remap = {old: new for new, old in enumerate(order)}
+    return _renumber([prog.ops[i] for i in order], remap)
+
+
+def merge_buckets(prog: Program, ctx: Optional[dict] = None) -> Program:
+    """Merge small independent same-dtype *uncompressed* reductions into
+    one allreduce while the combined payload stays within the bucket
+    target.
+
+    Legality (bitwise): only dependency-free, uncompressed allreduce
+    nodes merge.  Reductions are elementwise, so concatenating payloads
+    changes neither any element's addend set nor its reduction order
+    (psum — and the deterministic("tree") ppermute schedule — reduce
+    elementwise, independent of payload grouping).  Compressed nodes
+    are *excluded*: a quantized codec's scale is shared per payload, so
+    merging would change the quantization grid — a different result,
+    not a rewrite.
+    """
+    limit = (ctx or {}).get("merge_bytes") or (ctx or {}).get("bucket_bytes")
+    if limit is None:
+        from .overlap import DEFAULT_BUCKET_BYTES
+
+        limit = DEFAULT_BUCKET_BYTES
+
+    def mergeable(o: IROp) -> bool:
+        return (
+            o.op == "allreduce"
+            and not o.deps
+            and o.param("compression") is None
+        )
+
+    # Greedy runs per dtype, in program order.
+    runs: List[List[int]] = []
+    open_run: Dict[str, Tuple[List[int], int]] = {}
+    for o in prog:
+        if not mergeable(o):
+            continue
+        run, run_bytes = open_run.get(o.dtype, ([], 0))
+        if run and run_bytes + o.nbytes > limit:
+            runs.append(run)
+            run, run_bytes = [], 0
+        run.append(o.idx)
+        open_run[o.dtype] = (run, run_bytes + o.nbytes)
+    runs.extend(run for run, _ in open_run.values())
+    merges = {r[0]: r for r in runs if len(r) > 1}
+    if not merges:
+        return prog
+
+    absorbed = {i: r[0] for r in merges.values() for i in r[1:]}
+    new_ops: List[IROp] = []
+    remap: Dict[int, int] = {}
+    for o in prog:
+        if o.idx in absorbed:
+            remap[o.idx] = remap[absorbed[o.idx]]
+            continue
+        remap[o.idx] = len(new_ops)
+        if o.idx in merges:
+            group = [prog.ops[i] for i in merges[o.idx]]
+            buckets = sum(
+                (tuple((g.meta or {}).get("buckets", ())) for g in group), ()
+            )
+            total = sum(
+                (g.meta or {}).get("total", 0) for g in group
+            )
+            o = dataclasses.replace(
+                o,
+                shape=(total,) if total else o.shape,
+                label=o.label,
+                meta={**(o.meta or {}), "buckets": buckets, "total": total},
+            )
+        new_ops.append(o)
+    return _renumber(new_ops, remap)
+
+
+def hoist_scale_exchange(prog: Program, ctx: Optional[dict] = None) -> Program:
+    """Batch the per-bucket quantized-codec scale exchanges into one
+    leading vector exchange.
+
+    Each compressed bucket's encode performs its own group-pmax of a
+    scalar absmax; with k compressed buckets that is k latency-bound
+    collectives.  The hoisted form stacks the k local absmaxes into one
+    (k,)-vector pmax and hands each bucket its precomputed scale
+    (``compression(codec, scale=...)`` skips the in-encode exchange).
+
+    Legality (bitwise): pmax is elementwise, and max is exact — the
+    vector exchange computes exactly the k independent scalar pmaxes;
+    the subsequent ``/qmax`` and floor clamp are elementwise too, so
+    every bucket quantizes against bit-identical scales.  Applies only
+    to quantized codecs (``ctx["codec_quantized"]``) — topk has no
+    shared scale.
+    """
+    if not (ctx or {}).get("codec_quantized", True):
+        return prog
+    targets = [
+        o.idx
+        for o in prog
+        if o.op in ("allreduce", "reduce_scatter")
+        and o.param("compression") is not None
+        and not any(prog.ops[d].op == "scale_exchange" for d in o.deps)
+    ]
+    if len(targets) < 2:
+        return prog  # nothing redundant to batch
+    codec_name = prog.ops[targets[0]].param("compression")
+    buckets = sum(
+        (tuple((prog.ops[i].meta or {}).get("buckets", ())) for i in targets),
+        (),
+    )
+    ex = IROp(
+        idx=0,
+        op="scale_exchange",
+        shape=(len(targets),),
+        dtype="float32",
+        params=(("codec", str(codec_name)),),
+        label="hoisted",
+        meta={"buckets": buckets},
+    )
+    remap = {o.idx: o.idx + 1 for o in prog}
+    new_ops = [ex]
+    tset = set(targets)
+    for o in prog:
+        deps = tuple(sorted({remap[d] for d in o.deps}))
+        if o.idx in tset:
+            deps = tuple(sorted(set(deps) | {0}))
+        new_ops.append(
+            dataclasses.replace(o, idx=o.idx + 1, deps=deps)
+        )
+    return Program(new_ops).validate()
+
+
+REWRITE_RULES = {
+    "fuse_rs_ag": fuse_rs_ag,
+    "reorder_independent": reorder_independent,
+    "merge_buckets": merge_buckets,
+    "hoist_scale_exchange": hoist_scale_exchange,
+}
+
+ALL_RULES: Tuple[str, ...] = tuple(REWRITE_RULES)
+
+# Canonical application order: structural fusions first (fuse, merge),
+# then the scale hoist (it must see the post-fusion compressed node
+# set), then the schedule reorder (positions are only meaningful once
+# the node set is final).
+_CANONICAL_ORDER = (
+    "fuse_rs_ag",
+    "merge_buckets",
+    "hoist_scale_exchange",
+    "reorder_independent",
+)
+
+
+def apply_rules(
+    prog: Program, rules: Sequence[str], ctx: Optional[dict] = None
+) -> Program:
+    """Apply the enabled ``rules`` in canonical order; unknown names are
+    a trace-time error.  An empty rule set returns the program as-is
+    (the ``plan=None`` round-trip property)."""
+    enabled = set(rules)
+    unknown = enabled - set(REWRITE_RULES)
+    if unknown:
+        raise KampingError(
+            f"apply_rules: unknown rewrite rule(s) {sorted(unknown)}; "
+            f"registered rules: {', '.join(REWRITE_RULES)}"
+        )
+    for name in _CANONICAL_ORDER:
+        if name in enabled:
+            prog = REWRITE_RULES[name](prog, ctx)
+    return prog.validate()
+
+
+# --------------------------------------------------------------------------
+# Cost model, fitted from the checked-in benchmark artifacts
+# --------------------------------------------------------------------------
+def _default_artifacts_dir() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(here))),
+        "benchmarks",
+        "artifacts",
+    )
+
+
+def _interp_loglog(points: List[Tuple[float, float]], x: float) -> float:
+    """Piecewise-linear interpolation in (log bytes, log us) with
+    end-slope extrapolation — collective cost curves are near power-law
+    in payload size, so log-log segments fit the measured sweeps well
+    and extrapolate sanely beyond them."""
+    if not points:
+        raise KampingError("cost model: empty measurement table")
+    if len(points) == 1:
+        return points[0][1]
+    x = max(float(x), 1.0)
+    lx = math.log(x)
+    pts = [(math.log(max(b, 1.0)), math.log(max(us, 1e-9)))
+           for b, us in points]
+    if lx <= pts[0][0]:
+        (x0, y0), (x1, y1) = pts[0], pts[1]
+    elif lx >= pts[-1][0]:
+        (x0, y0), (x1, y1) = pts[-2], pts[-1]
+    else:
+        for (x0, y0), (x1, y1) in zip(pts, pts[1:]):
+            if x0 <= lx <= x1:
+                break
+    if x1 == x0:
+        return math.exp(y0)
+    t = (lx - x0) / (x1 - x0)
+    return math.exp(y0 + t * (y1 - y0))
+
+
+# Transports the planner may *choose between* (every other registered
+# backend — ref kernels, grid routes, composed hier instances — is an
+# explicit caller decision, not an autotuned one).
+_PLANNABLE_TRANSPORTS = ("xla", "pallas")
+
+_OP_FOR_SPEC = {
+    "allgather": "allgather", "allgatherv": "allgather",
+    "gather": "allgather", "gatherv": "allgather",
+    "allreduce": "allreduce", "reduce": "allreduce",
+    "reduce_scatter": "reduce_scatter",
+}
+
+
+class CostModel:
+    """Collective-time estimates from the checked-in artifacts.
+
+    ``collective_us`` interpolates the transports sweep; ``codec_ratio``
+    the compression sweep (codec wall time relative to uncompressed at
+    equal payload); ``reduction_us`` scores a whole bucketed reduction,
+    preferring an exactly matching measured overlap row (scaled linearly
+    in total bytes) and falling back to the analytic bucket sum with an
+    in-flight width discount.  Missing artifacts fall back to an
+    analytic alpha–beta model so the planner degrades gracefully on a
+    fresh checkout.
+    """
+
+    # Analytic fallback: us = alpha + beta * bytes (per collective).
+    _ALPHA_US = 50.0
+    _BETA_US_PER_BYTE = 1.5e-3
+
+    def __init__(self, transport_rows=(), compression_rows=(),
+                 overlap_rows=()):
+        self._coll: Dict[Tuple[str, str], List[Tuple[float, float]]] = {}
+        for r in transport_rows:
+            if r.get("level") != "spmd":
+                continue
+            key = (r["op"], r["transport"])
+            self._coll.setdefault(key, []).append(
+                (float(r["payload_bytes"]), float(r["us"]))
+            )
+        for pts in self._coll.values():
+            pts.sort()
+        self._codec: Dict[Optional[str], List[Tuple[float, float]]] = {}
+        for r in compression_rows:
+            if r.get("op") != "allreduce":
+                continue
+            self._codec.setdefault(r["codec"], []).append(
+                (float(r["payload_bytes"]), float(r["us"]))
+            )
+        for pts in self._codec.values():
+            pts.sort()
+        self._overlap = [dict(r) for r in overlap_rows
+                         if r.get("strategy") == "overlap"]
+
+    # -- fitting ------------------------------------------------------------
+    _fitted_cache: Dict[str, "CostModel"] = {}
+
+    @classmethod
+    def fit(cls, artifacts_dir: Optional[str] = None) -> "CostModel":
+        """Load and index ``benchmarks/artifacts/*.json``; cached per
+        directory (fitting is pure file parsing, done once)."""
+        d = artifacts_dir or _default_artifacts_dir()
+        cached = cls._fitted_cache.get(d)
+        if cached is not None:
+            return cached
+
+        def load(name):
+            path = os.path.join(d, name)
+            if not os.path.exists(path):
+                return ()
+            try:
+                with open(path) as f:
+                    rows = json.load(f)
+                return rows if isinstance(rows, list) else ()
+            except (OSError, ValueError):
+                return ()
+
+        model = cls(
+            transport_rows=load("transports.json"),
+            compression_rows=load("compression.json"),
+            overlap_rows=load("overlap.json"),
+        )
+        cls._fitted_cache[d] = model
+        return model
+
+    # -- per-collective estimates -------------------------------------------
+    def collective_us(self, op: str, transport: str, nbytes: float,
+                      codec: Optional[str] = None) -> float:
+        pts = self._coll.get((op, transport))
+        if pts:
+            us = _interp_loglog(pts, nbytes)
+        else:
+            us = self._ALPHA_US + self._BETA_US_PER_BYTE * float(nbytes)
+        if codec is not None:
+            us *= self.codec_ratio(codec, nbytes)
+        return us
+
+    def codec_ratio(self, codec: str, nbytes: float) -> float:
+        """Wall-time ratio codec vs uncompressed at equal payload (> 1 on
+        the emulation substrate, where encode costs are real and wire
+        wins are not; the *wire* win is reported separately)."""
+        base = self._codec.get(None)
+        enc = self._codec.get(codec)
+        if not base or not enc:
+            return 1.0
+        return _interp_loglog(enc, nbytes) / max(
+            _interp_loglog(base, nbytes), 1e-9
+        )
+
+    def measured_transports(self, op: str) -> Tuple[str, ...]:
+        avail = tuple(
+            t for t in _PLANNABLE_TRANSPORTS if (op, t) in self._coll
+        )
+        return avail or ("xla",)
+
+    def choose_call_transport(self, spec_name: str,
+                              nbytes: float) -> Optional[str]:
+        """Cheapest measured plannable transport for one table call, or
+        None when the op kind has no measured sweep (caller keeps its
+        default)."""
+        op = _OP_FOR_SPEC.get(spec_name)
+        if op is None:
+            return None
+        cands = self.measured_transports(op)
+        if len(cands) < 2 and (op, cands[0]) not in self._coll:
+            return None
+        return min(cands, key=lambda t: self.collective_us(op, t, nbytes))
+
+    # -- whole-reduction estimates ------------------------------------------
+    def reduction_us(self, total_bytes: int, p: int, *, transport: str,
+                     mode: str, bucket_bytes: int,
+                     max_inflight: Optional[int],
+                     codec: Optional[str] = None) -> float:
+        rows = [
+            r for r in self._overlap
+            if r["transport"] == transport and r["mode"] == mode
+            and r["bucket_bytes"] == bucket_bytes
+            and r["max_inflight"] == max_inflight
+        ]
+        if rows:
+            r = min(rows,
+                    key=lambda r: abs(r["grad_bytes"] - total_bytes))
+            us = r["us"] * (total_bytes / max(r["grad_bytes"], 1))
+        else:
+            nb = max(1, math.ceil(total_bytes / bucket_bytes))
+            per_bytes = min(bucket_bytes, total_bytes)
+            op = "allreduce" if mode == "allreduce" else "reduce_scatter"
+            per = self.collective_us(op, transport, per_bytes)
+            if mode == "reduce_scatter":
+                per += self.collective_us("allgather", transport, per_bytes)
+            width = min(max_inflight or nb, nb)
+            # Diminishing overlap: each extra in-flight slot hides a
+            # shrinking share of the next collective's latency.
+            us = nb * per / (1.0 + 0.5 * (width - 1))
+        if codec is not None:
+            us *= self.codec_ratio(codec, min(bucket_bytes, total_bytes))
+        return us
+
+    def autotune_reduction(
+        self,
+        total_bytes: int,
+        p: int,
+        *,
+        codec: Optional[str] = None,
+        transports: Optional[Sequence[str]] = None,
+        modes: Sequence[str] = ("allreduce", "reduce_scatter"),
+        bucket_candidates: Optional[Sequence[int]] = None,
+        inflight_candidates: Sequence[Optional[int]] = (1, 2, 4),
+    ) -> Plan:
+        """Sweep the knob grid, return the cheapest :class:`Plan` (with
+        every rewrite rule enabled — rules are bitwise-neutral, so they
+        are always safe to turn on)."""
+        if transports is None:
+            transports = self.measured_transports("allreduce")
+        if bucket_candidates is None:
+            measured = sorted({
+                int(r["bucket_bytes"]) for r in self._overlap
+                if r.get("bucket_bytes")
+            })
+            bucket_candidates = measured or [1 << 16, 1 << 18, 1 << 20,
+                                             4 << 20]
+        bucket_candidates = [
+            b for b in bucket_candidates if b < 4 * max(total_bytes, 1)
+        ] or [max(total_bytes, 1)]
+        best, best_us = None, float("inf")
+        for t in transports:
+            for m in modes:
+                for b in bucket_candidates:
+                    for fl in inflight_candidates:
+                        us = self.reduction_us(
+                            total_bytes, p, transport=t, mode=m,
+                            bucket_bytes=b, max_inflight=fl, codec=codec,
+                        )
+                        if us < best_us:
+                            best_us = us
+                            best = (t, m, b, fl)
+        t, m, b, fl = best
+        return Plan(
+            transport=t,
+            compression=codec,
+            bucket_bytes=b,
+            mode=m,
+            max_inflight=fl,
+            rules=ALL_RULES,
+            source="auto",
+        )
+
+
+# --------------------------------------------------------------------------
+# Plan resolution helpers (shared by overlap / Lowering / trainer / MoE)
+# --------------------------------------------------------------------------
+def resolve_plan(plan, *, total_bytes: int = 0, p: int = 1,
+                 codec: Optional[str] = None) -> Optional[Plan]:
+    """Normalize a user-supplied ``plan=`` value: ``None`` stays None
+    (the unplanned path), ``"auto"`` autotunes from the fitted cost
+    model, a :class:`Plan` passes through, anything else is a loud
+    trace-time error."""
+    if plan is None:
+        return None
+    if isinstance(plan, Plan):
+        return plan
+    if plan == "auto":
+        return CostModel.fit().autotune_reduction(
+            max(int(total_bytes), 1), p, codec=codec
+        )
+    raise KampingError(
+        f"plan={plan!r}: expected None, 'auto', or a repro.core.Plan "
+        "instance"
+    )
+
+
+def plan_call_transport(plan, spec_name: str, nbytes: float) -> Optional[Any]:
+    """The transport a plan picks for one table call: an explicit
+    ``plan.transport`` wins; ``"auto"`` asks the cost model; None means
+    "no opinion" (the engine keeps its default resolution)."""
+    if plan is None:
+        return None
+    if isinstance(plan, Plan):
+        return plan.transport
+    if plan == "auto":
+        return CostModel.fit().choose_call_transport(spec_name, nbytes)
+    raise KampingError(
+        f"plan={plan!r}: expected None, 'auto', or a repro.core.Plan "
+        "instance"
+    )

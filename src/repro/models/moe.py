@@ -141,7 +141,8 @@ def _dispatch_slots(experts, gates, e_pad: int, cap_e: int):
 
 def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
                          combine="gather", transport=None, overlap=False,
-                         pool=None, group_size=None, compression=None):
+                         pool=None, group_size=None, compression=None,
+                         plan=None):
     """EP MoE body — call INSIDE shard_map.
 
     p_local: expert bank sharded over ``ep_axis`` -> local (E_local, d, ff);
@@ -200,12 +201,27 @@ def moe_forward_ep_local(p_local, x_local, cfg, ep_axis, *, use_grid=False,
     reduce_scatter combine: the gather combine is pure data movement
     with nothing to accumulate, so passing a codec there is a
     trace-time error.
+
+    ``plan`` (DESIGN.md §13): a :class:`~repro.core.Plan` or ``"auto"``
+    hands the *transport* choice for the layer's dispatch/combine
+    collectives to the cost-model planner — the plan rides the
+    communicator as its engine-level default and only speaks for table
+    calls with no explicit transport anywhere, so it is mutually
+    exclusive with ``transport=``.  Planner transport choices are
+    bitwise-neutral by the §7 transport contract; ``plan.compression``
+    is advisory and never applied here.
     """
     from repro.core import KampingError, RequestPool
     from repro.core import compression as compression_param
     from repro.core import get_codec
 
-    comm = Communicator(ep_axis, transport=transport)
+    if plan is not None and transport is not None:
+        raise KampingError(
+            "moe_forward_ep_local: plan= and transport= are mutually "
+            "exclusive (a plan only resolves the transport when none is "
+            f"pinned); got transport={transport!r}, plan={plan!r}"
+        )
+    comm = Communicator(ep_axis, transport=transport, plan=plan)
     if use_grid:
         from repro.core import GridCommunicator
 

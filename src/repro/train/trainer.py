@@ -111,6 +111,21 @@ class TrainConfig:
     # deterministic-capable codecs compose (quantized-leaf semantics,
     # DESIGN.md §12); "topk" raises at construction.
     grad_compress: Optional[str] = None
+    # grad_reduce="overlap" only: hand the bucketed reduction to the
+    # trace-time planner (core/planner.py, DESIGN.md §13).  "auto" fits
+    # the cost model from benchmarks/artifacts/*.json and autotunes
+    # transport / bucket_bytes / mode / max_inflight; a Plan instance
+    # pins the choices (its knobs override the fields above).  Every
+    # planner rewrite is bitwise-neutral — planned and unplanned steps
+    # produce identical parameters (tests/test_planner_equivalence.py).
+    plan: Any = None
+    # grad_reduce="overlap" only: reduction-order determinism mode for
+    # the bucketed reduction ("tree" = the p-invariant canonical tree,
+    # DESIGN.md §12).  grad_reduce="reproducible" remains the
+    # whole-trainer alias; this knob composes determinism with the
+    # overlap scheduler (and with the planner — plans never perturb a
+    # deterministic reduction's order).
+    deterministic: Optional[str] = None
 
     def __post_init__(self):
         # Back-compat: the pre-codec-registry mode string maps onto the
@@ -187,6 +202,33 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
             f"TrainConfig.grad_compress={tcfg.grad_compress!r} does not "
             "compose with grad_reduce='reproducible' (codec reduction "
             "order is not p-invariant); use 'int8-ef' or 'fp8-e4m3'"
+        )
+    # Planner / determinism knobs live in the overlap scheduler
+    # (DESIGN.md §8/§13): validated eagerly so a misplaced config is a
+    # construction-time error rather than a silently-ignored field.
+    if tcfg.plan is not None and tcfg.grad_reduce != "overlap":
+        raise ValueError(
+            f"TrainConfig.plan={tcfg.plan!r} requires "
+            f"grad_reduce='overlap' (got {tcfg.grad_reduce!r}): the "
+            "planner schedules the bucketed reduction program"
+        )
+    if tcfg.deterministic is not None and tcfg.grad_reduce != "overlap":
+        raise ValueError(
+            f"TrainConfig.deterministic={tcfg.deterministic!r} requires "
+            f"grad_reduce='overlap' (got {tcfg.grad_reduce!r}); for the "
+            "whole-trainer deterministic alias use "
+            "grad_reduce='reproducible'"
+        )
+    if (
+        tcfg.deterministic is not None
+        and grad_codec is not None
+        and not grad_codec.supports_deterministic
+    ):
+        raise ValueError(
+            f"TrainConfig.grad_compress={tcfg.grad_compress!r} does not "
+            "compose with deterministic gradient reduction (codec "
+            "reduction order is not p-invariant); use 'int8-ef' or "
+            "'fp8-e4m3'"
         )
 
     if tcfg.grad_reduce == "auto":
@@ -303,6 +345,8 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
                         scale=inv_p,
                         compression=grad_codec,
                         err_state=err,
+                        deterministic=tcfg.deterministic,
+                        plan=tcfg.plan,
                     )
                 else:
                     grads = overlap_reduce_tree(
@@ -311,6 +355,8 @@ def make_train_step(cfg, tcfg: TrainConfig, runtime: Runtime,
                         max_inflight=tcfg.max_inflight,
                         mode=tcfg.overlap_mode,
                         scale=inv_p,
+                        deterministic=tcfg.deterministic,
+                        plan=tcfg.plan,
                     )
             elif grad_codec is not None:
                 flat_g, gdef = jax.tree.flatten(grads)

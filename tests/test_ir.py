@@ -1,0 +1,280 @@
+"""Trace-time collective IR (core/ir.py): golden snapshots + dep inference.
+
+The recorder observes every collective issued through the op-spec engine
+(``execute`` records a node per table op; ``QuantizedCodec`` records its
+scale exchange) and infers dependency edges from buffer identity — the
+array object a later op consumes is the one an earlier op produced.  The
+goldens below pin the *program text* (``Program.pretty()``) for the three
+subsystems the planner reasons about: a bucketed trainer step, the MoE
+EP forward, and the serve decode island.  Shapes, op kinds, dep edges,
+and param bindings are all part of the snapshot — a refactor that moves
+a collective, drops a parameter, or reorders the schedule shows up as a
+text diff here before it shows up as a performance mystery.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import operator
+import pytest
+
+from repro.core import (
+    Communicator,
+    Program,
+    annotate,
+    op as op_param,
+    recording,
+    send_buf,
+    trace_collectives,
+)
+
+
+def spmd(f, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.vmap(
+        lambda *ls: f(jax.tree.unflatten(treedef, ls)), axis_name="x"
+    )(*leaves)
+
+
+def golden(s: str) -> str:
+    return textwrap.dedent(s).strip()
+
+
+# -- recorder mechanics --------------------------------------------------------
+def test_trace_collectives_returns_result_and_program():
+    x = np.arange(8, dtype=np.float32).reshape(4, 2)
+
+    def f(t):
+        comm = Communicator("x")
+        r = comm.allreduce(send_buf(t["a"]), op_param(operator.add))
+        g = comm.allgather(send_buf(r))
+        return g
+
+    out, prog = trace_collectives(spmd, f, {"a": x})
+    np.testing.assert_array_equal(
+        np.asarray(out), np.broadcast_to(x.sum(0), (4, 4, 2)).reshape(4, 8)
+    )
+    assert [o.op for o in prog.ops] == ["allreduce", "allgather"]
+    # buffer-identity dep inference: the allgather consumed the
+    # allreduce's recv_buf
+    assert prog.ops[1].deps == (0,)
+    prog.validate()
+
+
+def test_dep_inference_skips_unrelated_buffers():
+    def f(t):
+        comm = Communicator("x")
+        a = comm.allreduce(send_buf(t["a"]), op_param(operator.add))
+        b = comm.allreduce(send_buf(t["b"]), op_param(operator.add))
+        return a, b
+
+    _, prog = trace_collectives(
+        spmd, f,
+        {"a": np.ones((2, 3), np.float32), "b": np.ones((2, 4), np.float32)},
+    )
+    assert [o.deps for o in prog.ops] == [(), ()]
+
+
+def test_annotate_labels_ops():
+    def f(t):
+        comm = Communicator("x")
+        with annotate("stats"):
+            return comm.allreduce(send_buf(t["a"]), op_param(operator.add))
+
+    with recording() as rec:
+        spmd(f, {"a": np.ones((2, 3), np.float32)})
+    (node,) = rec.program().ops
+    assert node.label == "stats"
+    assert "// stats" in node.pretty()
+
+
+def test_param_bindings_cover_engine_params():
+    """transport / compression / deterministic all surface as IR params."""
+    from repro.core import compression, deterministic
+
+    def f(t):
+        comm = Communicator("x")
+        return comm.allreduce(
+            send_buf(t["a"]), op_param(operator.add),
+            compression("int8-ef"), deterministic("tree"),
+        )
+
+    _, prog = trace_collectives(
+        spmd, f, {"a": (np.arange(8) / 4).astype(np.float32).reshape(2, 4)}
+    )
+    assert [o.op for o in prog.ops] == ["scale_exchange", "allreduce"]
+    node = prog.ops[1]
+    assert node.param("compression") == "int8-ef"
+    assert node.param("deterministic") == "tree"
+    assert node.param("transport") == "xla"
+    assert node.param("p") == "2"
+    assert node.deps == (0,)  # the scale exchange feeds the reduction
+
+
+def test_program_pretty_roundtrip_is_stable():
+    def f(t):
+        comm = Communicator("x")
+        return comm.allreduce(send_buf(t["a"]), op_param(operator.add))
+
+    _, prog = trace_collectives(spmd, f, {"a": np.ones((2, 3), np.float32)})
+    assert prog.pretty() == golden(
+        "%0 = kamping.allreduce() "
+        "{shape=(3,), dtype=float32, op=add, p=2, transport=xla}"
+    )
+
+
+# -- golden: bucketed trainer step ---------------------------------------------
+TRAINER_GOLDEN = golden("""
+    %0 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %1 = kamping.reduce_scatter(%0) {shape=(4096,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %2 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %3 = kamping.reduce_scatter(%2) {shape=(4096,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %4 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %5 = kamping.reduce_scatter(%4) {shape=(4096,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %6 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %7 = kamping.reduce_scatter(%6) {shape=(3200,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %8 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %9 = kamping.reduce_scatter(%8) {shape=(3072,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %10 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %11 = kamping.reduce_scatter(%10) {shape=(4096,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %12 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %13 = kamping.reduce_scatter(%12) {shape=(32,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %14 = kamping.scale_exchange() {shape=(), dtype=float32, codec=int8-ef, p=1}
+    %15 = kamping.reduce_scatter(%14) {shape=(4096,), dtype=float32, compression=int8-ef, op=add, p=1, transport=xla}
+    %16 = kamping.allgather(%1) {shape=(4096,), dtype=float32, p=1, transport=xla}
+    %17 = kamping.allgather(%3) {shape=(4096,), dtype=float32, p=1, transport=xla}
+    %18 = kamping.allgather(%5) {shape=(4096,), dtype=float32, p=1, transport=xla}
+    %19 = kamping.allgather(%7) {shape=(3200,), dtype=float32, p=1, transport=xla}
+    %20 = kamping.allgather(%9) {shape=(3072,), dtype=float32, p=1, transport=xla}
+    %21 = kamping.allgather(%11) {shape=(4096,), dtype=float32, p=1, transport=xla}
+    %22 = kamping.allgather(%13) {shape=(32,), dtype=float32, p=1, transport=xla}
+    %23 = kamping.allgather(%15) {shape=(4096,), dtype=float32, p=1, transport=xla}
+""")
+
+
+def test_golden_trainer_step_overlap_rs_int8ef():
+    """A full jitted train step under grad_reduce='overlap' (RS+AG mode,
+    int8-ef): the recorded IR is exactly the bucketed schedule — one
+    scale exchange feeding each compressed reduce_scatter, then the
+    allgathers, each dep-linked to its bucket's reduction.  16 KiB
+    buckets over the 2-layer/32-dim model give 8 buckets."""
+    from repro.data import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import ModelConfig
+    from repro.sharding import ShardingProfile
+    from repro.train import AdamWConfig, TrainConfig, Trainer
+
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32",
+        param_dtype="float32",
+    )
+    data = SyntheticLM(vocab_size=128, seq_len=16, batch_size=8, seed=3)
+    batch = next(iter(data))
+    mesh = make_host_mesh(shape=(1, 1))
+    profile = ShardingProfile(dp_axes=("data",), tp_axis="model",
+                              fsdp_axes=None)
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=100),
+        grad_reduce="overlap", bucket_bytes=1 << 14, max_inflight=2,
+        overlap_mode="reduce_scatter", grad_compress="int8-ef",
+    )
+    tr = Trainer(cfg, mesh, profile, tcfg)
+    params, opt, extra = tr.init_state(jax.random.PRNGKey(0))
+    with recording() as rec:
+        # first call => the jit traces here, which is where the
+        # collective-issuing Python runs
+        tr.step_fn()(params, opt, extra, tr.place_batch(batch))
+    prog = rec.program()
+    prog.validate()
+    assert prog.pretty() == TRAINER_GOLDEN
+
+
+# -- golden: MoE EP forward ----------------------------------------------------
+MOE_RS_GOLDEN = golden("""
+    %0 = kamping.alltoallv() {shape=(4, 6, 16), dtype=float32, p=4, transport=xla}
+    %1 = kamping.alltoallv() {shape=(4, 6, 2), dtype=float32, p=4, transport=xla}
+    %2 = kamping.reduce_scatter() {shape=(8, 16), dtype=float32, op=add, p=4, transport=xla}
+""")
+
+MOE_GATHER_GOLDEN = golden("""
+    %0 = kamping.alltoallv() {shape=(4, 6, 16), dtype=float32, p=4, transport=xla}
+    %1 = kamping.alltoallv() {shape=(4, 6, 16), dtype=float32, p=4, transport=xla}
+""")
+
+
+@pytest.mark.parametrize(
+    "combine,want",
+    [("reduce_scatter", MOE_RS_GOLDEN), ("gather", MOE_GATHER_GOLDEN)],
+    ids=["rs", "gather"],
+)
+def test_golden_moe_forward(combine, want):
+    """MoE EP forward IR: token dispatch (alltoallv), then either the
+    metadata alltoallv + in-collective reduce_scatter combine or the
+    return-path alltoallv of the gather combine.  The payload is
+    recomputed between the exchanges (expert FFN), so the ops are
+    dependency-free — the IR shows data movement, not arithmetic."""
+    from repro.models.config import ModelConfig
+    from repro.models.moe import init_moe, moe_forward_ep_local
+
+    p = 4
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=8, top_k=2,
+        moe_d_ff=32, capacity_factor=1.5, dtype="float32",
+        param_dtype="float32",
+    )
+    params = init_moe(jax.random.PRNGKey(0), cfg, ep_size=p)
+    x = np.random.RandomState(5 + p).randn(p, 8, cfg.d_model).astype(
+        np.float32
+    )
+    e_local = params["wi"].shape[0] // p
+    sh = {k: params[k].reshape(p, e_local, *params[k].shape[1:])
+          for k in ("wi", "wg", "wo")}
+
+    def f(xl, wi, wg, wo):
+        pl = {**params, "wi": wi, "wg": wg, "wo": wo}
+        return moe_forward_ep_local(pl, xl, cfg, "x", combine=combine)
+
+    with recording() as rec:
+        jax.vmap(f, axis_name="x")(x, sh["wi"], sh["wg"], sh["wo"])
+    prog = rec.program()
+    prog.validate()
+    assert prog.pretty() == want
+
+
+# -- golden: serve decode island -----------------------------------------------
+SERVE_GOLDEN = golden("""
+    %0 = kamping.allreduce() {shape=(), dtype=int32, groups=2, op=add, p=1, transport=xla}
+    %1 = kamping.allreduce() {shape=(), dtype=int32, op=add, p=2, transport=xla}
+""")
+
+
+def test_golden_serve_decode_island():
+    """The serve decode island's liveness stats: one grouped allreduce
+    (replica pools via split_by — p is the group size, groups the pool
+    count) and one flat allreduce over the whole serve axis.  Recorded
+    once: jit caches the decode trace, so later steps add nothing."""
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = ModelConfig(
+        name="s", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+        param_dtype="float32",
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=16, num_slots=1,
+                         num_replicas=2)
+    rng = np.random.RandomState(9)
+    engine.submit(
+        Request(prompt=rng.randint(1, 64, (4,)).astype(np.int32),
+                max_new_tokens=4),
+        replica=0,
+    )
+    with recording() as rec:
+        engine.run_to_completion()
+    prog = rec.program()
+    prog.validate()
+    assert prog.pretty() == SERVE_GOLDEN

@@ -238,6 +238,70 @@ def test_overlap_empty_tree_and_bad_mode():
         )
 
 
+# -- plan_buckets identity-plan / no-op guarantee ------------------------------
+def test_plan_buckets_empty_leaves_is_identity_plan():
+    """No leaves -> [] (regression: the planner's resolve path consumes
+    this without staging a schedule, per the documented no-op guarantee)."""
+    assert plan_buckets([], 1 << 20) == []
+    assert plan_buckets([], 1) == []
+    # knob validation still applies before the empty fast path
+    with pytest.raises(KampingError, match="bucket_bytes"):
+        plan_buckets([], 0)
+
+
+def test_plan_buckets_all_scalar_tree():
+    """A pytree of scalars is an ordinary payload: one 1-element slot per
+    leaf, grouped by dtype — not a degenerate empty plan.  The reduction
+    matches the per-leaf oracle bitwise."""
+    leaves = [jnp.zeros(()), jnp.asarray(2, jnp.int32), jnp.ones(())]
+    bplan = plan_buckets(leaves, 1 << 20)
+    covered = sorted(i for b in bplan for i in b.indices)
+    assert covered == [0, 1, 2]
+    assert all(s == 1 for b in bplan for s in b.sizes)
+    assert sum(b.nbytes for b in bplan) == 12
+
+    p = 2
+    tree = {
+        "s1": np.asarray([1.5, 2.5], np.float32),
+        "s2": np.asarray([3, 4], np.int32),
+    }
+    out = spmd(lambda t: overlap_reduce_tree(Communicator("x"), t), tree)
+    np.testing.assert_array_equal(np.asarray(out["s1"]), np.full(p, 4.0))
+    np.testing.assert_array_equal(np.asarray(out["s2"]), np.full(p, 7))
+
+
+def test_plan_buckets_zero_size_leaves_stage_no_collective():
+    """Zero-element leaves occupy a zero-total bucket slot that stages no
+    collective (the schedule carries no node for it) and round-trip
+    through both the direct and the planned path unchanged."""
+    from repro.core import ALL_RULES, Plan
+    from repro.core.overlap import _build_schedule
+
+    leaves = [jnp.zeros((0,), jnp.float32), jnp.zeros((4,), jnp.float32)]
+    bplan = plan_buckets(leaves, 8)  # the empty leaf gets its own bucket
+    zero = [b for b in bplan if sum(b.sizes) == 0]
+    assert zero, "expected a zero-total bucket"
+    prog = _build_schedule(
+        bplan, mode="allreduce", codec=None, deterministic=None, p=2
+    )
+    assert len(prog) == len(bplan) - len(zero)  # no node for empty buckets
+
+    p = 2
+    tree = {
+        "z": np.zeros((p, 0), np.float32),
+        "w": np.asarray([[1.0, 2.0], [3.0, 4.0]], np.float32),
+    }
+    for extra in ({}, {"plan": Plan(rules=ALL_RULES)}):
+        out = spmd(
+            lambda t: overlap_reduce_tree(Communicator("x"), t, **extra),
+            tree,
+        )
+        assert np.asarray(out["z"]).shape == (p, 0)
+        np.testing.assert_array_equal(
+            np.asarray(out["w"]), np.full((p, 2), [4.0, 6.0])
+        )
+
+
 # -- trainer end-to-end --------------------------------------------------------
 @pytest.mark.parametrize("transport", TRANSPORTS)
 def test_trainer_overlap_matches_allreduce(transport):

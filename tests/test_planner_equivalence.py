@@ -1,0 +1,320 @@
+"""Planner rewrite-equivalence harness (DESIGN.md §13): every planned
+program must be **bitwise identical** to the unplanned path.
+
+This is the gate that makes the planner safe to turn on: each rewrite
+rule is exercised in isolation on a schedule shaped so the rule actually
+fires, then all rules combined — across world sizes, transports (xla +
+pallas rings), the hierarchical transport, split communicator groups,
+the quantized error-feedback codecs, and deterministic("tree")
+reduction.  Comparisons are ``assert_array_equal`` on raw bits, never
+allclose: the §7/§10/§12 contracts promise parameter-for-parameter
+identical floats, and the planner inherits that promise wholesale.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALL_RULES,
+    Communicator,
+    HierTransport,
+    KampingError,
+    Plan,
+    REWRITE_RULES,
+    overlap_reduce_tree,
+)
+from repro.core.planner import resolve_plan
+
+PS = (1, 2, 4, 8)
+TRANSPORTS = ("xla", "pallas")
+RULES = tuple(REWRITE_RULES)
+
+
+def spmd(f, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.vmap(
+        lambda *ls: f(jax.tree.unflatten(treedef, ls)), axis_name="x"
+    )(*leaves)
+
+
+def dyadic(p, shape, seed=0):
+    """Exactly-summable float payloads: sums and /p are bitwise stable."""
+    rng = np.random.RandomState(seed + p)
+    return (rng.randint(-512, 513, size=(p,) + shape) / 16.0).astype(
+        np.float32
+    )
+
+
+def mixed_tree(p, seed=0):
+    """f32 / int32 interleaving: the dtype breaks split the float payload
+    into several small buckets, which is what makes merge_buckets (and
+    the multi-bucket fuse/reorder/hoist cases) actually fire."""
+    return {
+        "a": dyadic(p, (8, 8), seed + 1),
+        "b": np.full((p, 5), 3, np.int32),
+        "c": dyadic(p, (4, 4), seed + 2),
+        "d": np.full((p, 3), -2, np.int32),
+        "e": dyadic(p, (6,), seed + 3),
+    }
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def reduce_pair(tree, p, plan, **kw):
+    """(unplanned, planned) results of the same bucketed reduction."""
+    def run(extra):
+        return spmd(
+            lambda t: overlap_reduce_tree(
+                Communicator("x"), t, scale=1.0 / p, **kw, **extra
+            ),
+            tree,
+        )
+
+    return run({}), run({"plan": plan})
+
+
+# -- each rule in isolation ----------------------------------------------------
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("rule", RULES)
+def test_single_rule_bitwise(rule, p):
+    """One rule at a time, on a schedule where it fires: fuse/reorder on
+    the RS+AG decomposition, merge on small same-dtype buckets under a
+    large byte limit, hoist on multiple quantized buckets."""
+    tree = mixed_tree(p, seed=11)
+    configs = [
+        dict(bucket_bytes=1 << 20, mode="allreduce"),        # merge fires
+        dict(bucket_bytes=256, mode="reduce_scatter"),       # fuse/reorder
+        dict(bucket_bytes=256, mode="reduce_scatter",        # hoist
+             compression="int8-ef"),
+    ]
+    for kw in configs:
+        want, got = reduce_pair(tree, p, Plan(rules=(rule,)), **kw)
+        assert_trees_equal(want, got)
+
+
+# -- all rules combined, both transports ---------------------------------------
+@pytest.mark.pallas
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_all_rules_combined_bitwise(transport, p):
+    tree = mixed_tree(p, seed=23)
+    for kw in (
+        dict(bucket_bytes=1 << 20, mode="allreduce"),
+        dict(bucket_bytes=256, mode="reduce_scatter",
+             compression="int8-ef"),
+    ):
+        def run(extra):
+            return spmd(
+                lambda t: overlap_reduce_tree(
+                    Communicator("x", transport=transport), t,
+                    scale=1.0 / p, **kw, **extra
+                ),
+                tree,
+            )
+
+        assert_trees_equal(run({}), run({"plan": Plan(rules=ALL_RULES)}))
+
+
+# -- quantized error-feedback codecs, incl. the err-state round trip -----------
+@pytest.mark.parametrize("codec", ("int8-ef", "fp8-e4m3"))
+@pytest.mark.parametrize("mode", ("allreduce", "reduce_scatter"))
+def test_codec_bitwise_including_error_feedback(codec, mode):
+    p = 4
+    tree = mixed_tree(p, seed=37)
+
+    def run(extra):
+        def f(t):
+            # f32 zeros for every leaf — the trainer's err-state contract
+            # (integer buckets carry the residual through untouched)
+            e = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), t
+            )
+            return overlap_reduce_tree(
+                Communicator("x"), t, bucket_bytes=256, mode=mode,
+                scale=1.0 / p, compression=codec, err_state=e, **extra
+            )
+
+        return spmd(f, tree)
+
+    (w_tree, w_err), (g_tree, g_err) = (
+        run({}), run({"plan": Plan(rules=ALL_RULES)})
+    )
+    assert_trees_equal(w_tree, g_tree)
+    assert_trees_equal(w_err, g_err)  # residuals identical too
+
+
+# -- deterministic("tree") -----------------------------------------------------
+@pytest.mark.parametrize("p", PS)
+def test_deterministic_tree_bitwise(p):
+    tree = mixed_tree(p, seed=41)
+    for kw in (
+        dict(bucket_bytes=1 << 20, mode="allreduce"),
+        dict(bucket_bytes=256, mode="reduce_scatter",
+             compression="int8-ef"),
+    ):
+        want, got = reduce_pair(
+            tree, p, Plan(rules=ALL_RULES), deterministic="tree", **kw
+        )
+        assert_trees_equal(want, got)
+
+
+# -- split groups + hierarchical transport -------------------------------------
+def test_split_groups_bitwise():
+    p = 4
+    tree = mixed_tree(p, seed=43)
+
+    def run(extra):
+        def f(t):
+            comm = Communicator("x").split_by(block=2)
+            return overlap_reduce_tree(
+                comm, t, bucket_bytes=256, scale=0.5,
+                compression="int8-ef", **extra
+            )
+
+        return spmd(f, tree)
+
+    assert_trees_equal(run({}), run({"plan": Plan(rules=ALL_RULES)}))
+
+
+def test_hier_transport_bitwise():
+    p = 4
+    tree = mixed_tree(p, seed=47)
+
+    def run(extra):
+        def f(t):
+            comm = Communicator("x", transport=HierTransport(group_size=2))
+            return overlap_reduce_tree(
+                comm, t, bucket_bytes=256, mode="reduce_scatter",
+                scale=1.0 / p, **extra
+            )
+
+        return spmd(f, tree)
+
+    assert_trees_equal(run({}), run({"plan": Plan(rules=ALL_RULES)}))
+
+
+# -- plan="auto" and plan knobs ------------------------------------------------
+@pytest.mark.parametrize("p", (1, 4))
+def test_plan_auto_bitwise(p):
+    """The cost-model plan ("auto": fitted from benchmarks/artifacts) is
+    still a bitwise no-op — it may re-bucket, re-mode, and re-transport,
+    but never changes a parameter value."""
+    tree = mixed_tree(p, seed=53)
+    want, got = reduce_pair(tree, p, "auto")
+    assert_trees_equal(want, got)
+
+
+def test_plan_knobs_match_explicit_knobs():
+    """Plan(bucket_bytes/mode/max_inflight) overrides the call knobs —
+    and matches the unplanned path run with the same knobs explicitly."""
+    p = 4
+    tree = mixed_tree(p, seed=59)
+    plan = Plan(bucket_bytes=128, mode="reduce_scatter", max_inflight=1,
+                rules=())
+    explicit = spmd(
+        lambda t: overlap_reduce_tree(
+            Communicator("x"), t, bucket_bytes=128,
+            mode="reduce_scatter", max_inflight=1, scale=1.0 / p,
+        ),
+        tree,
+    )
+    planned = spmd(
+        lambda t: overlap_reduce_tree(
+            Communicator("x"), t, scale=1.0 / p, plan=plan
+        ),
+        tree,
+    )
+    assert_trees_equal(explicit, planned)
+
+
+def test_explicit_transport_beats_plan_transport():
+    """A communicator's pinned transport wins over the plan's: plans only
+    speak where nothing was chosen explicitly (DESIGN.md §13)."""
+    p = 2
+    tree = {"a": dyadic(p, (6,), 61)}
+    pinned = spmd(
+        lambda t: overlap_reduce_tree(
+            Communicator("x", transport="pallas"), t, scale=1.0 / p,
+            plan=Plan(transport="xla", rules=()),
+        ),
+        tree,
+    )
+    want = spmd(
+        lambda t: overlap_reduce_tree(
+            Communicator("x", transport="pallas"), t, scale=1.0 / p
+        ),
+        tree,
+    )
+    assert_trees_equal(want, pinned)
+
+
+def test_plan_validation_errors():
+    with pytest.raises(KampingError, match="unknown rewrite rule"):
+        Plan(rules=("nope",))
+    with pytest.raises(KampingError, match="plan"):
+        Communicator("x", plan=123)
+    with pytest.raises(KampingError, match="plan"):
+        resolve_plan("bogus")
+
+
+# -- the 3-step training gate --------------------------------------------------
+def test_trainer_three_step_gate_overlap_int8ef_deterministic_tree():
+    """Three full train steps under grad_reduce='overlap' +
+    grad_compress='int8-ef' + deterministic('tree'): parameters after
+    every step are bitwise identical with plan=None, a manual
+    Plan(rules=ALL_RULES), and plan='auto'."""
+    from repro.data import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import ModelConfig
+    from repro.sharding import ShardingProfile
+    from repro.train import AdamWConfig, TrainConfig, Trainer
+
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32",
+        param_dtype="float32",
+    )
+    data = SyntheticLM(vocab_size=128, seq_len=16, batch_size=8, seed=3)
+    it = iter(data)
+    batches = [next(it) for _ in range(3)]
+
+    def run(plan):
+        mesh = make_host_mesh(shape=(1, 1))
+        profile = ShardingProfile(dp_axes=("data",), tp_axis="model",
+                                  fsdp_axes=None)
+        tcfg = TrainConfig(
+            opt=AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=100),
+            grad_reduce="overlap", bucket_bytes=1 << 14,
+            overlap_mode="reduce_scatter", grad_compress="int8-ef",
+            deterministic="tree", plan=plan,
+        )
+        tr = Trainer(cfg, mesh, profile, tcfg)
+        params, opt, extra = tr.init_state(jax.random.PRNGKey(0))
+        step = tr.step_fn()
+        out = []
+        for b in batches:
+            params, opt, extra, loss, _ = step(
+                params, opt, extra, tr.place_batch(b)
+            )
+            assert np.isfinite(float(loss))
+            # step_fn donates its inputs: snapshot to host before the
+            # next call deletes these buffers
+            out.append(jax.tree.map(np.asarray, params))
+        return out
+
+    base = run(None)
+    for plan in (Plan(rules=ALL_RULES), "auto"):
+        got = run(plan)
+        for s, (w, g) in enumerate(zip(base, got)):
+            try:
+                assert_trees_equal(w, g)
+            except AssertionError as e:
+                raise AssertionError(
+                    f"plan={plan!r} diverged at step {s}"
+                ) from e

@@ -1,0 +1,189 @@
+"""Planner rewrite properties (core/planner.py) over randomized schedules.
+
+Property-based (``tests/_hypothesis_compat.py``: real hypothesis when
+installed, seeded offline fallback otherwise): random gradient pytrees
+are bucketed and staged into schedule programs (``_build_schedule``) and
+random rule subsets applied.  Every rewrite must
+
+* preserve the dependency partial order — if bucket A's collective had
+  to run before bucket B's, whatever nodes carry A and B afterwards are
+  still so ordered;
+* never drop or duplicate payload — the multiset of bucket ids carried
+  by payload nodes, and the total element count, are invariant;
+* keep the program structurally valid (``Program.validate``);
+
+and the identity cases round-trip exactly: an empty rule tuple (what
+``plan=None`` / ``Plan(rules=())`` executes) returns a program whose
+pretty-print is byte-equal to the input's.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import ALL_RULES, KampingError, get_codec, plan_buckets
+from repro.core.overlap import _build_schedule
+from repro.core.planner import REWRITE_RULES, apply_rules
+
+PAYLOAD_OPS = ("reduce_scatter", "allreduce")
+
+
+# -- schedule generator --------------------------------------------------------
+def _schedule(draw):
+    """Draw (program, ctx): random leaves -> buckets -> staged schedule."""
+    n_leaves = draw(st.integers(1, 6))
+    dtypes = [
+        draw(st.sampled_from(["float32", "float32", "int32"]))
+        for _ in range(n_leaves)
+    ]
+    sizes = [draw(st.integers(0, 40)) for _ in range(n_leaves)]
+    leaves = [
+        jnp.zeros((s,), jnp.dtype(dt)) for s, dt in zip(sizes, dtypes)
+    ]
+    bucket_bytes = draw(st.sampled_from([16, 64, 256, 1 << 20]))
+    mode = draw(st.sampled_from(["allreduce", "reduce_scatter"]))
+    codec_name = draw(st.sampled_from([None, "int8-ef", "fp8-e4m3"]))
+    deterministic = draw(st.sampled_from([None, "tree"]))
+    p = draw(st.sampled_from([1, 2, 4, 8]))
+    codec = get_codec(codec_name) if codec_name else None
+    bplan = plan_buckets(leaves, bucket_bytes)
+    prog = _build_schedule(
+        bplan, mode=mode, codec=codec, deterministic=deterministic, p=p
+    )
+    ctx = {"bucket_bytes": bucket_bytes, "codec_quantized": codec is not None}
+    return prog, ctx
+
+
+schedules = st.composite(_schedule)
+
+
+def _rule_subset(draw):
+    names = list(REWRITE_RULES)
+    return tuple(n for n in names if draw(st.integers(0, 1)))
+
+
+rule_subsets = st.composite(_rule_subset)
+
+
+def _payload_map(prog):
+    """bucket id -> index of the payload node carrying it."""
+    out = {}
+    for node in prog.ops:
+        if node.op in PAYLOAD_OPS:
+            for b in node.meta["buckets"]:
+                assert b not in out, f"bucket {b} duplicated"
+                out[b] = node.idx
+    return out
+
+
+def _payload_total(prog):
+    return sum(
+        node.meta["total"] for node in prog.ops if node.op in PAYLOAD_OPS
+    )
+
+
+# -- properties ----------------------------------------------------------------
+@given(schedules(), rule_subsets())
+def test_rewrites_never_drop_or_duplicate_payload(sched, rules):
+    prog, ctx = sched
+    rw = apply_rules(prog, rules, ctx)
+    rw.validate()
+    assert set(_payload_map(rw)) == set(_payload_map(prog))
+    assert _payload_total(rw) == _payload_total(prog)
+
+
+@given(schedules(), rule_subsets())
+def test_rewrites_preserve_dependency_partial_order(sched, rules):
+    """If bucket A's collective preceded bucket B's in the dependency
+    order, the nodes carrying A and B after the rewrite are still so
+    ordered (fused/merged buckets may share a node — trivially ordered)."""
+    prog, ctx = sched
+    rw = apply_rules(prog, rules, ctx)
+    before, after = _payload_map(prog), _payload_map(rw)
+    order = rw.partial_order()
+    for (a, b) in prog.partial_order():
+        pa, pb = prog.ops[a], prog.ops[b]
+        if pa.op not in PAYLOAD_OPS or pb.op not in PAYLOAD_OPS:
+            continue  # scale exchanges may be hoisted/regrouped
+        na = after[pa.meta["buckets"][0]]
+        nb = after[pb.meta["buckets"][0]]
+        assert na == nb or (na, nb) in order, (
+            f"lost order: %{a}->%{b} mapped to %{na},%{nb}\n"
+            f"before:\n{prog.pretty()}\nafter:\n{rw.pretty()}"
+        )
+    del before
+
+
+@given(schedules())
+def test_empty_rule_tuple_roundtrips_byte_equal(sched):
+    """Plan(rules=()) — and the plan=None direct path it models — must
+    not perturb the program at all: pretty-print is byte-equal."""
+    prog, ctx = sched
+    rw = apply_rules(prog, (), ctx)
+    assert rw.pretty() == prog.pretty()
+    assert rw == prog
+
+
+@given(schedules())
+def test_all_rules_idempotent_on_fixpoint(sched):
+    """Applying ALL_RULES twice = once (modulo nothing: byte-equal) —
+    rewrites reach a fixpoint rather than oscillating."""
+    prog, ctx = sched
+    once = apply_rules(prog, ALL_RULES, ctx)
+    twice = apply_rules(once, ALL_RULES, ctx)
+    assert twice.pretty() == once.pretty()
+
+
+@given(schedules())
+def test_fuse_produces_no_orphan_allgathers(sched):
+    prog, ctx = sched
+    rw = apply_rules(prog, ("fuse_rs_ag",), ctx)
+    rw.validate()
+    for node in rw.ops:
+        assert node.op != "allgather" or any(
+            rw.ops[d].op == "reduce_scatter" for d in node.deps
+        )
+    # fusing is all-or-nothing per RS+AG pair: no reduce_scatter keeps
+    # a consumer-less existence after its allgather was absorbed
+    ags = sum(1 for n in rw.ops if n.op == "allgather")
+    rss = sum(1 for n in rw.ops if n.op == "reduce_scatter")
+    assert ags == rss
+
+
+def test_apply_rules_rejects_unknown_rule():
+    prog, ctx = _ctx_fixture()
+    with pytest.raises(KampingError, match="unknown rewrite rule"):
+        apply_rules(prog, ("definitely_not_a_rule",), ctx)
+
+
+def _ctx_fixture():
+    leaves = [jnp.zeros((8,), jnp.float32)]
+    bplan = plan_buckets(leaves, 64)
+    prog = _build_schedule(
+        bplan, mode="allreduce", codec=None, deterministic=None, p=2
+    )
+    return prog, {"bucket_bytes": 64, "codec_quantized": False}
+
+
+def test_merge_respects_byte_limit():
+    """merge_buckets never builds a node larger than the ctx limit."""
+    leaves = [
+        jnp.zeros((16,), jnp.float32),
+        jnp.zeros((4,), jnp.int32),
+        jnp.zeros((16,), jnp.float32),
+        jnp.zeros((4,), jnp.int32),
+        jnp.zeros((16,), jnp.float32),
+    ]
+    bplan = plan_buckets(leaves, 64)  # each f32 leaf is its own bucket
+    prog = _build_schedule(
+        bplan, mode="allreduce", codec=None, deterministic=None, p=2
+    )
+    rw = apply_rules(prog, ("merge_buckets",), {"bucket_bytes": 128})
+    rw.validate()
+    for node in rw.ops:
+        assert node.nbytes <= 128
+    # 3 x 64B f32 buckets under a 128B limit -> one merged pair + one
+    # single; the int32 buckets merge among themselves
+    f32 = [n for n in rw.ops if n.dtype == "float32"]
+    assert sorted(len(n.meta["buckets"]) for n in f32) == [1, 2]

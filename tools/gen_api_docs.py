@@ -90,6 +90,20 @@ explicit calls.
   group-relative under `comm.split()`.  Composes with quantized
   `compression(...)` codecs (the exact accumulator is tree-reduced;
   `topk` raises — its scatter-add order is not p-invariant).
+* `plan("auto" | Plan(...))` — hand the *transport* choice to the
+  cost-model planner (DESIGN.md §13): `"auto"` fits
+  `repro.core.CostModel` from `benchmarks/artifacts/*.json` and picks
+  the measured-fastest backend for the row's payload size; a
+  `Plan(transport=...)` pins it.  The plan only speaks when nothing was
+  chosen explicitly — no per-call `transport(...)`, no communicator
+  default, and no plugin routing — so it can never override a user or a
+  spec, and every choice is bitwise-neutral by the §7 transport
+  contract.  Resolution: per-call parameter > communicator default
+  (`Communicator(axis, plan=...)`) > off.  The same object drives the
+  bucketed-overlap scheduler (`overlap_reduce_tree(..., plan=...)`,
+  `TrainConfig(plan=...)`), where it additionally autotunes bucket
+  bytes / per-bucket collective / in-flight bound and applies the IR
+  rewrite rules (gated bitwise by tests/test_planner_equivalence.py).
 
 Non-blocking variants return a `NonBlockingResult`; bulk completion goes
 through `RequestPool` (`waitall` / `testany` / `collect`), the substrate
