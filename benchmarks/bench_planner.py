@@ -21,6 +21,11 @@ over the sweep's best hand time; <= 1.05 means the planner matched or
 beat hand tuning on that sweep (the acceptance bar: at least one sweep
 must).
 
+A second leg sweeps the **hierarchical group size** (DESIGN.md §9/§14):
+flat xla allreduce vs ``HierTransport(group_size=g)`` for the measured
+divisors of p, vs the fitted :meth:`CostModel.autotune_group_size` pick
+— the ``auto`` row's ``auto_vs_hand`` holds it to the same <= 1.05 bar.
+
 Emits benchmarks/artifacts/planner.json (schema-gated by
 check_artifacts.py on the CI bench-smoke leg).
 """
@@ -28,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import operator
 import os
 
 import jax
@@ -38,11 +44,14 @@ from repro.core import (
     ALL_RULES,
     Communicator,
     get_codec,
+    op as op_param,
     overlap_reduce_tree,
     plan_buckets,
+    send_buf,
 )
+from repro.core.hier import HierTransport
 from repro.core.overlap import _build_schedule
-from repro.core.planner import apply_rules, resolve_plan
+from repro.core.planner import CostModel, apply_rules, resolve_plan
 
 P_RANKS = 8
 TRANSPORTS = ("xla", "pallas")
@@ -59,6 +68,12 @@ PAYLOADS = {
 }
 SMOKE_PAYLOADS = {"smoke": [64] * 4 + [1024] * 2}
 SMOKE_BUCKET_BYTES = (1 << 12,)
+
+# Group-size leg: payload bytes per rank for the hier allreduce sweep
+# (matches the hierarchy.json measurement points).
+HIER_PAYLOAD_BYTES = (4096, 65536)
+SMOKE_HIER_PAYLOAD_BYTES = (4096,)
+HIER_GROUPS = (2, 4)  # divisors of P_RANKS with 1 < g < p
 
 
 def make_tree(p, leaf_sizes):
@@ -114,6 +129,63 @@ def wire_bytes_per_rank(tree, *, bucket_bytes, mode, codec_name, rules, p):
     return total
 
 
+def _hier_allreduce(group_size):
+    """Flat xla allreduce (group_size None) or the two-level hier one."""
+    transport = (
+        "xla" if group_size is None else HierTransport(group_size=group_size)
+    )
+
+    def f(x):
+        comm = Communicator("x", transport=transport)
+        return comm.allreduce(send_buf(x), op_param(operator.add))
+
+    return f
+
+
+def run_group_size_leg(time_fn, smoke):
+    """Flat vs hand-pinned hier group sizes vs the fitted autotune pick
+    (DESIGN.md §14): same row schema as the bucket-grid legs, with
+    ``group_size`` carrying the hier split (None = flat)."""
+    rows = []
+    model = CostModel.fit()
+    sizes = SMOKE_HIER_PAYLOAD_BYTES if smoke else HIER_PAYLOAD_BYTES
+    for nbytes in sizes:
+        x = np.random.RandomState(0).randn(
+            P_RANKS, nbytes // 4
+        ).astype(np.float32)
+        best_us = None
+        for g in (None,) + HIER_GROUPS:
+            us = time_fn(spmd(_hier_allreduce(g)), x) * 1e6
+            csv_row(f"planner_group_hand_{nbytes}b", us,
+                    f"group_size={g};transport={'xla' if g is None else 'hier'}")
+            rows.append({
+                "payload": f"hier-{nbytes}b", "p": P_RANKS,
+                "grad_bytes": nbytes, "codec": None, "strategy": "hand",
+                "transport": "xla" if g is None else "hier",
+                "mode": "allreduce", "bucket_bytes": None,
+                "max_inflight": None, "n_rules": 0, "us": us,
+                "wire_bytes_per_rank": None, "auto_vs_hand": None,
+                "group_size": g,
+            })
+            if best_us is None or us < best_us:
+                best_us = us
+        g_auto = model.autotune_group_size(float(nbytes), P_RANKS)
+        us = time_fn(spmd(_hier_allreduce(g_auto)), x) * 1e6
+        ratio = us / best_us
+        csv_row(f"planner_group_auto_{nbytes}b", us,
+                f"group_size={g_auto};auto_vs_hand={ratio:.3f}")
+        rows.append({
+            "payload": f"hier-{nbytes}b", "p": P_RANKS,
+            "grad_bytes": nbytes, "codec": None, "strategy": "auto",
+            "transport": "xla" if g_auto is None else "hier",
+            "mode": "allreduce", "bucket_bytes": None,
+            "max_inflight": None, "n_rules": 0, "us": us,
+            "wire_bytes_per_rank": None, "auto_vs_hand": ratio,
+            "group_size": g_auto,
+        })
+    return rows
+
+
 def run(smoke: bool = False, out: str | None = None):
     time_fn = make_timer(smoke)
     payloads = SMOKE_PAYLOADS if smoke else PAYLOADS
@@ -152,6 +224,7 @@ def run(smoke: bool = False, out: str | None = None):
                             "n_rules": 0, "us": us,
                             "wire_bytes_per_rank": wire,
                             "auto_vs_hand": None,
+                            "group_size": None,
                         })
                         if best_us is None or us < best_us:
                             best_us, best_cell = us, (t, mode, bb)
@@ -183,7 +256,9 @@ def run(smoke: bool = False, out: str | None = None):
                 "n_rules": len(plan.rules), "us": us,
                 "wire_bytes_per_rank": wire,
                 "auto_vs_hand": ratio,
+                "group_size": plan.group_size,
             })
+    rows.extend(run_group_size_leg(time_fn, smoke))
     out_path = out or os.path.join(
         os.path.dirname(__file__), "artifacts", "planner.json"
     )

@@ -89,11 +89,17 @@ class HierTransport(Transport):
 
     def __init__(
         self,
-        group_size: Optional[int] = None,
+        group_size: Optional[Union[int, str]] = None,
         intra: Union[str, Transport] = "xla",
         inter: Union[str, Transport] = "xla",
     ):
-        self.group_size = None if group_size is None else int(group_size)
+        if group_size == "auto":
+            # Resolved per primitive call from the fitted cost model's
+            # hierarchy curves (payload-dependent, DESIGN.md §14);
+            # default_group_size(p) when nothing hier was measured.
+            self.group_size = "auto"
+        else:
+            self.group_size = None if group_size is None else int(group_size)
         self.intra = intra
         self.inter = inter
 
@@ -105,13 +111,20 @@ class HierTransport(Transport):
         )
 
     # -- level construction -------------------------------------------------
-    def _levels(self, comm):
+    def _levels(self, comm, nbytes: Optional[int] = None):
         """Resolve (intra_comm, inter_comm, T_intra, T_inter, g, nb), or a
         degenerate single-level delegation ``(flat_backend, comm)``."""
         p = comm.size()
-        g = self.group_size if self.group_size is not None else (
-            default_group_size(p)
-        )
+        if self.group_size == "auto":
+            from .planner import CostModel
+
+            g = CostModel.fit().autotune_group_size(
+                float(nbytes or 0), p
+            ) or default_group_size(p)
+        elif self.group_size is not None:
+            g = self.group_size
+        else:
+            g = default_group_size(p)
         if g <= 0 or p % g:
             raise KampingError(
                 f"transport('hier'): group_size={g} must be a positive "
@@ -133,11 +146,11 @@ class HierTransport(Transport):
 
     # -- primitives ----------------------------------------------------------
     def all_gather(self, comm, x, *, tiled: bool = True):
-        flat, lv = self._levels(comm)
+        x = jnp.asarray(x)
+        flat, lv = self._levels(comm, x.nbytes)
         if flat is not None:
             return flat.all_gather(comm, x, tiled=tiled)
         intra, inter, ti, te, g, nb = lv
-        x = jnp.asarray(x)
         a1 = ti.all_gather(intra, x, tiled=False)        # (g, ...)
         a2 = te.all_gather(inter, a1, tiled=False)       # (nb, g, ...)
         out = a2.reshape((nb * g,) + tuple(x.shape))     # comm-rank order
@@ -146,11 +159,11 @@ class HierTransport(Transport):
         return out
 
     def all_to_all(self, comm, x):
-        flat, lv = self._levels(comm)
+        x = jnp.asarray(x)
+        flat, lv = self._levels(comm, x.nbytes)
         if flat is not None:
             return flat.all_to_all(comm, x)
         intra, inter, ti, te, g, nb = lv
-        x = jnp.asarray(x)
         p = nb * g
         if x.shape[0] != p:
             raise KampingError(
@@ -170,11 +183,11 @@ class HierTransport(Transport):
         return a2.reshape((p,) + rest)
 
     def reduce_scatter_sum(self, comm, x):
-        flat, lv = self._levels(comm)
+        x = jnp.asarray(x)
+        flat, lv = self._levels(comm, x.nbytes)
         if flat is not None:
             return flat.reduce_scatter_sum(comm, x)
         intra, inter, ti, te, g, nb = lv
-        x = jnp.asarray(x)
         p = nb * g
         if x.shape[0] != p:
             raise KampingError(
@@ -188,11 +201,11 @@ class HierTransport(Transport):
         return te.reduce_scatter_sum(inter, s1)          # my slot, fully summed
 
     def allreduce_sum(self, comm, x):
-        flat, lv = self._levels(comm)
+        x = jnp.asarray(x)
+        flat, lv = self._levels(comm, x.nbytes)
         if flat is not None:
             return flat.allreduce_sum(comm, x)
         intra, inter, ti, te, g, nb = lv
-        x = jnp.asarray(x)
         shape, dtype = x.shape, x.dtype
         flat_x = x.reshape(-1)
         n = flat_x.shape[0]

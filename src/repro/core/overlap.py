@@ -644,6 +644,14 @@ def _planned_reduce(comm, leaves, shapes, treedef, err_leaves, plan, *,
     transport = rplan.transport
     if getattr(comm, "transport_name", None) is not None:
         transport = None
+    elif transport == "hier" and rplan.group_size:
+        # A group-size-autotuned plan (CostModel.autotune_reduction with
+        # group_sizes=..., DESIGN.md §14) carries the hier split width;
+        # build the matching configured instance rather than the
+        # registered default (which re-derives sqrt-ish splits).
+        from .hier import HierTransport
+
+        transport = HierTransport(group_size=rplan.group_size)
 
     bplan = plan_buckets(leaves, bucket_bytes)
     prog = _build_schedule(

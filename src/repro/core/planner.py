@@ -52,6 +52,7 @@ __all__ = [
     "reorder_independent",
     "merge_buckets",
     "hoist_scale_exchange",
+    "merge_liveness",
     "resolve_plan",
     "plan_call_transport",
 ]
@@ -78,6 +79,7 @@ class Plan:
     max_inflight: Optional[int] = None
     rules: Tuple[str, ...] = ()
     source: str = "manual"               # "manual" | "auto" | "none"
+    group_size: Optional[int] = None     # hier two-level split (DESIGN.md §9)
 
     def __post_init__(self):
         for r in self.rules:
@@ -108,6 +110,7 @@ class Plan:
                 ("bucket_bytes", self.bucket_bytes),
                 ("mode", self.mode),
                 ("max_inflight", self.max_inflight),
+                ("group_size", self.group_size),
             )
             if v is not None
         ]
@@ -342,20 +345,90 @@ def hoist_scale_exchange(prog: Program, ctx: Optional[dict] = None) -> Program:
     return Program(new_ops).validate()
 
 
+def merge_liveness(prog: Program, ctx: Optional[dict] = None) -> Program:
+    """Merge a grouped + flat integer-sum allreduce pair over equal
+    scalar payloads into a single flat allgather — the serve decode
+    island's liveness exchange (DESIGN.md §14): the per-pool count is the
+    sum of the pool's slice of the gathered per-rank vector, the global
+    count the sum of all of it, so one wire exchange replaces two.
+
+    Legality (bitwise): integer addition is exact, associative and
+    commutative — every summation order of the gathered int counts
+    produces the identical result, and the grouped/global sums are plain
+    reassociations of the same addend set.  The rule fires only on a
+    dependency-free, consumer-less pair of integer ``op=add`` allreduces
+    of identical shape/dtype where exactly one carries a ``groups``
+    binding.  Overlap schedule programs never contain grouped nodes, so
+    the rule is a structural no-op on every training schedule (the
+    property suite draws it against those and must see identity).
+    """
+    cand_g = cand_f = None
+    for o in prog:
+        if (
+            o.op != "allreduce"
+            or o.deps
+            or prog.consumers(o.idx)
+            or o.param("op") != "add"
+            or not o.dtype.startswith("int")
+        ):
+            continue
+        if o.param("groups") is not None:
+            cand_g = cand_g if cand_g is not None else o
+        else:
+            cand_f = cand_f if cand_f is not None else o
+    if cand_g is None or cand_f is None:
+        return prog
+    if cand_g.shape != cand_f.shape or cand_g.dtype != cand_f.dtype:
+        return prog
+    p = int(cand_f.param("p", "1"))
+    params = [("p", str(p))]
+    if cand_f.param("transport") is not None:
+        params.append(("transport", cand_f.param("transport")))
+    merged = IROp(
+        idx=0,
+        op="allgather",
+        shape=(p,) + tuple(cand_f.shape),
+        dtype=cand_f.dtype,
+        params=tuple(sorted(params)),
+        label="liveness",
+        meta={
+            "liveness": True,
+            "groups": int(cand_g.param("groups", "1")),
+            "group_p": int(cand_g.param("p", "1")),
+        },
+    )
+    first = min(cand_g.idx, cand_f.idx)
+    dropped = {cand_g.idx, cand_f.idx}
+    new_ops: List[IROp] = []
+    remap: Dict[int, int] = {}
+    for o in prog:
+        if o.idx in dropped:
+            if o.idx == first:
+                remap[cand_g.idx] = remap[cand_f.idx] = len(new_ops)
+                new_ops.append(dataclasses.replace(merged, idx=len(new_ops)))
+            continue
+        remap[o.idx] = len(new_ops)
+        new_ops.append(o)
+    return _renumber(new_ops, remap)
+
+
 REWRITE_RULES = {
     "fuse_rs_ag": fuse_rs_ag,
     "reorder_independent": reorder_independent,
     "merge_buckets": merge_buckets,
     "hoist_scale_exchange": hoist_scale_exchange,
+    "merge_liveness": merge_liveness,
 }
 
 ALL_RULES: Tuple[str, ...] = tuple(REWRITE_RULES)
 
-# Canonical application order: structural fusions first (fuse, merge),
-# then the scale hoist (it must see the post-fusion compressed node
-# set), then the schedule reorder (positions are only meaningful once
-# the node set is final).
+# Canonical application order: structural fusions first (fuse, merge —
+# liveness merges are disjoint from bucket fusions and may run with
+# them), then the scale hoist (it must see the post-fusion compressed
+# node set), then the schedule reorder (positions are only meaningful
+# once the node set is final).
 _CANONICAL_ORDER = (
+    "merge_liveness",
     "fuse_rs_ag",
     "merge_buckets",
     "hoist_scale_exchange",
@@ -452,7 +525,7 @@ class CostModel:
     _BETA_US_PER_BYTE = 1.5e-3
 
     def __init__(self, transport_rows=(), compression_rows=(),
-                 overlap_rows=()):
+                 overlap_rows=(), hierarchy_rows=(), serve_rows=()):
         self._coll: Dict[Tuple[str, str], List[Tuple[float, float]]] = {}
         for r in transport_rows:
             if r.get("level") != "spmd":
@@ -474,6 +547,21 @@ class CostModel:
             pts.sort()
         self._overlap = [dict(r) for r in overlap_rows
                          if r.get("strategy") == "overlap"]
+        # hierarchy sweep: allreduce us-vs-bytes curves per hier group
+        # size (None = the flat schedule measured in the same sweep)
+        self._hier: Dict[Optional[int], List[Tuple[float, float]]] = {}
+        for r in hierarchy_rows:
+            if r.get("op") != "allreduce":
+                continue
+            g = r.get("group_size")
+            self._hier.setdefault(
+                None if not g else int(g), []
+            ).append((float(r["payload_bytes"]), float(r["us"])))
+        for pts in self._hier.values():
+            pts.sort()
+        # serve sweep: decode throughput per (replicas, shards, slots)
+        self._serve = [dict(r) for r in serve_rows
+                       if r.get("decode_tok_per_s")]
 
     # -- fitting ------------------------------------------------------------
     _fitted_cache: Dict[str, "CostModel"] = {}
@@ -502,6 +590,8 @@ class CostModel:
             transport_rows=load("transports.json"),
             compression_rows=load("compression.json"),
             overlap_rows=load("overlap.json"),
+            hierarchy_rows=load("hierarchy.json"),
+            serve_rows=load("serve.json"),
         )
         cls._fitted_cache[d] = model
         return model
@@ -549,6 +639,58 @@ class CostModel:
             return None
         return min(cands, key=lambda t: self.collective_us(op, t, nbytes))
 
+    # -- group-size autotuning (DESIGN.md §14) -------------------------------
+    def hier_allreduce_us(self, nbytes: float,
+                          group_size: Optional[int] = None) -> Optional[float]:
+        """Interpolated allreduce time from the hierarchy sweep for one
+        hier ``group_size`` (None = the sweep's flat schedule), or None
+        when that schedule was never measured."""
+        pts = self._hier.get(group_size)
+        if not pts:
+            return None
+        return _interp_loglog(pts, nbytes)
+
+    def hier_group_candidates(self, p: int) -> Tuple[int, ...]:
+        """Measured hier group sizes that split a size-``p`` communicator
+        non-degenerately (1 < g < p, g | p)."""
+        return tuple(sorted(
+            g for g in self._hier if g and 1 < g < p and p % g == 0
+        ))
+
+    def autotune_group_size(self, nbytes: float, p: int) -> Optional[int]:
+        """Cheapest hier ``group_size`` for an allreduce of ``nbytes`` at
+        communicator size ``p``, from the fitted hierarchy curves; None
+        when the flat schedule wins (or nothing hier was measured)."""
+        flat = self.hier_allreduce_us(nbytes, None)
+        if flat is None:
+            flat = self.collective_us("allreduce", "xla", nbytes)
+        best_g, best_us = None, flat
+        for g in self.hier_group_candidates(p):
+            us = self.hier_allreduce_us(nbytes, g)
+            if us is not None and us < best_us:
+                best_g, best_us = g, us
+        return best_g
+
+    def autotune_serve_shards(self, num_replicas: int,
+                              num_slots: int) -> int:
+        """Serve-pool sharding (``ServeEngine(replica_shards="auto")``):
+        the measured serve sweep's best per-rank decode throughput among
+        shard counts that divide ``num_slots`` evenly.  Defaults to 1 on
+        a fresh checkout (no serve artifact)."""
+        per_rank: Dict[int, float] = {}
+        for r in self._serve:
+            s = int(r.get("shards") or 1)
+            ranks = max(1, int(r.get("replicas") or 1) * s)
+            tok = float(r["decode_tok_per_s"]) / ranks
+            per_rank[s] = max(per_rank.get(s, 0.0), tok)
+        best, best_tok = 1, -1.0
+        for s in sorted(per_rank):
+            if num_slots % s:
+                continue
+            if per_rank[s] > best_tok:
+                best, best_tok = s, per_rank[s]
+        return best
+
     # -- whole-reduction estimates ------------------------------------------
     def reduction_us(self, total_bytes: int, p: int, *, transport: str,
                      mode: str, bucket_bytes: int,
@@ -589,10 +731,19 @@ class CostModel:
         modes: Sequence[str] = ("allreduce", "reduce_scatter"),
         bucket_candidates: Optional[Sequence[int]] = None,
         inflight_candidates: Sequence[Optional[int]] = (1, 2, 4),
+        group_sizes: Optional[Any] = None,
     ) -> Plan:
         """Sweep the knob grid, return the cheapest :class:`Plan` (with
         every rewrite rule enabled — rules are bitwise-neutral, so they
-        are always safe to turn on)."""
+        are always safe to turn on).
+
+        ``group_sizes`` opts the hier two-level transport into the sweep
+        (DESIGN.md §14): ``"auto"`` tries every measured group size that
+        splits ``p`` non-degenerately, a sequence restricts the
+        candidates, ``None`` (default) keeps the flat-transport-only
+        grid.  A winning hier cell yields ``Plan(transport="hier",
+        group_size=g)``; the overlap engine then builds the matching
+        :class:`~repro.core.hier.HierTransport` instance."""
         if transports is None:
             transports = self.measured_transports("allreduce")
         if bucket_candidates is None:
@@ -605,7 +756,7 @@ class CostModel:
         bucket_candidates = [
             b for b in bucket_candidates if b < 4 * max(total_bytes, 1)
         ] or [max(total_bytes, 1)]
-        best, best_us = None, float("inf")
+        best, best_us, best_g = None, float("inf"), None
         for t in transports:
             for m in modes:
                 for b in bucket_candidates:
@@ -617,6 +768,30 @@ class CostModel:
                         if us < best_us:
                             best_us = us
                             best = (t, m, b, fl)
+        if group_sizes:
+            gs = (
+                self.hier_group_candidates(p) if group_sizes == "auto"
+                else tuple(
+                    g for g in group_sizes if 1 < g < p and p % g == 0
+                )
+            )
+            for g in gs:
+                for b in bucket_candidates:
+                    per = self.hier_allreduce_us(min(b, total_bytes), g)
+                    if per is None:
+                        continue
+                    nb = max(1, math.ceil(total_bytes / b))
+                    for fl in inflight_candidates:
+                        width = min(fl or nb, nb)
+                        us = nb * per / (1.0 + 0.5 * (width - 1))
+                        if codec is not None:
+                            us *= self.codec_ratio(
+                                codec, min(b, total_bytes)
+                            )
+                        if us < best_us:
+                            best_us = us
+                            best = ("hier", "allreduce", b, fl)
+                            best_g = g
         t, m, b, fl = best
         return Plan(
             transport=t,
@@ -626,6 +801,7 @@ class CostModel:
             max_inflight=fl,
             rules=ALL_RULES,
             source="auto",
+            group_size=best_g if t == "hier" else None,
         )
 
 

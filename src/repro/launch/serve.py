@@ -34,10 +34,22 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel replicas (each with its own pool)")
-    ap.add_argument("--shards", type=int, default=1,
-                    help="serve ranks per replica (slot pool sharding)")
+    ap.add_argument("--shards", default="1",
+                    help="serve ranks per replica (slot pool sharding); "
+                         "'auto' picks from the fitted serve sweep")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense")
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="rows per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size per rank (paged layout; default "
+                         "is capacity parity with dense)")
+    ap.add_argument("--plan", choices=("none", "auto"), default="none",
+                    help="'auto' routes the decode liveness exchange "
+                         "through the planner's rewrite rules")
     ap.add_argument("--max-steps", type=int, default=10_000)
     args = ap.parse_args(argv)
+    shards = args.shards if args.shards == "auto" else int(args.shards)
 
     import jax
     import numpy as np
@@ -50,7 +62,10 @@ def main(argv=None):
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, params, max_len=args.max_len,
                          num_slots=args.slots, num_replicas=args.replicas,
-                         replica_shards=args.shards)
+                         replica_shards=shards,
+                         kv_layout=args.kv_layout, page_size=args.page_size,
+                         num_pages=args.num_pages,
+                         plan=None if args.plan == "none" else args.plan)
 
     rng = np.random.RandomState(0)
 
@@ -82,11 +97,17 @@ def main(argv=None):
     decode_tokens = engine.counters["decode_tokens"]
     prefill_tokens = engine.counters["prefill_tokens"]
     steps = engine.counters["steps"]
-    print(f"arch={cfg.name} replicas={args.replicas} shards={args.shards} "
-          f"slots={args.slots}: served {len(done)}/{len(reqs)} requests in "
+    print(f"arch={cfg.name} replicas={args.replicas} "
+          f"shards={engine.replica_shards} slots={args.slots} "
+          f"layout={args.kv_layout} plan={args.plan}: served "
+          f"{len(done)}/{len(reqs)} requests in "
           f"{dt:.2f}s over {steps} engine steps")
     print(f"  decode: {decode_tokens} tokens -> {decode_tokens/dt:.1f} tok/s "
           f"(prefill echo: {prefill_tokens} tokens, excluded)")
+    if engine.paged:
+        print(f"  pages: peak={engine.counters['pages_in_use_peak']}"
+              f"/{engine.num_pages - 1} "
+              f"deferrals={engine.counters['admission_deferrals']}")
     print("  phase seconds: " + ", ".join(
         f"{k}={v:.3f}" for k, v in engine.phase_seconds.items()))
     for r in done[:3]:

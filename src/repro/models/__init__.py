@@ -5,16 +5,20 @@ from .transformer import (
     Runtime,
     block_pattern,
     decode_step,
+    decode_step_paged,
     forward_train,
     init_decode_caches,
+    init_paged_caches,
     init_params,
     loss_and_metrics,
     prefill,
     supports_padded_prefill,
+    supports_paged_decode,
 )
 
 __all__ = [
     "ModelConfig", "Model", "Runtime", "block_pattern", "decode_step",
-    "forward_train", "init_decode_caches", "init_params",
-    "loss_and_metrics", "prefill", "supports_padded_prefill",
+    "decode_step_paged", "forward_train", "init_decode_caches",
+    "init_paged_caches", "init_params", "loss_and_metrics", "prefill",
+    "supports_padded_prefill", "supports_paged_decode",
 ]

@@ -546,6 +546,77 @@ def supports_padded_prefill(cfg, seq_len, max_len=None):
     return all(_cache_len(cfg, k, max_len) >= seq_len for k in kinds)
 
 
+def supports_paged_decode(cfg, max_len, page_size):
+    """True when the paged KV layout is *exact* for this config.
+
+    The paged decode cache (DESIGN.md §14) stores KV in a shared page
+    pool indexed through per-slot block tables instead of per-slot
+    ``max_len`` rows.  It reproduces the dense cache bitwise exactly
+    when (a) every block is plain causal attention (recurrent state and
+    cross-attention KV are not paged), (b) no KV window is shorter than
+    ``max_len`` (the dense ring never wraps, so cache row ``s`` always
+    holds absolute position ``s``), and (c) ``page_size`` is a positive
+    power of two dividing ``max_len`` (pages tile the row space).
+    Unlike the dense ring the paged layout does not wrap past
+    ``max_len`` — callers must bound ``prompt + new_tokens - 1`` by it.
+    """
+    kinds = set(block_pattern(cfg))
+    if cfg.is_encoder_decoder or not kinds <= {"attn_mlp", "attn_local", "moe"}:
+        return False
+    if page_size < 1 or page_size & (page_size - 1) or max_len % page_size:
+        return False
+    return all(_cache_len(cfg, k, max_len) == max_len for k in kinds)
+
+
+def init_paged_caches(cfg, batch, num_pages, page_size, max_len):
+    """Paged decode cache: shared page pools + per-slot block tables.
+
+    Each attention cache leaf is one pool of shape
+    ``(num_pages, page_size, KV, D)`` shared by every slot; the slot →
+    page mapping lives in ``caches["block_tables"]`` of shape
+    ``(batch, max_len // page_size)``.  Physical page 0 is the **null
+    page**: never allocated, it absorbs the fixed-shape decode's writes
+    from dead slots and unfilled table entries — those rows are always
+    masked at read (``qpos < 0`` or ``qpos > pos``), so their contents
+    are bitwise-invisible.
+    """
+    if not supports_paged_decode(cfg, max_len, page_size):
+        raise ValueError(
+            f"init_paged_caches: the paged KV layout is not exact for "
+            f"config {cfg.name!r} at max_len={max_len}, "
+            f"page_size={page_size} (recurrent/cross blocks, a KV window "
+            f"shorter than max_len, or a page size that does not tile "
+            f"max_len — see supports_paged_decode)"
+        )
+    pattern = block_pattern(cfg)
+    n_units, rem = divmod(cfg.num_layers, len(pattern))
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one():
+        return {
+            "k": jnp.zeros(
+                (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim), dtype
+            ),
+            "v": jnp.zeros(
+                (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim), dtype
+            ),
+        }
+
+    def stack():
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_units,) + a.shape), one()
+        )
+
+    return {
+        "units": [stack() for _ in pattern],
+        "rem": [one() for _ in range(rem)],
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "block_tables": jnp.zeros(
+            (batch, max_len // page_size), jnp.int32
+        ),
+    }
+
+
 def _init_block_cache(cfg, kind, batch, max_len, dtype):
     kv = lambda L: {
         "k": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
@@ -772,6 +843,134 @@ def _decode_attention_sp(q, k_cache, v_cache, pos, L, window, runtime):
         out_specs=P(),
         check_vma=False,
     )(q, k_cache, v_cache, pos)
+
+
+def _attn_decode_paged(p, x, cfg, cache, bt, pos, window):
+    """Decode attention against a shared page pool via block-table gather.
+
+    ``cache["k"]/["v"]`` are ``(num_pages, page_size, KV, D)`` pools and
+    ``bt`` a ``(B, max_len // page_size)`` int32 block table.  The new
+    token's KV is scattered into physical page ``bt[b, pos // ps]`` at
+    offset ``pos % ps``; the gather ``pool[bt]`` then reconstructs a
+    ``(B, max_len, KV, D)`` view that is value-identical to the dense
+    linear cache at every unmasked row, so the shared
+    :func:`_decode_attention_abs` math produces bitwise-identical
+    outputs (masked rows score exactly ``-inf`` → softmax weight exactly
+    ``0.0``; pool contents are always finite).  Dead slots (block table
+    row all zeros) write harmlessly into the null page.
+    """
+    from .layers import apply_rotary, make_rotary
+
+    B = x.shape[0]
+    _, ps, KV, D = cache["k"].shape
+    n_pages = bt.shape[1]
+    L = n_pages * ps
+    q = dense(p["wq"], x).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    k = dense(p["wk"], x).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    positions = (
+        jnp.broadcast_to(jnp.asarray(pos), (B,))
+        if jnp.ndim(pos) == 0
+        else pos
+    )
+    cos, sin = make_rotary(positions[:, None], cfg.head_dim, cfg.rope_theta)
+    qr = apply_rotary(q, cos, sin)
+    kr = apply_rotary(k, cos, sin)
+    page = jnp.clip(positions // ps, 0, n_pages - 1)
+    off = positions % ps
+    phys = jnp.take_along_axis(bt, page[:, None], axis=1)[:, 0]
+    k_pool = cache["k"].at[phys, off].set(kr[:, 0].astype(cache["k"].dtype))
+    v_pool = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+    k_cache = k_pool[bt.reshape(-1)].reshape(B, L, KV, D)
+    v_cache = v_pool[bt.reshape(-1)].reshape(B, L, KV, D)
+    s_idx = jnp.arange(L)
+    qpos = positions[:, None] - ((positions[:, None] - s_idx[None, :]) % L)
+    out = _decode_attention_abs(qr, k_cache, v_cache, qpos, positions, window)
+    return dense(p["wo"], out.reshape(B, 1, cfg.q_dim)), {
+        "k": k_pool,
+        "v": v_pool,
+    }
+
+
+def _block_decode_paged(p, x, kind, cfg, cache, bt, pos, runtime):
+    """One-token paged decode for an attention block (mirrors
+    :func:`_block_decode`, same residual/norm/FFN math)."""
+    if kind not in ("attn_mlp", "attn_local", "moe"):
+        raise ValueError(
+            f"paged decode does not support block kind {kind!r} "
+            "(see supports_paged_decode)"
+        )
+    window = _attn_window(cfg, kind if kind != "moe" else "attn_mlp")
+    if kind == "moe":
+        window = cfg.sliding_window
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, new_cache = _attn_decode_paged(p["attn"], h, cfg, cache, bt, pos,
+                                        window)
+    x = x + out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        out, _ = _moe_apply(p["moe"], h, cfg, runtime)
+        x = x + out
+    else:
+        x = x + gated_mlp(p["mlp"], h, cfg.act)
+    return x, new_cache
+
+
+def decode_step_paged(params, caches, tokens, cfg,
+                      runtime: Runtime = Runtime()):
+    """One decode step over paged caches (see :func:`init_paged_caches`).
+
+    Same contract as :func:`decode_step` — ``tokens: (B,) int32 ->
+    (logits (B,1,V), new caches)`` — with ``caches["block_tables"]``
+    routing each slot's reads/writes into the shared page pools.  The
+    block table is host-managed state: it passes through unchanged.
+    """
+    pattern = block_pattern(cfg)
+    caches = {**caches, "units": list(caches["units"]),
+              "rem": list(caches["rem"])}
+    pos = caches["pos"]
+    bt = caches["block_tables"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+
+    n_units, rem = divmod(cfg.num_layers, len(pattern))
+    ush = runtime.use_shardings or {}
+
+    def unit_fn(x, inp):
+        unit_params, unit_caches = inp
+        if ush.get("units") is not None:
+            unit_params = jax.lax.with_sharding_constraint(
+                unit_params, tuple(ush["units"])
+            )
+        new_caches = []
+        for kind, p, c in zip(pattern, unit_params, unit_caches):
+            x, nc = _block_decode_paged(p, x, kind, cfg, c, bt, pos, runtime)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if n_units > 0:
+        xs = (tuple(params["units"]), tuple(caches["units"]))
+        if cfg.scan_layers and n_units > 1:
+            x, new_unit_caches = jax.lax.scan(unit_fn, x, xs)
+            caches["units"] = list(new_unit_caches)
+        else:
+            outs = []
+            for i in range(n_units):
+                sl = jax.tree.map(lambda a: a[i], xs)
+                x, nc = unit_fn(x, sl)
+                outs.append(nc)
+            caches["units"] = list(
+                jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+            )
+    for i in range(rem):
+        x, nc = _block_decode_paged(
+            params["rem"][i], x, pattern[i], cfg, caches["rem"][i], bt, pos,
+            runtime,
+        )
+        caches["rem"][i] = nc
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg, runtime)
+    caches["pos"] = pos + 1
+    return logits, caches
 
 
 def prefill(params, batch, cfg, runtime: Runtime = Runtime(), max_len=None,

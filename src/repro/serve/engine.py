@@ -31,6 +31,22 @@ production-honest form, rebuilt on the op-spec machinery:
   ``replica_shards > 1`` a replica's slot pool is itself sharded over
   several serve ranks and the grouped reduction genuinely combines.
 
+* **Paged KV cache** (``kv_layout="paged"``, DESIGN.md §14) — instead of
+  dense per-slot ``max_len`` rows, each rank owns a shared page pool
+  (``num_pages`` pages of ``page_size`` rows; page 0 is the reserved
+  null page) and per-slot block tables route reads/writes
+  (:func:`~repro.models.decode_step_paged`).  Admission reserves a
+  request's worst-case page need and *defers* (rather than erroring)
+  while the pool is transiently full; physical pages are allocated
+  lazily as positions fill and reclaimed when the slot is reaped.
+  Decode output is bitwise-identical to the dense layout on the same
+  admission schedule — the differential suite pins it.
+* **Planner-routed liveness** (``plan="auto"``) — the decode island's
+  liveness exchange is staged as a §13 IR program and rewritten by the
+  planner before compilation: ``merge_liveness`` collapses the grouped +
+  flat integer allreduce pair into one flat allgather (bitwise-legal —
+  integer addition is exact), halving the island's wire exchanges.
+
 Per-step phase timings (``admit`` / ``prefill`` / ``decode`` / ``reap``)
 are accumulated in :attr:`ServeEngine.phase_seconds` and feed
 ``benchmarks/bench_serve.py``.
@@ -55,13 +71,18 @@ from repro.core import (
     op as op_param,
     send_buf,
 )
+from repro.core.ir import IROp, Program
+from repro.core.planner import ALL_RULES, CostModel, Plan, apply_rules
 from repro.models import (
     Runtime,
     block_pattern,
     decode_step,
+    decode_step_paged,
     init_decode_caches,
+    init_paged_caches,
     prefill,
     supports_padded_prefill,
+    supports_paged_decode,
 )
 
 __all__ = ["ServeEngine", "Request", "REPLICA_AXIS"]
@@ -135,18 +156,51 @@ class ServeEngine:
         over this many ranks of the ``"serve"`` axis (``num_slots`` must
         divide evenly).  The per-pool liveness reduction then combines
         across a real group (``Communicator.split_by(block=replica_shards)``).
+        ``"auto"`` picks the shard count with the best measured per-rank
+        decode throughput from the fitted serve sweep
+        (:meth:`~repro.core.planner.CostModel.autotune_serve_shards`).
     prompt_buckets:
         Pad prompts to power-of-two buckets when exact for this config
         (see module docstring); ``False`` forces exact-length prefill.
+    kv_layout:
+        ``"dense"`` (per-slot ``max_len`` rows, the default) or
+        ``"paged"`` (shared page pool + block tables; requires
+        :func:`~repro.models.supports_paged_decode` and ``mesh=None``).
+    page_size:
+        Rows per page under the paged layout — a power of two dividing
+        ``max_len``.
+    num_pages:
+        Page-pool size per rank (including the null page 0).  Default is
+        capacity parity with dense: ``slots_per_rank * (max_len //
+        page_size) + 1``.  Smaller pools oversubscribe: admission defers
+        while the pool is transiently full.
+    plan:
+        ``None`` (liveness exchange as staged), ``"auto"`` (rewrite the
+        staged liveness program with every planner rule — see module
+        docstring), or a :class:`~repro.core.Plan` whose ``rules`` apply.
     """
 
     def __init__(self, cfg, params, max_len: int, num_slots: int,
                  runtime: Runtime = Runtime(), greedy: bool = True,
                  num_replicas: int = 1, replica_shards: int = 1,
-                 prompt_buckets: bool = True):
+                 prompt_buckets: bool = True, kv_layout: str = "dense",
+                 page_size: int = 4, num_pages: Optional[int] = None,
+                 plan=None):
         if not greedy:
             raise KampingError("ServeEngine: only greedy decoding is "
                                "implemented (greedy=True)")
+        if kv_layout not in ("dense", "paged"):
+            raise KampingError(
+                f"ServeEngine: kv_layout={kv_layout!r}; expected 'dense' "
+                "or 'paged'"
+            )
+        if replica_shards == "auto":
+            # Group-size autotuning for the serve pool (DESIGN.md §14):
+            # the fitted serve sweep picks the shard count with the best
+            # per-rank decode throughput among even slot splits.
+            replica_shards = CostModel.fit().autotune_serve_shards(
+                num_replicas, num_slots
+            )
         if num_replicas < 1 or replica_shards < 1:
             raise KampingError(
                 "ServeEngine: num_replicas and replica_shards must be >= 1; "
@@ -179,6 +233,42 @@ class ServeEngine:
             prompt_buckets and supports_padded_prefill(cfg, max_len, max_len)
         )
 
+        # -- paged KV layout (DESIGN.md §14) --------------------------------
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        if self.paged:
+            if runtime.mesh is not None:
+                raise KampingError(
+                    "ServeEngine: kv_layout='paged' composes with the "
+                    "emulated replica axis only (mesh=None); a device-mesh "
+                    "runtime serves the dense layout"
+                )
+            if not supports_paged_decode(cfg, max_len, page_size):
+                raise KampingError(
+                    f"ServeEngine: kv_layout='paged' is not exact for "
+                    f"config {cfg.name!r} at max_len={max_len}, "
+                    f"page_size={page_size} (recurrent/cross blocks, a KV "
+                    f"window shorter than max_len, or a page size that is "
+                    f"not a power of two tiling max_len — see "
+                    f"supports_paged_decode); use kv_layout='dense'"
+                )
+            self.page_size = int(page_size)
+            self.pages_per_slot = max_len // self.page_size
+            if num_pages is None:
+                # Capacity parity with dense by default: every slot can
+                # hold max_len live rows, plus the reserved null page.
+                num_pages = self.slots_per_rank * self.pages_per_slot + 1
+            if num_pages < 2:
+                raise KampingError(
+                    f"ServeEngine: num_pages={num_pages} must be >= 2 "
+                    "(page 0 is the reserved null page)"
+                )
+            self.num_pages = int(num_pages)
+        else:
+            self.page_size = None
+            self.pages_per_slot = None
+            self.num_pages = None
+
         # -- host-side pool state (rank-major layout) ----------------------
         N, S = self.num_ranks, self.slots_per_rank
         self.queues: List[List[Request]] = [[] for _ in range(num_replicas)]
@@ -197,15 +287,63 @@ class ServeEngine:
         self._pending_meta: List[Tuple[int, int, Request]] = []
         self._next_rid = 0
 
+        # -- paged host state: free lists, block tables, reservations -------
+        if self.paged:
+            # page 0 is the null page and never enters a free list
+            self._free: List[List[int]] = [
+                list(range(1, self.num_pages)) for _ in range(N)
+            ]
+            self.block_tables = np.zeros((N, S, self.pages_per_slot),
+                                         np.int32)
+            self.host_pos = np.zeros((N, S), np.int64)
+            # logical reservations not yet backed by a physical page:
+            # admission reserves the worst case (ceil((prompt + budget - 1)
+            # / page_size)) so decode can never hit an empty free list
+            # mid-run; physical pages are allocated lazily as positions
+            # actually fill, which is what pages_in_use() reports.
+            self._reserved = np.zeros((N,), np.int64)
+            self._slot_pages: Dict[Tuple[int, int], List[int]] = {}
+            self._slot_reserved: Dict[Tuple[int, int], int] = {}
+
         # -- device state ---------------------------------------------------
-        one = init_decode_caches(cfg, S, max_len)
+        one = (
+            init_paged_caches(cfg, S, self.num_pages, self.page_size, max_len)
+            if self.paged else init_decode_caches(cfg, S, max_len)
+        )
         self.caches = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (N,) + a.shape), one
         )
 
+        # -- planner hook (DESIGN.md §13/§14) -------------------------------
+        # The decode island's liveness exchange, staged as an IR Program
+        # and rewritten by the plan's rules before the island is compiled:
+        # merge_liveness turns the grouped + flat int allreduce pair into
+        # one flat allgather where bitwise-legal.
+        self.plan = plan
+        if plan is None:
+            rules: Tuple[str, ...] = ()
+        elif plan == "auto":
+            rules = ALL_RULES
+        elif isinstance(plan, Plan):
+            rules = plan.rules
+        else:
+            raise KampingError(
+                f"ServeEngine: plan={plan!r}; expected None, 'auto', or a "
+                "repro.core.Plan instance"
+            )
+        self.liveness_program = self._liveness_program()
+        self.planned_liveness = apply_rules(
+            self.liveness_program, rules, {"axis_size": self.num_ranks}
+        )
+        self._liveness_merged = any(
+            o.op == "allgather" for o in self.planned_liveness
+        )
+
         # -- staged programs ------------------------------------------------
         self._prefill = jax.jit(self._prefill_fn)
-        self._splice = jax.jit(self._splice_fn)
+        self._splice = jax.jit(
+            self._splice_paged_fn if self.paged else self._splice_fn
+        )
         self._decode = jax.jit(
             self._decode_island if runtime.mesh is None else self._decode_mesh
         )
@@ -214,14 +352,41 @@ class ServeEngine:
         self.phase_seconds = {"admit": 0.0, "prefill": 0.0, "decode": 0.0,
                               "reap": 0.0}
         self.counters = {"steps": 0, "prefills": 0, "decode_tokens": 0,
-                         "prefill_tokens": 0}
+                         "prefill_tokens": 0, "admission_deferrals": 0,
+                         "pages_in_use_peak": 0}
         self.last_stats: Dict[str, Any] = {}
 
     # -- staged programs ----------------------------------------------------
+    def _liveness_program(self) -> Program:
+        """The decode island's liveness exchange as a §13 IR Program: the
+        grouped per-pool allreduce + the flat global allreduce that
+        ``_decode_island`` issues each step (cf. the recorded golden in
+        tests/test_ir.py)."""
+        return Program([
+            IROp(idx=0, op="allreduce", shape=(), dtype="int32",
+                 params=(("groups", str(self.num_replicas)), ("op", "add"),
+                         ("p", str(self.replica_shards))),
+                 label="serve.pool_live"),
+            IROp(idx=1, op="allreduce", shape=(), dtype="int32",
+                 params=(("op", "add"), ("p", str(self.num_ranks))),
+                 label="serve.global_live"),
+        ]).validate()
+
     def _prefill_fn(self, p, toks, n):
-        """(1, bucket) padded prompt -> (prefill token (1,), row cache)."""
+        """(1, bucket) padded prompt -> (prefill token (1,), row cache).
+
+        Under the paged layout the row cache is built at the *bucket*
+        length (rounded up to a page multiple), not ``max_len`` — the
+        page-granular splice then copies only the pages the prompt
+        actually fills.  Exact because every paged config has window >=
+        max_len >= bucket (rows past the prompt stay masked)."""
+        if self.paged:
+            ps = self.page_size
+            cache_len = -(-toks.shape[1] // ps) * ps
+        else:
+            cache_len = self.max_len
         logits, pcache = prefill(
-            p, {"tokens": toks}, self.cfg, self.runtime, max_len=self.max_len,
+            p, {"tokens": toks}, self.cfg, self.runtime, max_len=cache_len,
             true_len=(n if self.pad_prompts else None),
         )
         tok = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
@@ -264,28 +429,82 @@ class ServeEngine:
             }
         return out
 
+    def _splice_paged_fn(self, caches, pcache, rank, slot, phys):
+        """Page-granular splice: scatter a prefill row cache into the
+        page pools at physical pages ``phys``.
+
+        ``phys`` is a ``(bucket // page_size,)`` traced int32 vector —
+        the slot's newly allocated pages in order, with any tail entries
+        past the prompt's last page routed to the null page 0 (their rows
+        are garbage-by-construction and stay masked until decode
+        overwrites them, exactly the dense padded-prefill argument).  One
+        compiled program per prefill bucket, as with the dense splice.
+        """
+        ps = self.page_size
+
+        def stk(d, s):  # stacked-unit leaves: d (N, n_units, P, ps, ...)
+            pages = s[:, 0].reshape(
+                (s.shape[0], -1, ps) + tuple(s.shape[3:])
+            )
+            row = jax.vmap(lambda du, su: du.at[phys].set(su))(
+                d[rank], pages
+            )
+            return d.at[rank].set(row)
+
+        def one(d, s):  # remainder-block leaves: d (N, P, ps, ...)
+            pages = s[0].reshape((-1, ps) + tuple(s.shape[2:]))
+            return d.at[rank].set(d[rank].at[phys].set(pages))
+
+        out = dict(caches)
+        out["units"] = [
+            jax.tree.map(stk, cu, pu)
+            for cu, pu in zip(caches["units"], pcache["units"])
+        ]
+        out["rem"] = [
+            jax.tree.map(one, cr, pr)
+            for cr, pr in zip(caches["rem"], pcache["rem"])
+        ]
+        out["pos"] = caches["pos"].at[rank, slot].set(pcache["pos"][0])
+        return out
+
     def _decode_island(self, p, caches, toks, live, rem):
         """One decode step for every rank of the ``"serve"`` axis.
 
         Each rank advances its slot shard by one token (a fixed-shape
-        batched ``decode_step``), then exchanges liveness through the
-        op-spec engine: the *grouped* allreduce (replica sets via
-        ``split_by(block=replica_shards)``, DESIGN.md §9) yields each
-        pool's post-reap live count, the flat allreduce the global one —
-        the numbers a multi-host router/termination loop consumes.
+        batched ``decode_step`` / ``decode_step_paged``), then exchanges
+        liveness through the op-spec engine as staged by the planned
+        liveness program (DESIGN.md §14): unplanned, the *grouped*
+        allreduce (replica sets via ``split_by(block=replica_shards)``,
+        DESIGN.md §9) yields each pool's post-reap live count and the
+        flat allreduce the global one; under a plan whose
+        ``merge_liveness`` rewrite fired, one flat allgather carries the
+        per-rank counts and both sums are taken locally — bitwise
+        identical (integer addition is exact) with one wire exchange
+        instead of two.
         """
         shards = self.replica_shards
+        step_fn = decode_step_paged if self.paged else decode_step
 
         def body(c, t, lv, rm):
-            logits, nc = decode_step(p, c, t, self.cfg, self.runtime)
+            logits, nc = step_fn(p, c, t, self.cfg, self.runtime)
             nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
             # live after this step's budget spend: rem > 1 pre-decrement
             still = (lv & (rm > 1)).sum().astype(jnp.int32)
             comm = Communicator(REPLICA_AXIS)
-            pool_live = comm.split_by(block=shards).allreduce(
-                send_buf(still), op_param(operator.add)
-            )
-            global_live = comm.allreduce(send_buf(still), op_param(operator.add))
+            if self._liveness_merged:
+                counts = comm.allgather(send_buf(still[None])).reshape(-1)
+                base = (comm.global_rank() // shards) * shards
+                pool_live = jax.lax.dynamic_slice(
+                    counts, (base,), (shards,)
+                ).sum().astype(jnp.int32)
+                global_live = counts.sum().astype(jnp.int32)
+            else:
+                pool_live = comm.split_by(block=shards).allreduce(
+                    send_buf(still), op_param(operator.add)
+                )
+                global_live = comm.allreduce(
+                    send_buf(still), op_param(operator.add)
+                )
             return nxt, nc, pool_live, global_live
 
         return jax.vmap(body, axis_name=REPLICA_AXIS)(caches, toks, live, rem)
@@ -304,7 +523,17 @@ class ServeEngine:
     # -- request management --------------------------------------------------
     def submit(self, req: Request, replica: Optional[int] = None):
         """Queue a request; ``replica=None`` routes to the least-loaded
-        replica (queue depth + occupied slots)."""
+        replica (queue depth + occupied slots).
+
+        Requests that can never be served raise here, at submission —
+        never mid-run: prompts exceeding the **per-slot capacity**
+        (``max_len``), and, under the paged layout, requests whose
+        worst-case page need exceeds the whole pool (**page-pool
+        exhaustion**, a distinct error).  A *transiently* full pool is
+        not an error at all: admission defers until reaped pages free
+        (see :meth:`_admit`).
+        """
+        self._validate(req)
         req.generated = []
         if req.rid < 0:
             req.rid = self._next_rid
@@ -331,25 +560,76 @@ class ServeEngine:
         """All queued (not yet admitted) requests, replica-major."""
         return [r for q in self.queues for r in q]
 
+    def _validate(self, req: Request):
+        """Split the two failure families (DESIGN.md §14): per-slot
+        capacity (``max_len``) vs page-pool exhaustion — and raise only
+        for *permanent* ones (a transiently full pool defers)."""
+        n = int(len(req.prompt))
+        if n < 1:
+            raise KampingError("ServeEngine: empty prompt")
+        if n > self.max_len:
+            raise KampingError(
+                f"ServeEngine: prompt length {n} exceeds the per-slot "
+                f"capacity max_len={self.max_len}"
+            )
+        if self.paged:
+            span = n + max(int(req.max_new_tokens), 1) - 1
+            if span > self.max_len:
+                raise KampingError(
+                    f"ServeEngine: prompt ({n}) + decode budget "
+                    f"({req.max_new_tokens}) spans {span} positions, "
+                    f"exceeding the per-slot capacity max_len="
+                    f"{self.max_len} (the paged layout does not "
+                    "ring-wrap; lower max_new_tokens or raise max_len)"
+                )
+            need = self._pages_needed(req)
+            if need > self.num_pages - 1:
+                raise KampingError(
+                    f"ServeEngine: page-pool exhaustion — the request "
+                    f"needs {need} pages of {self.page_size} rows but "
+                    f"the pool holds only {self.num_pages - 1} "
+                    f"allocatable pages per rank (page 0 is the null "
+                    "page); raise num_pages"
+                )
+
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case page reservation for a request: every position it
+        can ever write (prompt rows plus ``max_new_tokens - 1`` decode
+        rows), rounded up to whole pages."""
+        span = int(len(req.prompt)) + max(int(req.max_new_tokens), 1) - 1
+        return -(-span // self.page_size)
+
     def _bucket(self, n: int) -> int:
         if n < 1:
             raise KampingError("ServeEngine: empty prompt")
         if n > self.max_len:
             raise KampingError(
-                f"ServeEngine: prompt length {n} exceeds max_len="
-                f"{self.max_len} (the per-slot cache capacity)"
+                f"ServeEngine: prompt length {n} exceeds the per-slot "
+                f"capacity max_len={self.max_len}"
             )
         if not self.pad_prompts:
             return n
-        b = _MIN_BUCKET
+        b = max(_MIN_BUCKET, self.page_size) if self.paged else _MIN_BUCKET
         while b < n:
             b <<= 1
         return min(b, self.max_len)
 
+    def _pages_available(self, rank: int) -> int:
+        """Free physical pages on ``rank`` not spoken for by an
+        outstanding reservation."""
+        return len(self._free[rank]) - int(self._reserved[rank])
+
     def _admit(self):
         """Dispatch (not complete) one prefill per free slot per queued
         request — admission's device work overlaps the decode batch issued
-        later in the same step."""
+        later in the same step.
+
+        Under the paged layout admission additionally *reserves* the
+        request's worst-case page need against the rank's pool; a rank
+        whose pool cannot cover the head-of-queue request **defers** it
+        (it stays queued for a later step — reaped slots return pages)
+        rather than raising mid-run.
+        """
         for rep in range(self.num_replicas):
             q = self.queues[rep]
             if not q:
@@ -361,6 +641,11 @@ class ServeEngine:
                         break
                     if self.slot_live[rank, slot] or self.slot_pending[rank, slot]:
                         continue
+                    if self.paged:
+                        need = self._pages_needed(q[0])
+                        if need > self._pages_available(rank):
+                            self.counters["admission_deferrals"] += 1
+                            break  # this rank's pool is full for now
                     req = q.pop(0)
                     S = int(len(req.prompt))
                     bucket = self._bucket(S)
@@ -375,7 +660,28 @@ class ServeEngine:
                     )
                     self._pending_meta.append((rank, slot, req))
                     self.slot_pending[rank, slot] = True
+                    if self.paged:
+                        self._reserved[rank] += need
+                        self._slot_reserved[(rank, slot)] = need
                     self.counters["prefills"] += 1
+
+    def _grow_pages(self):
+        """Lazily extend live slots' block tables: a slot whose next
+        write position starts a fresh page gets one from the free list
+        (admission's reservation guarantees it is there), then the host
+        block tables are republished to the device cache pytree."""
+        ps = self.page_size
+        for (rank, slot) in self.active:
+            pos = int(self.host_pos[rank, slot])
+            pg = pos // ps
+            if pos % ps == 0 and pg < self.pages_per_slot \
+                    and self.block_tables[rank, slot, pg] == 0:
+                page = self._free[rank].pop()
+                self._reserved[rank] -= 1
+                self._slot_reserved[(rank, slot)] -= 1
+                self._slot_pages[(rank, slot)].append(page)
+                self.block_tables[rank, slot, pg] = page
+        self.caches["block_tables"] = jnp.asarray(self.block_tables)
 
     def _complete_prefills(self):
         """Drain the admission pool (waitall): splice each finished
@@ -387,21 +693,49 @@ class ServeEngine:
         vals = self._pool.waitall()
         meta, self._pending_meta = self._pending_meta, []
         for (rank, slot, req), (tok, pcache) in zip(meta, vals):
-            self.caches = self._splice(
-                self.caches, pcache,
-                jnp.asarray(rank, jnp.int32), jnp.asarray(slot, jnp.int32),
-            )
             t = int(np.asarray(tok)[0])
             req.generated.append(t)
             self.counters["prefill_tokens"] += 1
             self.slot_pending[rank, slot] = False
             if req.max_new_tokens <= 1:
+                # Finishes at admission: no decode slot, and under the
+                # paged layout no pages either — release the reservation.
+                if self.paged:
+                    self._reserved[rank] -= self._slot_reserved.pop(
+                        (rank, slot)
+                    )
                 self.finished.append(req)
+                continue
+            if self.paged:
+                ps = self.page_size
+                true_len = int(len(req.prompt))
+                n_pg = -(-true_len // ps)
+                pages = [self._free[rank].pop() for _ in range(n_pg)]
+                self._reserved[rank] -= n_pg
+                self._slot_reserved[(rank, slot)] -= n_pg
+                self._slot_pages[(rank, slot)] = pages
+                self.block_tables[rank, slot, :] = 0
+                self.block_tables[rank, slot, :n_pg] = pages
+                # phys covers the prefill cache's page count — the bucket
+                # rounded up to a page multiple, matching _prefill_fn
+                bucket = self._bucket(true_len)
+                phys = np.zeros((-(-bucket // ps),), np.int32)
+                phys[:n_pg] = pages
+                self.caches = self._splice(
+                    self.caches, pcache,
+                    jnp.asarray(rank, jnp.int32), jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(phys),
+                )
+                self.host_pos[rank, slot] = true_len
             else:
-                self.slot_live[rank, slot] = True
-                self.next_tokens[rank, slot] = t
-                self.remaining[rank, slot] = req.max_new_tokens - 1
-                self.active[(rank, slot)] = req
+                self.caches = self._splice(
+                    self.caches, pcache,
+                    jnp.asarray(rank, jnp.int32), jnp.asarray(slot, jnp.int32),
+                )
+            self.slot_live[rank, slot] = True
+            self.next_tokens[rank, slot] = t
+            self.remaining[rank, slot] = req.max_new_tokens - 1
+            self.active[(rank, slot)] = req
 
     # -- stepping ------------------------------------------------------------
     def step(self) -> int:
@@ -426,6 +760,8 @@ class ServeEngine:
         t1 = tic()
         out = None
         if self.slot_live.any():
+            if self.paged:
+                self._grow_pages()
             decoded = self.slot_live.copy()
             out = self._decode(
                 self.params, self.caches, jnp.asarray(self.next_tokens),
@@ -435,6 +771,10 @@ class ServeEngine:
             self.caches = out[1]
         t2 = tic()
         self._complete_prefills()
+        if self.paged:
+            self.counters["pages_in_use_peak"] = max(
+                self.counters["pages_in_use_peak"], self.pages_in_use()
+            )
         t3 = tic()
         t4 = t3
         if out is not None:
@@ -448,14 +788,26 @@ class ServeEngine:
                 self.next_tokens[rank, slot] = tok
                 self.remaining[rank, slot] -= 1
                 self.counters["decode_tokens"] += 1
+                if self.paged:
+                    self.host_pos[rank, slot] += 1
                 if self.remaining[rank, slot] <= 0:
                     self.slot_live[rank, slot] = False
                     del self.active[(rank, slot)]
                     self.finished.append(req)
+                    if self.paged:
+                        self._free[rank].extend(
+                            self._slot_pages.pop((rank, slot), [])
+                        )
+                        self._reserved[rank] -= self._slot_reserved.pop(
+                            (rank, slot), 0
+                        )
+                        self.block_tables[rank, slot, :] = 0
             self.last_stats = {
                 "pool_live": np.asarray(out[2])[:: self.replica_shards].copy(),
                 "global_live": int(np.asarray(out[3]).reshape(-1)[0]),
             }
+            if self.paged:
+                self.last_stats["pages_in_use"] = self.pages_in_use()
         t5 = tic()
         self.phase_seconds["admit"] += t1 - t0
         self.phase_seconds["decode"] += (t2 - t1) + (t4 - t3)
@@ -498,6 +850,16 @@ class ServeEngine:
         )
 
     # -- telemetry -----------------------------------------------------------
+    def pages_in_use(self) -> int:
+        """Physical pages currently allocated across all ranks (paged
+        layout only; 0 under the dense layout — and 0 again once every
+        request finishes, which the reclamation tests pin)."""
+        if not self.paged:
+            return 0
+        return int(sum(
+            self.num_pages - 1 - len(f) for f in self._free
+        ))
+
     def prefill_cache_size(self) -> int:
         """Number of compiled prefill programs — with prompt buckets this
         is the number of *buckets* seen, not prompt lengths (the

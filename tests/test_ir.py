@@ -278,3 +278,44 @@ def test_golden_serve_decode_island():
     prog = rec.program()
     prog.validate()
     assert prog.pretty() == SERVE_GOLDEN
+
+
+# -- golden: planned (paged) serve decode island -------------------------------
+SERVE_PLANNED_GOLDEN = golden("""
+    %0 = kamping.allgather() {shape=(2,), dtype=int32, p=2, transport=xla}
+""")
+
+
+def test_golden_serve_decode_island_planned_paged():
+    """Under ``plan="auto"`` the merge_liveness rewrite collapses the
+    grouped + flat liveness allreduce pair into one flat allgather
+    (bitwise-legal: integer addition is exact) — the island issues a
+    single wire exchange, and the paged KV layout changes nothing about
+    the collective trace (block-table gathers are local)."""
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = ModelConfig(
+        name="s", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+        param_dtype="float32",
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=16, num_slots=1,
+                         num_replicas=2, kv_layout="paged", plan="auto")
+    assert engine._liveness_merged
+    # the staged liveness program matches the unplanned golden's pair
+    assert [o.op for o in engine.liveness_program.ops] == [
+        "allreduce", "allreduce"
+    ]
+    rng = np.random.RandomState(9)
+    engine.submit(
+        Request(prompt=rng.randint(1, 64, (4,)).astype(np.int32),
+                max_new_tokens=4),
+        replica=0,
+    )
+    with recording() as rec:
+        engine.run_to_completion()
+    prog = rec.program()
+    prog.validate()
+    assert prog.pretty() == SERVE_PLANNED_GOLDEN

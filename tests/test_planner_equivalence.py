@@ -318,3 +318,61 @@ def test_trainer_three_step_gate_overlap_int8ef_deterministic_tree():
                 raise AssertionError(
                     f"plan={plan!r} diverged at step {s}"
                 ) from e
+
+
+# -- merge_liveness: structural behavior (DESIGN.md §14) -----------------------
+def _liveness_pair(groups=2, group_p=2, p=4, dtype="int32", flat_op="add"):
+    from repro.core.ir import IROp, Program
+
+    return Program([
+        IROp(idx=0, op="allreduce", shape=(), dtype=dtype,
+             params=(("groups", str(groups)), ("op", "add"),
+                     ("p", str(group_p))),
+             label="serve.pool_live"),
+        IROp(idx=1, op="allreduce", shape=(), dtype=dtype,
+             params=(("op", flat_op), ("p", str(p))),
+             label="serve.global_live"),
+    ]).validate()
+
+
+def test_merge_liveness_fires_on_liveness_pair():
+    from repro.core.planner import merge_liveness
+
+    prog = _liveness_pair()
+    out = merge_liveness(prog)
+    out.validate()
+    assert [o.op for o in out.ops] == ["allgather"]
+    node = out.ops[0]
+    assert node.shape == (4,) and node.dtype == "int32"
+    assert node.param("p") == "4"
+    assert node.meta["groups"] == 2 and node.meta["group_p"] == 2
+    # idempotent: no grouped allreduce remains, so a second pass is id
+    assert merge_liveness(out) is out
+
+
+def test_merge_liveness_noop_without_grouped_node():
+    """Overlap training schedules never carry a ``groups`` binding — the
+    rule must be a structural identity on them (the property suite draws
+    it against those programs)."""
+    from repro.core.ir import IROp, Program
+    from repro.core.planner import merge_liveness
+
+    prog = Program([
+        IROp(idx=0, op="allreduce", shape=(), dtype="int32",
+             params=(("op", "add"), ("p", "4"))),
+        IROp(idx=1, op="allreduce", shape=(), dtype="int32",
+             params=(("op", "add"), ("p", "4"))),
+    ]).validate()
+    assert merge_liveness(prog) is prog
+
+
+def test_merge_liveness_noop_on_float_or_nonadd():
+    """Float sums reassociate inexactly and non-add reductions don't
+    decompose over slices — neither may merge."""
+    from repro.core.planner import merge_liveness
+
+    prog = _liveness_pair(dtype="float32")
+    assert merge_liveness(prog) is prog
+    prog = _liveness_pair(flat_op="max")
+    out = merge_liveness(prog)
+    assert [o.op for o in out.ops] == ["allreduce", "allreduce"]

@@ -227,7 +227,7 @@ def test_engine_queue_overflow_handling(params):
 def test_request_validation(params):
     engine = ServeEngine(CFG, params, max_len=16, num_slots=2)
     from repro.core import KampingError
-    with pytest.raises(KampingError, match="exceeds max_len"):
+    with pytest.raises(KampingError, match="per-slot capacity"):
         engine.submit(Request(prompt=np.arange(1, 30, dtype=np.int32)))
         engine.run_to_completion()
     with pytest.raises(KampingError, match="num_slots"):

@@ -1,0 +1,184 @@
+"""Paged KV-cache serving (DESIGN.md §14): differential + pool accounting.
+
+The paged layout must be **bitwise-invisible**: on the same admission
+schedule, every generated token equals the dense engine's (and hence the
+single-request reference test_serve.py pins) — across serve-axis sizes
+p ∈ {1, 2, 4}, with and without the planner-routed liveness exchange.
+The pool accounting tests pin the production properties on top: lazy
+allocation + full reclamation, deferral (not failure) under transient
+exhaustion, and distinct submit-time errors for the two permanent
+failure families (per-slot capacity vs page-pool exhaustion).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import KampingError
+from repro.models import (
+    ModelConfig,
+    init_params,
+    supports_paged_decode,
+)
+from repro.serve import Request, ServeEngine
+
+CFG = ModelConfig(
+    name="s", family="dense", num_layers=2, d_model=32, num_heads=4,
+    num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+    param_dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _requests(seed, specs):
+    rng = np.random.RandomState(seed)
+    return [
+        Request(prompt=rng.randint(1, CFG.vocab_size, (n,)).astype(np.int32),
+                max_new_tokens=m)
+        for n, m in specs
+    ]
+
+
+SPECS = [(3, 5), (6, 1), (9, 4), (5, 7), (7, 3), (4, 6), (8, 2), (2, 5)]
+
+
+def _run(params, *, max_len=32, slots=2, replicas=1, shards=1, seed=8,
+         specs=SPECS, **kw):
+    engine = ServeEngine(CFG, params, max_len=max_len, num_slots=slots,
+                         num_replicas=replicas, replica_shards=shards, **kw)
+    reqs = _requests(seed, specs)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_to_completion()
+    assert len(done) == len(reqs) and not engine.truncated
+    return engine, reqs
+
+
+@pytest.mark.parametrize("replicas,shards,slots", [
+    (1, 1, 2), (2, 1, 2), (2, 2, 2), (4, 1, 1),
+])
+@pytest.mark.parametrize("plan", [None, "auto"])
+def test_paged_matches_dense_bitwise(params, replicas, shards, slots, plan):
+    """Same admission schedule -> every token bitwise equal to dense,
+    for the grouped-pair and the merged-allgather liveness paths alike."""
+    _, dense = _run(params, slots=slots, replicas=replicas, shards=shards)
+    engine, paged = _run(params, slots=slots, replicas=replicas,
+                         shards=shards, kv_layout="paged", plan=plan)
+    assert engine._liveness_merged == (plan == "auto")
+    for a, b in zip(dense, paged):
+        assert a.generated == b.generated, (a.rid, a.generated, b.generated)
+
+
+def test_pages_reclaimed_after_run(params):
+    """Lazy allocation peaks below the pool and reaping returns every
+    page: the free lists are whole again once traffic drains."""
+    engine, _ = _run(params, kv_layout="paged")
+    assert engine.pages_in_use() == 0
+    assert 0 < engine.counters["pages_in_use_peak"] <= engine.num_pages - 1
+    assert engine.last_stats["pages_in_use"] == 0
+    # reservations fully released too
+    assert not engine._slot_reserved and int(engine._reserved.sum()) == 0
+
+
+def test_transient_pool_exhaustion_defers_not_fails(params):
+    """A pool smaller than the concurrent demand defers admission (the
+    request stays queued until reaped pages free) and still completes
+    every request — deferral is counted, never raised."""
+    specs = [(5, 7)] * 4  # span 11 -> 3 pages each at page_size=4
+    engine, reqs = _run(params, max_len=16, specs=specs, seed=3,
+                        kv_layout="paged", num_pages=6)  # 5 allocatable
+    assert engine.counters["admission_deferrals"] > 0
+    assert engine.pages_in_use() == 0
+    # tokens still match the unconstrained dense engine's
+    _, dense = _run(params, max_len=16, specs=specs, seed=3)
+    for a, b in zip(dense, reqs):
+        assert a.generated == b.generated
+
+
+def test_permanent_exhaustion_and_capacity_raise_distinctly(params):
+    """The two permanent failure families raise distinct errors at
+    submit, never mid-run (satellite: pool exhaustion is reported
+    distinctly from per-slot max_len capacity)."""
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=1,
+                         kv_layout="paged", num_pages=3)
+    prompt = np.arange(1, 11, dtype=np.int32)  # length 10
+    with pytest.raises(KampingError, match="page-pool exhaustion"):
+        engine.submit(Request(prompt=prompt, max_new_tokens=5))  # 4 pages > 2
+    with pytest.raises(KampingError, match="per-slot capacity"):
+        engine.submit(Request(prompt=prompt, max_new_tokens=8))  # span 17 > 16
+    with pytest.raises(KampingError, match="per-slot capacity"):
+        engine.submit(Request(prompt=np.arange(1, 30, dtype=np.int32),
+                              max_new_tokens=1))
+
+
+def test_prefill_compile_count_paged(params):
+    """Compile-count regression under the paged path: prompt lengths
+    {3,5,6,7,9} fall into pow2 buckets {4,8,16} -> exactly 3 prefill
+    programs, same as dense (page-granular splice does not fragment the
+    bucket space)."""
+    engine = ServeEngine(CFG, params, max_len=16, num_slots=2,
+                         kv_layout="paged")
+    assert engine.pad_prompts
+    for r in _requests(5, [(3, 2), (5, 2), (6, 2), (7, 2), (9, 2)]):
+        engine.submit(r)
+    engine.run_to_completion()
+    assert engine.prefill_cache_size() == 3
+    engine.submit(Request(prompt=np.arange(1, 5, dtype=np.int32),
+                          max_new_tokens=2))
+    engine.run_to_completion()
+    assert engine.prefill_cache_size() == 3
+
+
+def test_planned_liveness_stats_match_unplanned(params):
+    """plan='auto' merges the liveness pair into one allgather; the
+    published per-pool/global stats must be identical to the unplanned
+    grouped+flat allreduce pair (integer sums reassociate exactly)."""
+    def stats(plan):
+        engine = ServeEngine(CFG, params, max_len=16, num_slots=2,
+                             num_replicas=2, replica_shards=2,
+                             kv_layout="paged", plan=plan)
+        for r in _requests(9, [(4, 6), (5, 4), (3, 5), (6, 3)]):
+            engine.submit(r)
+        out = []
+        while engine._outstanding():
+            engine.step()
+            if engine.last_stats:
+                out.append((list(engine.last_stats["pool_live"]),
+                            engine.last_stats["global_live"]))
+        return out
+
+    assert stats(None) == stats("auto")
+
+
+def test_paged_rejects_unsupported_configs(params):
+    """Gating: windowed-KV configs (cache shorter than max_len) and bad
+    page sizes are rejected up front, not silently corrupted."""
+    assert not supports_paged_decode(CFG, max_len=16, page_size=3)
+    assert not supports_paged_decode(CFG, max_len=16, page_size=32)
+    with pytest.raises(KampingError, match="paged"):
+        ServeEngine(CFG, params, max_len=16, num_slots=2,
+                    kv_layout="paged", page_size=3)
+    swa = ModelConfig(
+        name="swa", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+        param_dtype="float32", sliding_window=8,
+    )
+    if not supports_paged_decode(swa, max_len=32, page_size=4):
+        with pytest.raises(KampingError, match="paged"):
+            ServeEngine(swa, init_params(swa, jax.random.PRNGKey(1)),
+                        max_len=32, num_slots=2, kv_layout="paged")
+
+
+def test_replica_shards_auto_resolves(params):
+    """replica_shards='auto' resolves to a measured shard count (>= 1)
+    from the fitted serve sweep and the engine still matches dense."""
+    engine, reqs = _run(params, slots=2, replicas=1, shards="auto",
+                        kv_layout="paged", plan="auto")
+    assert engine.replica_shards >= 1
+    assert engine.num_slots % engine.replica_shards == 0
+    _, dense = _run(params, slots=2, replicas=1, shards=engine.replica_shards)
+    for a, b in zip(dense, reqs):
+        assert a.generated == b.generated
