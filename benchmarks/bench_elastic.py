@@ -1,0 +1,163 @@
+"""Elastic-training costs (DESIGN.md §15): checkpoint stall + recovery.
+
+Two measurements back the §15 contracts:
+
+* **checkpoint stall** — the wall time a training step pays for
+  ``CheckpointManager.save``: the sync path blocks until the snapshot is
+  durable; the async path pays only the device→host copy + enqueue (the
+  writer thread owns the disk).  The full run *asserts* the non-stall
+  contract (async < sync) and records it per row
+  (``async_nonstall``).
+* **recovery latency vs shrink size** — the ULFM recovery sequence
+  (``WorldComm.shrink`` → ``survivor_groups`` → ``rederive_transport``
+  → sharded restore with the EF-residual fold) timed end-to-end for
+  p 8→4 and 4→2.
+
+On CPU the wall numbers characterize the host/IO path (there is no real
+fleet); the artifact schema is what CI gates.  ``--smoke``/``--out``
+follow the bench-smoke conventions (tiny payload, few reps,
+schema-identical rows).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from common import PAYLOAD_SIZES, SMOKE_PAYLOAD_SIZES, csv_row
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.compression import reshard_error_feedback
+from repro.core.ulfm import WorldComm
+
+SHRINKS = ((8, 4), (4, 2))
+
+
+class _Dev:
+    """Fake device for the shrink-latency measurement (only .id is read)."""
+
+    def __init__(self, i):
+        self.id = i
+
+
+def _tree_of(n):
+    """A params-like pytree totalling ~n float32 elements."""
+    rng = np.random.RandomState(0)
+    half = max(n // 2, 1)
+    return {
+        "w": rng.randn(half).astype(np.float32),
+        "b": rng.randn(half).astype(np.float32),
+    }
+
+
+def _median_save_stall(ckpt, tree, async_, iters):
+    """Median wall seconds the CALLER spends inside save() — the per-step
+    stall.  The writer queue is drained outside the timed region so each
+    measurement starts from an idle writer."""
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        ckpt.save(1000 + i, tree, async_=async_)
+        ts.append(time.perf_counter() - t0)
+        ckpt.wait()
+    return float(np.median(ts))
+
+
+def run(smoke: bool = False, out: str | None = None):
+    iters = 3 if smoke else 10
+    rows = []
+
+    # -- checkpoint stall: sync vs async --------------------------------
+    for n in (SMOKE_PAYLOAD_SIZES if smoke else PAYLOAD_SIZES):
+        payload_bytes = n * 4
+        tree = _tree_of(n)
+        d = tempfile.mkdtemp(prefix="bench_elastic_")
+        try:
+            ckpt = CheckpointManager(d, keep=2)
+            sync_s = _median_save_stall(ckpt, tree, False, iters)
+            async_s = _median_save_stall(ckpt, tree, True, iters)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        nonstall = bool(async_s < sync_s)
+        if not smoke:
+            # the §15 non-stall contract: an async save costs the step
+            # only the host copy, never the disk write
+            assert nonstall, (
+                f"async save stalled {async_s*1e6:.0f}us >= sync "
+                f"{sync_s*1e6:.0f}us at {payload_bytes} bytes"
+            )
+        for variant, stall in (("sync", sync_s), ("async", async_s)):
+            csv_row(
+                f"elastic_ckpt_{variant}_n{n}", stall * 1e6,
+                f"payload_bytes={payload_bytes};iters={iters}",
+            )
+            rows.append({
+                "mode": "ckpt-save", "variant": variant,
+                "p_from": None, "p_to": None,
+                "payload_bytes": payload_bytes, "us": stall * 1e6,
+                "async_nonstall": nonstall if variant == "async" else None,
+            })
+
+    # -- recovery latency vs shrink size ---------------------------------
+    n = (SMOKE_PAYLOAD_SIZES if smoke else PAYLOAD_SIZES)[-1]
+    for p_from, p_to in SHRINKS:
+        err = np.random.RandomState(1).randn(p_from, n).astype(np.float32)
+        d = tempfile.mkdtemp(prefix="bench_elastic_")
+        try:
+            ckpt = CheckpointManager(d, keep=2)
+            ckpt.save(4, {"params": _tree_of(n), "extra": err},
+                      extra_meta={"world_size": p_from})
+            world = WorldComm([_Dev(i) for i in range(p_from)])
+
+            def recover():
+                nw = world.shrink(list(range(p_to, p_from)))
+                nw.survivor_groups()
+                nw.rederive_transport("hier")
+                return ckpt.restore(4, reshard=lambda t, m: {
+                    "params": t["params"],
+                    "extra": reshard_error_feedback(
+                        t["extra"], m["extra"]["world_size"], p_to
+                    ),
+                })
+
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                tree_got, _ = recover()
+                ts.append(time.perf_counter() - t0)
+            assert tree_got["extra"].shape[0] == p_to
+            us = float(np.median(ts)) * 1e6
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        csv_row(
+            f"elastic_recovery_{p_from}to{p_to}", us,
+            f"payload_bytes={n * 4};iters={iters}",
+        )
+        rows.append({
+            "mode": "recovery", "variant": None,
+            "p_from": p_from, "p_to": p_to,
+            "payload_bytes": n * 4, "us": us,
+            "async_nonstall": None,
+        })
+
+    out_path = out or os.path.join(
+        os.path.dirname(__file__), "artifacts", "elastic.json"
+    )
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny payloads, few reps (CI schema check)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    a = ap.parse_args()
+    run(smoke=a.smoke, out=a.out)

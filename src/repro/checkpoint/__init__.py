@@ -1,3 +1,3 @@
 """repro.checkpoint — sharded snapshots, async save, elastic restore."""
-from .manager import CheckpointManager
-__all__ = ["CheckpointManager"]
+from .manager import CheckpointError, CheckpointManager
+__all__ = ["CheckpointManager", "CheckpointError"]

@@ -1,69 +1,167 @@
-"""Sharded checkpointing with async save and elastic restore.
+"""Async, per-host sharded checkpointing with elastic restore
+(DESIGN.md §15; cf. maxtext's standalone checkpointer).
 
-Layout: ``<dir>/step_<n>/`` with one ``.npy`` per pytree leaf plus a
-pickled manifest (tree structure, shapes, dtypes, step, mesh generation).
-Restore re-places leaves onto the *current* mesh via ``jax.device_put`` —
-which is exactly the reshard needed after an elastic shrink (the ULFM
-recovery path): the same checkpoint restores onto a smaller mesh with
-different shardings.
+Layout: ``<dir>/step_<n>/`` holds the pytree leaves plus a pickled
+manifest (tree structure, global shapes, dtypes, step, per-leaf shard
+counts, caller metadata).  Each leaf is written as one ``.npy`` — or,
+with ``shards=k``, split along its leading axis into ``k`` per-host
+shard files (``leaf_00003.shard_02.npy``); leaves whose leading axis
+does not divide evenly stay whole.  On a real multi-host fleet each
+process writes the shards it addresses; the manifest records *global*
+shapes so any process count can reassemble and restore.
 
-On a real multi-host fleet each process writes its address-able shards
-(the manifest records per-leaf global shapes so any process count can
-restore); on the single-controller test environment leaves are written
-whole.  Async mode hands the host copies to a writer thread so the train
-loop is not blocked (double-buffered; ``wait()`` joins).
+**Genuinely async save.**  ``save(async_=True)`` host-copies the leaves
+and enqueues the write on a persistent daemon writer thread, then
+returns — it never waits for a previous save, so the train loop pays
+only the device→host copy (``bench_elastic.py`` asserts the non-stall).
+The queue serializes writes *and* garbage collection on the writer
+thread, so an async save can never race ``_gc`` deleting the directory
+it is writing.  Writer-side exceptions are captured and re-raised from
+the next ``wait()`` / ``restore()``.
+
+**Consistency rules** (the §15 async-checkpoint contract):
+
+* a snapshot becomes *durable* atomically — leaves first, manifest
+  last, all inside ``step_<n>.tmp``, then one ``os.rename``; readers
+  never observe a partial directory under the final name;
+* an interrupted write leaves only a ``.tmp`` directory, which
+  ``list_steps``/``latest_step`` ignore and the next ``_gc`` sweeps;
+* ``latest_step()`` *validates* by default (manifest loads, every
+  expected leaf/shard file present), so recovery after a mid-checkpoint
+  failure restores the newest snapshot that is actually whole;
+* ``restore`` first drains the writer queue — a just-enqueued save is
+  either fully durable or not visible, never half-read.
+
+**Elastic restore.**  ``restore(shardings=...)`` re-places leaves onto
+the *current* mesh via ``jax.device_put`` — the reshard needed after a
+ULFM shrink; ``restore(reshard=fn)`` additionally maps the assembled
+host tree through ``fn(tree, meta)`` first, which is where the trainer
+hooks :func:`repro.core.compression.reshard_error_feedback` to fold
+error-feedback residuals onto the shrunken world.
 """
 from __future__ import annotations
 
 import os
 import pickle
+import queue
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
-from repro.core.serialization import host_pack, host_unpack
+__all__ = ["CheckpointManager", "CheckpointError"]
 
-__all__ = ["CheckpointManager"]
+
+class CheckpointError(RuntimeError):
+    """A snapshot is corrupt/partial, or a writer-thread save failed."""
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype string, including the ml_dtypes extension
+    types (bfloat16, float8_*) that ``np.load`` round-trips as raw void
+    bytes — the manifest is the source of truth for reinterpreting them."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    """Async, per-host sharded snapshot store with atomic publication
+    (see the module docstring for the §15 consistency rules).
+
+    ``keep`` bounds retained snapshots; ``shards`` is the per-host shard
+    count for the sharded save path (1 = whole leaves, the
+    single-controller test default)."""
+
+    def __init__(self, directory: str, keep: int = 3, shards: int = 1):
+        if shards < 1:
+            raise ValueError(f"CheckpointManager: shards must be >= 1, "
+                             f"got {shards}")
         self.dir = directory
         self.keep = keep
+        self.shards = shards
         os.makedirs(directory, exist_ok=True)
-        self._thread: Optional[threading.Thread] = None
+        self._queue: "queue.Queue" = queue.Queue()
+        self._errors: List[BaseException] = []
+        self._worker: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
 
     # -- save ------------------------------------------------------------------
     def save(self, step: int, tree, *, extra_meta: Optional[Dict] = None,
-             async_: bool = False):
-        """Snapshot a pytree. async_=True returns immediately."""
+             async_: bool = False, shards: Optional[int] = None):
+        """Snapshot a pytree.
+
+        ``async_=True`` returns after the device→host copy: the write is
+        enqueued on the persistent writer thread (no wait on previous
+        saves — the non-stall contract).  ``shards`` overrides the
+        manager's per-host shard count for this snapshot.
+        """
+        k = self.shards if shards is None else int(shards)
         leaves, treedef = jax.tree.flatten(tree)
         host_leaves = [np.asarray(l) for l in leaves]  # device->host copy
+        leaf_shards = [
+            k if (l.ndim >= 1 and l.shape[0] >= k and l.shape[0] % k == 0)
+            else 1
+            for l in host_leaves
+        ]
         meta = {
             "treedef": pickle.dumps(treedef),
             "step": step,
             "shapes": [l.shape for l in host_leaves],
             "dtypes": [str(l.dtype) for l in host_leaves],
+            "leaf_shards": leaf_shards,
             "extra": extra_meta or {},
         }
-        if async_:
+        # Every write goes through the queue — one thread owns the disk,
+        # so writes and _gc can never interleave; sync mode just blocks
+        # until its own write (and anything queued before it) is durable.
+        self._ensure_worker()
+        self._queue.put((step, host_leaves, meta))
+        if not async_:
             self.wait()
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host_leaves, meta), daemon=True
-            )
-            self._thread.start()
-        else:
-            self._write(step, host_leaves, meta)
+
+    def _ensure_worker(self):
+        with self._lock:
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._drain_queue, daemon=True,
+                    name="ckpt-writer",
+                )
+                self._worker.start()
+
+    def _drain_queue(self):
+        while True:
+            item = self._queue.get()
+            try:
+                self._write(*item)
+            except BaseException as e:  # surfaced by the next wait()
+                self._errors.append(e)
+            finally:
+                self._queue.task_done()
 
     def _write(self, step, host_leaves, meta):
         path = os.path.join(self.dir, f"step_{step:08d}")
         tmp = path + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         for i, leaf in enumerate(host_leaves):
-            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
+            k = meta["leaf_shards"][i]
+            if k == 1:
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
+            else:
+                for j, piece in enumerate(np.split(leaf, k, axis=0)):
+                    np.save(
+                        os.path.join(tmp, f"leaf_{i:05d}.shard_{j:02d}.npy"),
+                        piece,
+                    )
+        # Manifest LAST: its presence marks the directory complete, and
+        # the rename below publishes it atomically.
         with open(os.path.join(tmp, "manifest.pkl"), "wb") as f:
             pickle.dump(meta, f)
         if os.path.exists(path):
@@ -72,46 +170,144 @@ class CheckpointManager:
         self._gc()
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Drain the writer queue; re-raise the first writer error."""
+        self._queue.join()
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise CheckpointError(
+                f"async checkpoint save failed: {errs[0]!r}"
+            ) from errs[0]
+
+    def pending(self) -> int:
+        """Writes enqueued but not yet durable (tests / benchmarks)."""
+        return self._queue.unfinished_tasks
 
     def _gc(self):
+        # Runs on the writer thread (serialized with writes by the
+        # queue), so a later save can never delete a directory an
+        # earlier save is still writing.
         steps = self.list_steps()
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
+        for name in os.listdir(self.dir):  # interrupted-write leftovers
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+
+    # -- validation ------------------------------------------------------------
+    def _load_manifest(self, step: int) -> Dict[str, Any]:
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        if not os.path.isdir(path):
+            raise CheckpointError(f"no checkpoint directory for step {step}")
+        try:
+            with open(os.path.join(path, "manifest.pkl"), "rb") as f:
+                return pickle.load(f)
+        except Exception as e:
+            raise CheckpointError(
+                f"step {step}: manifest missing or unreadable "
+                f"(partial/corrupt snapshot): {e!r}"
+            ) from e
+
+    def _leaf_files(self, meta) -> List[List[str]]:
+        out = []
+        for i, k in enumerate(meta["leaf_shards"]):
+            if k == 1:
+                out.append([f"leaf_{i:05d}.npy"])
+            else:
+                out.append(
+                    [f"leaf_{i:05d}.shard_{j:02d}.npy" for j in range(k)]
+                )
+        return out
+
+    def validate_step(self, step: int) -> bool:
+        """True iff the snapshot is whole: manifest loads and every
+        expected leaf/shard file exists."""
+        try:
+            meta = self._load_manifest(step)
+        except CheckpointError:
+            return False
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        for files in self._leaf_files(meta):
+            for name in files:
+                if not os.path.exists(os.path.join(path, name)):
+                    return False
+        return True
 
     # -- restore ---------------------------------------------------------------
-    def list_steps(self):
+    def list_steps(self, valid_only: bool = False):
+        """Sorted durable snapshot steps (``.tmp`` leftovers excluded);
+        ``valid_only`` filters through :meth:`validate_step`."""
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name[5:]))
+                try:
+                    s = int(name[5:])
+                except ValueError:
+                    continue
+                if not valid_only or self.validate_step(s):
+                    out.append(s)
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
-        steps = self.list_steps()
+    def latest_step(self, valid_only: bool = True) -> Optional[int]:
+        """Newest snapshot — by default the newest *valid* one, so a
+        write interrupted by the failure being recovered from is skipped
+        (the §15 mid-checkpoint rule)."""
+        steps = self.list_steps(valid_only=valid_only)
         return steps[-1] if steps else None
 
-    def restore(self, step: Optional[int] = None, shardings=None):
-        """Load a snapshot; optionally place leaves with ``shardings`` (a
-        pytree of NamedSharding matching the saved structure) — pass the
-        *new* mesh's shardings to perform an elastic reshard."""
+    def restore(self, step: Optional[int] = None, shardings=None,
+                reshard=None):
+        """Load a snapshot, reassembling per-host shards.
+
+        ``shardings`` — a pytree of NamedSharding matching the saved
+        structure: leaves are placed with ``jax.device_put`` (pass the
+        *new* mesh's shardings after an elastic shrink).  ``reshard`` —
+        optional ``fn(host_tree, meta) -> host_tree`` applied before
+        placement (the EF-residual fold,
+        :func:`repro.core.compression.reshard_error_feedback`).  Raises
+        :class:`CheckpointError` for a corrupt/partial snapshot.
+        """
         self.wait()
         if step is None:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        meta = self._load_manifest(step)
         path = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(path, "manifest.pkl"), "rb") as f:
-            meta = pickle.load(f)
         treedef = pickle.loads(meta["treedef"])
-        leaves = [
-            np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
-            for i in range(len(meta["shapes"]))
-        ]
+        leaves = []
+        for i, files in enumerate(self._leaf_files(meta)):
+            try:
+                pieces = [np.load(os.path.join(path, n)) for n in files]
+            except Exception as e:
+                raise CheckpointError(
+                    f"step {step}: leaf {i} unreadable (partial/corrupt "
+                    f"snapshot): {e!r}"
+                ) from e
+            leaf = pieces[0] if len(pieces) == 1 else np.concatenate(
+                pieces, axis=0
+            )
+            want = _np_dtype(meta["dtypes"][i])
+            if leaf.dtype != want:
+                # extension dtypes (bfloat16/fp8) load back as void bytes;
+                # reinterpret per the manifest (same bytes, zero copies)
+                try:
+                    leaf = leaf.view(want)
+                except ValueError as e:
+                    raise CheckpointError(
+                        f"step {step}: leaf {i} dtype {leaf.dtype} cannot "
+                        f"be read as manifest {want} (corrupt snapshot)"
+                    ) from e
+            if tuple(leaf.shape) != tuple(meta["shapes"][i]):
+                raise CheckpointError(
+                    f"step {step}: leaf {i} shape {leaf.shape} != manifest "
+                    f"{tuple(meta['shapes'][i])} (corrupt snapshot)"
+                )
+            leaves.append(leaf)
         tree = jax.tree.unflatten(treedef, leaves)
+        if reshard is not None:
+            tree = reshard(tree, meta)
         if shardings is not None:
             tree = jax.device_put(tree, shardings)
         else:

@@ -25,6 +25,7 @@ from .compression import (
     available_codecs,
     get_codec,
     register_codec,
+    reshard_error_feedback,
     wire_report,
 )
 from .flatten import bucketize_by_destination, flatten_buckets, with_flattened
@@ -32,7 +33,7 @@ from .grid import GridCommunicator
 from .ir import IROp, Program, Recorder, annotate, recording, trace_collectives
 from .nonblocking import NonBlockingResult, RequestPool
 from .opspec import OP_TABLE, OpSpec
-from .overlap import Bucket, overlap_reduce_tree, plan_buckets
+from .overlap import Bucket, drain_pool, overlap_reduce_tree, plan_buckets
 from .params import (
     Param,
     ResizePolicy,
@@ -65,7 +66,12 @@ from .params import (
     tag,
     transport,
 )
-from .groups import GroupTables, split_groups, validate_groups
+from .groups import (
+    GroupTables,
+    split_groups,
+    survivor_groups,
+    validate_groups,
+)
 from .plugins import Plugin, attach_ops, register_parameter
 from .transports import (
     PallasTransport,
@@ -79,6 +85,7 @@ from .hier import HierTransport, default_group_size
 from .reproducible import (
     ReproducibleReduce,
     deterministic_reduce,
+    elastic_leaves,
     tree_reduce_canonical,
 )
 from .result import Result
@@ -99,15 +106,20 @@ from .planner import (
     apply_rules,
 )
 from .sparse import SparseAlltoall, neighbors
-from .ulfm import DeviceFailureDetected, RevokedError, WorldComm
+from .ulfm import (
+    FAILURE_POINTS,
+    DeviceFailureDetected,
+    RevokedError,
+    WorldComm,
+)
 
 __all__ = [
     "Communicator", "GridCommunicator", "SparseAlltoall",
     "ReproducibleReduce", "Plugin", "register_parameter",
     "OpSpec", "OP_TABLE", "attach_ops",
     "NonBlockingResult", "RequestPool", "Result", "WorldComm",
-    "Bucket", "plan_buckets", "overlap_reduce_tree",
-    "DeviceFailureDetected", "RevokedError",
+    "Bucket", "plan_buckets", "overlap_reduce_tree", "drain_pool",
+    "DeviceFailureDetected", "RevokedError", "FAILURE_POINTS",
     "send_buf", "recv_buf", "send_recv_buf", "send_count", "send_counts",
     "recv_count", "recv_count_out",
     "recv_counts", "recv_counts_out", "send_counts_out", "send_displs",
@@ -121,14 +133,16 @@ __all__ = [
     "register_transport", "get_transport", "available_transports",
     "Codec", "QuantizedCodec", "Int8ErrorFeedbackCodec", "Fp8E4M3Codec",
     "TopKCodec", "register_codec", "get_codec", "available_codecs",
-    "wire_report",
-    "default_group_size", "GroupTables", "split_groups", "validate_groups",
+    "wire_report", "reshard_error_feedback",
+    "default_group_size", "GroupTables", "split_groups",
+    "survivor_groups", "validate_groups",
     "ResizePolicy", "resize_to_fit", "grow_only", "no_resize",
     "as_serialized", "as_deserializable", "deserialize", "deserialize_like",
     "Serialized", "host_pack", "host_unpack",
     "with_flattened", "flatten_buckets", "bucketize_by_destination",
-    "tree_reduce_canonical", "AssertionLevel", "set_assertion_level",
-    "assertion_level", "KampingError", "MissingParameterError",
+    "tree_reduce_canonical", "elastic_leaves", "AssertionLevel",
+    "set_assertion_level", "assertion_level",
+    "KampingError", "MissingParameterError",
     "ParameterConflictError", "UnsupportedParameterError",
     "PendingRequestError", "MovedBufferError", "Param",
 ]

@@ -71,6 +71,7 @@ __all__ = [
     "available_codecs",
     "resolve_codec",
     "wire_report",
+    "reshard_error_feedback",
 ]
 
 
@@ -460,3 +461,77 @@ def wire_report(leaves, codec: Union[str, Codec, None]) -> dict:
         "wire_bytes": wire,
         "ratio": (uncompressed / wire) if wire else 1.0,
     }
+
+
+def reshard_error_feedback(err_tree, old_dp: int, new_dp: int, *,
+                           leaf_stacked: bool = False):
+    """Reshape error-feedback residual state across an elastic resize.
+
+    The EF invariant that makes quantized training converge is global:
+    the *sum over ranks* of the residual state is exactly the
+    untransmitted quantization error.  An elastic shrink/grow
+    (DESIGN.md §15) must preserve that sum — and, for the deterministic
+    modes, the global *leaf order* (§12) — while changing the leading
+    rank dimension:
+
+    * ``leaf_stacked=True`` — state leaves are ``(dp, m, ...)`` (the
+      ``grad_reduce="reproducible"`` layout: one residual per canonical
+      leaf, global leaf index = ``rank·m + i``).  The resize is an exact
+      reshape ``(old_dp, m, ...) → (new_dp, m·old_dp/new_dp, ...)``: the
+      flattened global leaf order is untouched, so every residual lands
+      on the rank that now owns its leaf and ``deterministic("tree")``
+      runs stay bitwise-reproducible across the resize.  Requires
+      ``old_dp·m % new_dp == 0`` (both shrink and grow).
+    * ``leaf_stacked=False`` — state leaves are ``(dp, ...)`` (the
+      allreduce/overlap layout: one residual per rank).  A shrink folds
+      each group of ``old_dp/new_dp`` collapsing ranks by *summing*
+      their residuals onto the absorbing rank (addition keeps the global
+      sum exact — the merged rank simply owes the fabric the combined
+      untransmitted error).  A grow hands each old residual to the first
+      child rank and zero-fills the rest.  Requires the larger dp to be
+      a multiple of the smaller.
+
+    Accepts any pytree (or ``None``, returned as-is); leaves may be
+    ``jax`` or ``numpy`` arrays.
+    """
+    if err_tree is None or old_dp == new_dp:
+        return err_tree
+    if old_dp <= 0 or new_dp <= 0:
+        raise KampingError(
+            f"reshard_error_feedback: dp sizes must be positive; got "
+            f"{old_dp} -> {new_dp}"
+        )
+
+    def one(e):
+        e = jnp.asarray(e)
+        if e.ndim < 1 or e.shape[0] != old_dp:
+            raise KampingError(
+                f"reshard_error_feedback: state leaf shape {e.shape} does "
+                f"not lead with old_dp={old_dp}"
+            )
+        if leaf_stacked:
+            if e.ndim < 2:
+                raise KampingError(
+                    "reshard_error_feedback(leaf_stacked=True): state "
+                    f"leaves must be (dp, m, ...); got shape {e.shape}"
+                )
+            total = old_dp * e.shape[1]
+            if total % new_dp:
+                raise KampingError(
+                    f"reshard_error_feedback: {total} global leaves do not "
+                    f"split evenly over {new_dp} ranks"
+                )
+            return e.reshape((new_dp, total // new_dp) + e.shape[2:])
+        if old_dp % new_dp == 0:  # shrink: fold collapsing ranks by sum
+            k = old_dp // new_dp
+            return e.reshape((new_dp, k) + e.shape[1:]).sum(axis=1)
+        if new_dp % old_dp == 0:  # grow: residual to first child, zeros else
+            k = new_dp // old_dp
+            out = jnp.zeros((new_dp,) + e.shape[1:], e.dtype)
+            return out.at[::k].set(e)
+        raise KampingError(
+            f"reshard_error_feedback: per-rank state needs the larger dp "
+            f"to be a multiple of the smaller; got {old_dp} -> {new_dp}"
+        )
+
+    return jax.tree.map(one, err_tree)

@@ -50,6 +50,7 @@ __all__ = [
     "GroupTables",
     "validate_groups",
     "split_groups",
+    "survivor_groups",
     "local_perm_to_global",
     "grouped_all_gather",
     "grouped_all_to_all",
@@ -182,6 +183,45 @@ def split_groups(
             ordered = sorted(by_color[color])  # (key, parent-rank) stable
             out.append(tuple(m for _, _, m in ordered))
     return validate_groups(out, world)
+
+
+def survivor_groups(world: int, survivors: Sequence[int]) -> Groups:
+    """Partition of the *parent* axis putting the survivors in group 0.
+
+    The ULFM shrink→split mapping (DESIGN.md §15): after a failure the
+    surviving ranks become one ``comm.split`` group of the old axis, so
+    drain/replay collectives during recovery run group-scoped over
+    exactly the survivors with the ordinary §9 machinery.  The dead
+    ranks are chunked into filler groups of the same size (uniformity is
+    the SPMD static-shape rule — their staged programs are never read),
+    which requires ``len(survivors)`` to divide ``world``: the whole-
+    slice failure model, where hosts are retired in units that keep the
+    partition uniform (``WorldComm.shrink`` rounds down to the largest
+    valid survivor count).
+    """
+    surv = sorted(int(r) for r in survivors)
+    if not surv:
+        raise KampingError("survivor_groups: no survivors")
+    if len(set(surv)) != len(surv):
+        raise KampingError("survivor_groups: duplicate survivor rank")
+    for r in surv:
+        if r < 0 or r >= world:
+            raise KampingError(
+                f"survivor_groups: rank {r} outside the axis (world {world})"
+            )
+    s = len(surv)
+    if world % s:
+        raise KampingError(
+            f"survivor_groups: {s} survivors do not uniformly partition a "
+            f"{world}-rank axis (SPMD groups must be equally sized — shrink "
+            "retires whole slices; round down to a divisor of the world "
+            "size first)"
+        )
+    dead = [r for r in range(world) if r not in set(surv)]
+    colors = [0] * world
+    for i, r in enumerate(dead):
+        colors[r] = 1 + i // s
+    return split_groups(None, world, colors)
 
 
 class GroupTables:

@@ -86,6 +86,23 @@ class NonBlockingResult:
         """
         return True, self.wait()
 
+    def cancel(self):
+        """Complete the request *without* delivering its value.
+
+        The ULFM drain path (DESIGN.md §15): after a device failure the
+        in-flight value is garbage — the collective never completed on
+        the failed ranks — so recovery marks the request spent and drops
+        the value and the moved buffers.  Idempotent on an already
+        completed request (returns ``False``); returns ``True`` when a
+        pending request was actually cancelled.
+        """
+        if self._completed:
+            return False
+        self._completed = True
+        self._value = None
+        self._moved = []
+        return True
+
     # -- safety --------------------------------------------------------------
     @property
     def value(self):
@@ -213,6 +230,26 @@ class RequestPool:
             "RequestPool.collect: request is not held by this pool "
             "(never submitted, or already completed and collected)"
         )
+
+    def abort(self) -> int:
+        """Cancel every in-flight request without delivering values.
+
+        The ULFM failure-drain verb (DESIGN.md §15): when a rank dies
+        mid-collective the in-flight bucket values are garbage, so the
+        recovery path *drains* the pool — each pending request is marked
+        spent (its value and moved buffers dropped), the eviction stash
+        is cleared, and the pool is immediately reusable for the
+        replayed step on the shrunken communicator.  Returns the number
+        of requests that were actually in flight (the count the
+        fault-tolerance events report as drained buckets).
+        """
+        n = 0
+        for _, r in self._pending:
+            if r.cancel():
+                n += 1
+        self._pending.clear()
+        self._drained = weakref.WeakKeyDictionary()
+        return n
 
     def __len__(self):
         """Number of requests currently in flight."""

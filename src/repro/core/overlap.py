@@ -42,6 +42,18 @@ summable payloads (ints, dyadic floats — any addition order yields the
 same bits) ``overlap_reduce_tree`` is bitwise identical to a per-leaf
 ``allreduce`` loop under *both* transports; on generic float payloads
 the usual IEEE reassociation caveat applies (tests/test_overlap.py).
+
+Failure semantics (DESIGN.md §15).  State commit is atomic at *step*
+granularity: a step's reduced gradients exist only in the step's output
+values, so when a rank dies while buckets are in flight the recovery
+path never tries to salvage partial reductions — it **drains** the pool
+(:func:`drain_pool` → ``RequestPool.abort``: every pending request is
+cancelled, values and moved buffers dropped), discards the step's
+outputs, and **replays** the step from the last durable checkpoint on
+the shrunken communicator.  Error-feedback residuals are part of the
+replayed state (resharded by
+:func:`repro.core.compression.reshard_error_feedback`), so the replay
+is bitwise identical to a clean run at the new size.
 """
 from __future__ import annotations
 
@@ -63,7 +75,23 @@ from .params import send_buf
 from .params import transport as transport_param
 from .result import Result
 
-__all__ = ["Bucket", "plan_buckets", "overlap_reduce_tree"]
+__all__ = ["Bucket", "plan_buckets", "overlap_reduce_tree", "drain_pool"]
+
+
+def drain_pool(pool: Optional[RequestPool]) -> int:
+    """Abort every in-flight bucket of a reduction pool (DESIGN.md §15).
+
+    The ULFM drain verb for the overlap engine: called by the recovery
+    path when a failure interrupts a step whose buckets are still in
+    flight.  Pending requests are cancelled without delivering values
+    (their reductions never completed on the failed ranks), the pool is
+    left empty and reusable for the replayed step, and the number of
+    drained buckets is returned for the fault-tolerance event log.
+    ``None`` (no pool in flight) drains zero.
+    """
+    if pool is None:
+        return 0
+    return pool.abort()
 
 # Default bucket target: 4 MiB of gradient bytes per collective — large
 # enough to be bandwidth-bound, small enough that several buckets are in

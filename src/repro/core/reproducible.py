@@ -49,6 +49,7 @@ from .plugins import Plugin
 
 __all__ = [
     "ReproducibleReduce", "deterministic_reduce", "tree_reduce_canonical",
+    "elastic_leaves",
 ]
 
 
@@ -71,6 +72,33 @@ def tree_reduce_canonical(leaves, fn=jnp.add):
     while x.shape[0] > 1:
         x = fn(x[0::2], x[1::2])
     return x[0]
+
+
+def elastic_leaves(global_leaves: int, p: int) -> int:
+    """Per-rank leaf count that keeps the canonical tree invariant at
+    world size ``p``.
+
+    The elastic-resize contract (DESIGN.md §15): ``deterministic("tree",
+    leaves=m)`` is p-invariant only for a *fixed* global leaf count
+    ``M = p·m`` — so a ULFM shrink that keeps training bitwise on the
+    same loss curve must scale the per-rank leaf count to ``M / p_new``
+    (each survivor absorbs the retired ranks' leaves, in global leaf
+    order) rather than keep ``m`` fixed.  Raises when the resize cannot
+    preserve the tree: ``M`` not divisible by ``p``, or a non-power-of-
+    two result (the §12 schedule requirements).
+    """
+    M, p = int(global_leaves), int(p)
+    if not _is_pow2(M):
+        raise KampingError(
+            f"elastic_leaves: global leaf count {M} must be a power of two"
+        )
+    if not _is_pow2(p) or M % p:
+        raise KampingError(
+            f"elastic_leaves: {M} global leaves cannot be preserved at "
+            f"world size {p} (p must be a power of two dividing the leaf "
+            "count — shrink to a divisor or re-plan the run)"
+        )
+    return M // p
 
 
 def deterministic_reduce(comm, x, fn=jnp.add, leaves=None):

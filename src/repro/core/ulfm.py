@@ -1,27 +1,52 @@
-"""ULFM-style fault tolerance (paper §V-B, Fig. 12).
+"""ULFM-style fault tolerance through the engine (paper §V-B, Fig. 12;
+DESIGN.md §15).
 
 MPI's User-Level Failure Mitigation lets survivors *revoke* a communicator
 and *shrink* it to the living ranks.  On TPU fleets the failure unit is a
 host/slice and recovery is re-meshing + restoring state, so the adaptation
-is a host-level ``WorldComm``:
+is a host-level :class:`WorldComm` whose verbs compose with the full
+binding surface rather than live beside it:
 
 * failures surface as :class:`DeviceFailureDetected` exceptions (idiomatic
-  C++-exceptions-over-return-codes, per the paper),
-* ``revoke()`` marks the world dead for everyone,
-* ``shrink()`` rebuilds a (smaller) device mesh from survivors,
-* the trainer (see ``repro.train.fault_tolerance``) catches the exception,
-  shrinks, re-lowers the step on the new mesh and restores the latest
-  checkpoint — exactly the control flow of paper Fig. 12.
+  C++-exceptions-over-return-codes, per the paper), raised from
+  :meth:`WorldComm.check_health` at one of three *injection points* —
+  between steps, mid-collective (a RequestPool bucket in flight), or
+  mid-checkpoint (an async save enqueued but not yet durable);
+* ``revoke()`` marks the world dead for everyone;
+* ``shrink()`` is an **engine-level** operation, not a mesh swap: the
+  shrunken world knows its parent axis and survivor ranks, hands out a
+  proper engine :class:`~repro.core.communicator.Communicator` over the
+  survivors via the ``split_groups`` machinery
+  (:meth:`WorldComm.survivor_comm` — the §9 group the drain/replay
+  collectives run in), re-derives the hierarchical transport topology for
+  the new size through the fitted cost model
+  (:meth:`WorldComm.rederive_transport` →
+  ``CostModel.autotune_group_size`` with the §9 balanced-divisor
+  fallback), and rebuilds the smaller mesh (:meth:`WorldComm.mesh`);
+* the runner (:mod:`repro.train.fault_tolerance`) catches the exception,
+  drains the in-flight request pools (``RequestPool.abort``), shrinks,
+  re-lowers the step on the new communicator, and restores + reshards the
+  latest durable checkpoint — exactly the control flow of paper Fig. 12,
+  with the state carry-over rules of DESIGN.md §15 (EF-residual
+  resharding, preserved global leaf order).
 
-Failure *injection* hooks make this testable without real hardware.
+The failure model is **whole-slice**: hosts fail in units that keep the
+survivor count a divisor of the parent world size (the §9 uniform-group
+rule — SPMD shapes are static, so the survivor group must tile the old
+axis).  ``shrink()`` rounds down to the largest valid survivor count,
+retiring trailing healthy hosts if an odd-shaped failure leaves no
+uniform partition.
+
+Failure *injection* hooks make all of this testable without real
+hardware; real deployments hook the runtime's slice-health signal into
+``check_health``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
 from .errors import KampingError
 
@@ -29,7 +54,17 @@ __all__ = [
     "DeviceFailureDetected",
     "RevokedError",
     "WorldComm",
+    "FAILURE_POINTS",
 ]
+
+# Where an injected failure fires, in ULFM terms (DESIGN.md §15):
+#   "step"       — between steps (the classic Fig. 12 health poll);
+#   "collective" — while a step's RequestPool buckets are in flight
+#                  (recovery must drain/abort the pool and replay);
+#   "checkpoint" — after an async save was enqueued but before it is
+#                  known durable (recovery must flush the writer and
+#                  restore the latest *valid* snapshot).
+FAILURE_POINTS = ("step", "collective", "checkpoint")
 
 
 class DeviceFailureDetected(KampingError):
@@ -45,6 +80,13 @@ class RevokedError(KampingError):
 
 
 @dataclasses.dataclass
+class _Injected:
+    device_ids: List[int]
+    at: str = "step"
+    after_step: Optional[int] = None
+
+
+@dataclasses.dataclass
 class _WorldState:
     devices: List  # alive jax devices
     revoked: bool = False
@@ -52,31 +94,52 @@ class _WorldState:
 
 
 class WorldComm:
-    """Host-level communicator world with revoke/shrink semantics.
+    """Host-level communicator world with engine-routed revoke/shrink.
 
     ``mesh_factory(devices) -> Mesh`` rebuilds the mesh after a shrink —
-    typically dropping a whole (pod/data) row so the mesh stays rectangular
-    (TPU slices fail as units; see DESIGN.md).
+    typically dropping a whole (pod/data) row so the mesh stays
+    rectangular (TPU slices fail as units; see DESIGN.md §15).
+
+    A shrunken world additionally records its lineage —
+    :attr:`parent_size` and :attr:`survivor_ranks` — which is what makes
+    the recovery collectives routable through the ordinary §9 group
+    machinery (:meth:`survivor_groups` / :meth:`survivor_comm`) instead
+    of requiring a bespoke recovery path.
     """
 
     def __init__(
         self,
         devices: Optional[Sequence] = None,
         mesh_factory: Optional[Callable] = None,
+        *,
+        parent_size: Optional[int] = None,
+        survivor_ranks: Optional[Sequence[int]] = None,
+        generation: int = 0,
     ):
-        self._state = _WorldState(list(devices if devices is not None else jax.devices()))
+        self._state = _WorldState(
+            list(devices if devices is not None else jax.devices())
+        )
+        self._state.generation = int(generation)
         self._mesh_factory = mesh_factory
-        self._fail_next: List[int] = []
+        self._injected: List[_Injected] = []
+        self.parent_size = parent_size
+        self.survivor_ranks: Optional[Tuple[int, ...]] = (
+            tuple(int(r) for r in survivor_ranks)
+            if survivor_ranks is not None else None
+        )
 
     # -- introspection -------------------------------------------------------
     @property
     def devices(self):
+        """Live device list for this generation (survivors only)."""
         return list(self._state.devices)
 
     def size(self) -> int:
+        """Number of live devices (the shrunken world size)."""
         return len(self._state.devices)
 
     def is_revoked(self) -> bool:
+        """True after ``revoke()`` — collectives/meshes must not be used."""
         return self._state.revoked
 
     @property
@@ -85,42 +148,182 @@ class WorldComm:
         return self._state.generation
 
     # -- failure injection (tests / simulation) ------------------------------
-    def inject_failure(self, device_ids: Sequence[int]):
-        """Schedule devices to 'fail' at the next health check."""
-        self._fail_next.extend(int(d) for d in device_ids)
+    def inject_failure(self, device_ids: Sequence[int], *, at: str = "step",
+                       after_step: Optional[int] = None):
+        """Schedule devices to 'fail' at a future health check.
 
-    def check_health(self):
-        """Poll for failures; raises DeviceFailureDetected like a failed
-        collective would in ULFM.  Called by the trainer between steps
-        (real deployments: hook the runtime's slice-health signal here)."""
+        ``at`` names the injection point (:data:`FAILURE_POINTS`): the
+        failure fires at the next :meth:`check_health` *for that point*
+        — so ``at="collective"`` models a host dying while a step's
+        RequestPool buckets are in flight, and ``at="checkpoint"`` one
+        dying with an async save enqueued.  ``after_step=s`` defers the
+        failure until the runner reports step ``s`` or later (``None`` =
+        the very next matching check).
+        """
+        if at not in FAILURE_POINTS:
+            raise KampingError(
+                f"inject_failure: unknown point {at!r}; one of "
+                f"{FAILURE_POINTS}"
+            )
+        self._injected.append(
+            _Injected([int(d) for d in device_ids], at, after_step)
+        )
+
+    def check_health(self, point: str = "step",
+                     step: Optional[int] = None):
+        """Poll for failures; raises :class:`DeviceFailureDetected` like
+        a failed collective would in ULFM.
+
+        The runner calls this at every injection point — between steps
+        (``point="step"``), after dispatching a step but before
+        committing its outputs (``"collective"``: the step's buckets are
+        conceptually in flight), and after enqueueing an async save
+        (``"checkpoint"``).  Real deployments hook the runtime's
+        slice-health signal here.
+        """
         if self._state.revoked:
             raise RevokedError("world is revoked; shrink() before continuing")
-        if self._fail_next:
-            failed, self._fail_next = self._fail_next, []
+        due = [
+            inj for inj in self._injected
+            if inj.at == point and (
+                inj.after_step is None or step is None
+                or step >= inj.after_step
+            )
+        ]
+        if due:
+            self._injected = [i for i in self._injected if i not in due]
+            failed: List[int] = []
+            for inj in due:
+                failed.extend(inj.device_ids)
             raise DeviceFailureDetected(failed)
 
     # -- ULFM verbs (paper Fig. 12) -------------------------------------------
     def revoke(self):
+        """Mark the world unusable (cf. ``MPI_Comm_revoke``): recovery
+        must go through ``shrink()`` before building meshes or comms."""
         self._state.revoked = True
 
     def shrink(self, failed: Sequence[int] = ()):
         """Return a new WorldComm over the surviving devices.
 
-        Whole-group removal: if a failed device is in a group (e.g. a pod
-        row), the mesh_factory decides how much to drop to stay
-        rectangular; default drops exactly the failed device ids.
+        Whole-slice removal (DESIGN.md §15): the survivor count must
+        divide the parent world size so that the survivors form one
+        uniform §9 group of the old axis — if the raw survivor set does
+        not, trailing healthy hosts are retired down to the largest
+        divisor (slices fail, and are decommissioned, as units).  The
+        shrunken world records ``parent_size`` and ``survivor_ranks``
+        (parent-axis positions of the kept devices), which
+        :meth:`survivor_comm` turns into the drain/replay communicator
+        and :meth:`rederive_transport` into the re-tuned hier topology.
         """
         failed = set(int(f) for f in failed)
-        survivors = [d for d in self._state.devices if d.id not in failed]
-        if not survivors:
+        old = self._state.devices
+        keep = [i for i, d in enumerate(old) if d.id not in failed]
+        if not keep:
             raise KampingError("shrink: no surviving devices")
-        nw = WorldComm(survivors, self._mesh_factory)
-        nw._state.generation = self._state.generation + 1
+        # Round down to the largest survivor count dividing the parent
+        # size (uniform-partition rule); retire trailing survivors.
+        p = len(old)
+        s = len(keep)
+        while p % s:
+            s -= 1
+        keep = keep[:s]
+        nw = WorldComm(
+            [old[i] for i in keep],
+            self._mesh_factory,
+            parent_size=p,
+            survivor_ranks=keep,
+            generation=self._state.generation + 1,
+        )
         return nw
 
     def mesh(self):
+        """Build a JAX mesh over the live devices via ``mesh_factory``."""
         if self._state.revoked:
             raise RevokedError("cannot build a mesh on a revoked world")
         if self._mesh_factory is None:
             raise KampingError("WorldComm has no mesh_factory")
         return self._mesh_factory(self._state.devices)
+
+    # -- engine routing (DESIGN.md §15) ---------------------------------------
+    def survivor_groups(self):
+        """§9 partition of the *parent* axis with the survivors as group 0
+        (``groups.survivor_groups``).  Only defined on a shrunken world."""
+        from .groups import survivor_groups
+
+        if self.parent_size is None or self.survivor_ranks is None:
+            raise KampingError(
+                "survivor_groups: this world was not produced by shrink() "
+                "(no parent lineage to split)"
+            )
+        return survivor_groups(self.parent_size, self.survivor_ranks)
+
+    def survivor_comm(self, axis, **kwargs):
+        """Engine Communicator over the survivors *on the parent axis*.
+
+        This is the shrink→split mapping: recovery collectives that must
+        still run on the old (pre-shrink) mesh — draining partial
+        reductions, agreeing on the restore step — run group-scoped over
+        exactly the survivors, through the ordinary
+        :class:`~repro.core.communicator.Communicator` machinery (its
+        ``rank()``/``size()`` are group-relative, so every op-spec row
+        behaves as if the world had already shrunk).  ``kwargs`` pass
+        through to the Communicator constructor (transport,
+        compression, ...).
+        """
+        from .communicator import Communicator
+
+        return Communicator(axis, groups=self.survivor_groups(), **kwargs)
+
+    def comm(self, axis, *, transport=None, nbytes: Optional[int] = None,
+             **kwargs):
+        """Engine Communicator for the *shrunken* world's own mesh axis.
+
+        ``transport`` is re-derived for the new size via
+        :meth:`rederive_transport` — a hier transport tuned for the old
+        world would carry a stale (possibly non-dividing) ``group_size``.
+        """
+        from .communicator import Communicator
+
+        return Communicator(
+            axis, transport=self.rederive_transport(transport, nbytes=nbytes),
+            **kwargs
+        )
+
+    def rederive_transport(self, transport, *, nbytes: Optional[int] = None):
+        """Re-tune a transport for this world's size after a resize.
+
+        Flat transports (``"xla"``/``"pallas"``/...) are size-agnostic
+        and pass through.  ``"hier"`` (or a
+        :class:`~repro.core.hier.HierTransport`) re-derives its
+        ``group_size`` for the new ``p``: the fitted cost model's
+        :meth:`~repro.core.planner.CostModel.autotune_group_size` picks
+        from the measured hierarchy curves at ``nbytes`` (default: the
+        trainer's standard bucket), falling back to the §9 balanced
+        divisor on a fresh checkout — the old group size may not even
+        divide the new size.  ``group_size="auto"`` transports pass
+        through (they already re-resolve per call).
+        """
+        from .hier import HierTransport, default_group_size
+
+        is_hier = transport == "hier" or isinstance(transport, HierTransport)
+        if not is_hier:
+            return transport
+        intra, inter = "xla", "xla"
+        if isinstance(transport, HierTransport):
+            if transport.group_size == "auto":
+                return transport  # re-resolves per call already
+            intra, inter = transport.intra, transport.inter
+        p = self.size()
+        g = None
+        try:
+            from .planner import CostModel
+
+            g = CostModel.fit().autotune_group_size(
+                float(nbytes if nbytes is not None else (4 << 20)), p
+            )
+        except Exception:
+            g = None
+        if not g or p % g:
+            g = default_group_size(p)
+        return HierTransport(group_size=g, intra=intra, inter=inter)

@@ -1,7 +1,7 @@
 """repro.train — trainer, optimizer, compression, fault tolerance."""
 from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
 from .trainer import TrainConfig, Trainer, make_train_step
-from .fault_tolerance import FaultTolerantRunner, StragglerWatchdog
+from .fault_tolerance import FTEvent, FaultTolerantRunner, StragglerWatchdog
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
            "TrainConfig", "Trainer", "make_train_step",
-           "FaultTolerantRunner", "StragglerWatchdog"]
+           "FaultTolerantRunner", "StragglerWatchdog", "FTEvent"]

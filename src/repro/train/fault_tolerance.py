@@ -1,21 +1,41 @@
-"""ULFM-style fault-tolerant training loop (paper §V-B, Fig. 12) plus
-straggler mitigation.
+"""ULFM-style fault-tolerant training loop through the engine
+(paper §V-B, Fig. 12; DESIGN.md §15) plus straggler mitigation.
 
-The control flow mirrors the paper's example verbatim — exceptions instead
-of return codes, ``revoke()``, ``shrink()`` — adapted to the TPU failure
-model: a failure kills a host/slice, recovery = rebuild a (possibly
-smaller) mesh from survivors + restore & reshard the latest checkpoint.
-
-::
+The control flow mirrors the paper's example verbatim — exceptions
+instead of return codes, ``revoke()``, ``shrink()`` — adapted to the TPU
+failure model (a failure kills a host/slice) and routed through the
+engine rather than beside it.  Recovery is::
 
     try:
-        step(...)
+        dispatch step; health-check; commit step
     except DeviceFailureDetected:
         if not world.is_revoked():
             world.revoke()
-        world = world.shrink(failed)
-        mesh  = world.mesh()          # smaller but rectangular
-        state = ckpt.restore(shardings_on(mesh))   # elastic reshard
+        trainer.abort_inflight()        # drain RequestPool buckets (§8)
+        ckpt.wait()                     # flush the async writer (§15)
+        world = world.shrink(failed)    # survivors-as-split Communicator,
+                                        # re-derived hier topology (§9/§13)
+        trainer, state = make_trainer(world, ckpt.latest_step())
+                                        # restore + reshard: EF residuals
+                                        # to the new (dp, mb) (§10/§12)
+        losses = losses[:restore_step]  # replayed steps are recomputed
+        data   = make_data(restore_step, world)   # rewind, leaf order kept
+
+State commit is atomic at step granularity: a step whose buckets were
+in flight when the failure hit is *discarded* (its reductions never
+completed on the dead ranks) and replayed from the last durable
+checkpoint — which, with the §15 carry-over rules (EF residuals
+resharded by :func:`repro.core.compression.reshard_error_feedback`,
+global leaf order preserved by the data rewind), makes the recovered
+run bitwise identical to a clean restart on the shrunken world
+(``tests/test_elastic.py``).
+
+Three failure points are health-checked (``core.ulfm.FAILURE_POINTS``):
+between steps, mid-collective (after dispatch, before commit), and
+mid-checkpoint (after an async save is enqueued).  The data source is a
+factory ``make_data(start_step, world) -> iterator`` so recovery can
+rewind to the restore step with the survivors' leaf assignment; a plain
+iterator is accepted for failure-free runs but cannot be rewound.
 """
 from __future__ import annotations
 
@@ -23,13 +43,11 @@ import dataclasses
 import time
 from typing import Callable, List, Optional
 
-import jax
-import numpy as np
-
+from repro.core.errors import KampingError
 from repro.core.ulfm import DeviceFailureDetected, WorldComm
 from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["FaultTolerantRunner", "StragglerWatchdog"]
+__all__ = ["FaultTolerantRunner", "StragglerWatchdog", "FTEvent"]
 
 
 class StragglerWatchdog:
@@ -57,16 +75,33 @@ class StragglerWatchdog:
 @dataclasses.dataclass
 class FTEvent:
     step: int
-    kind: str  # "failure" | "shrink" | "restore" | "straggler"
+    kind: str  # "failure" | "drain" | "shrink" | "restore" | "straggler"
     detail: str = ""
 
 
 class FaultTolerantRunner:
-    """Wraps a trainer-factory so training survives injected failures.
+    """Wraps a trainer factory so training survives injected failures.
 
-    ``make_trainer(world) -> (trainer, state)`` builds a trainer + state on
-    the world's current mesh — called initially and after every shrink
-    (restoring from the latest checkpoint with the new mesh's shardings).
+    ``make_trainer(world, restore_step) -> (trainer, state)`` builds a
+    trainer + state on the world's current mesh — called initially
+    (``restore_step=None`` → fresh init) and after every shrink
+    (``restore_step`` = the latest durable checkpoint, which the factory
+    restores with the new mesh's shardings and the §15 reshard rules,
+    e.g. via ``Trainer.restore_state``).
+
+    The trainer protocol, duck-typed so the LM :class:`~repro.train
+    .trainer.Trainer` and lightweight test harnesses both fit:
+
+    * required — ``place_batch(batch)``, ``step_fn() -> f(params, opt,
+      extra, batch) -> (params, opt, extra, loss, metrics)``;
+    * optional — ``begin_step(state, batch) -> handle`` +
+      ``complete_step(handle) -> outputs`` (dispatch/commit split: the
+      mid-collective health check runs between them, while the step's
+      RequestPool buckets are in flight); ``abort_inflight() -> int``
+      (the §15 drain verb — cancel in-flight buckets, return the
+      count); ``save_state(ckpt, step, state, async_=..,
+      extra_meta=..)`` (checkpoint including EF ``extra`` state and
+      reshard metadata).
     """
 
     def __init__(
@@ -75,27 +110,112 @@ class FaultTolerantRunner:
         ckpt: CheckpointManager,
         make_trainer: Callable,
         checkpoint_every: int = 10,
+        save_async: bool = True,
     ):
         self.world = world
         self.ckpt = ckpt
         self.make_trainer = make_trainer
         self.checkpoint_every = checkpoint_every
+        self.save_async = save_async
         self.events: List[FTEvent] = []
         self.watchdog = StragglerWatchdog()
 
-    def run(self, data_iter, total_steps: int):
+    # -- data ------------------------------------------------------------------
+    def _data_iter(self, data, start_step: int):
+        if callable(data):
+            return data(start_step, self.world)
+        if start_step:
+            raise KampingError(
+                "FaultTolerantRunner: recovery needs a rewindable data "
+                "source — pass make_data(start_step, world) -> iterator "
+                "instead of a bare iterator"
+            )
+        return iter(data)
+
+    # -- checkpoint ------------------------------------------------------------
+    def _save(self, trainer, state, step: int):
+        meta = {
+            "generation": self.world.generation,
+            "world_size": self.world.size(),
+        }
+        saver = getattr(trainer, "save_state", None)
+        if saver is not None:
+            saver(self.ckpt, step, state,
+                  async_=self.save_async, extra_meta=meta)
+            return
+        params, opt_state, extra = state
+        tree = {"params": params, "opt": opt_state}
+        if extra is not None:
+            tree["extra"] = extra
+        self.ckpt.save(step, tree, extra_meta=meta, async_=self.save_async)
+
+    # -- recovery (paper Fig. 12, engine-routed) -------------------------------
+    def _recover(self, e: DeviceFailureDetected, data, step: int,
+                 losses: List[float], trainer):
+        self.events.append(FTEvent(step, "failure", str(e.failed)))
+        if not self.world.is_revoked():
+            self.world.revoke()
+        # Drain: in-flight RequestPool buckets are garbage (§15 — their
+        # reductions never completed on the dead ranks); cancel them so
+        # the pool is reusable for the replayed step.
+        drained = 0
+        aborter = getattr(trainer, "abort_inflight", None)
+        if aborter is not None:
+            drained = int(aborter() or 0)
+        self.events.append(
+            FTEvent(step, "drain", f"{drained} in-flight buckets aborted")
+        )
+        # Flush the async writer: publication is atomic, so after wait()
+        # every enqueued snapshot is durable and latest_step() (valid
+        # snapshots only) is exactly the recovery point.
+        try:
+            self.ckpt.wait()
+        except Exception as werr:  # a failed save: fall back further
+            self.events.append(FTEvent(step, "ckpt-error", repr(werr)))
+        self.world = self.world.shrink(e.failed)
+        self.events.append(
+            FTEvent(step, "shrink",
+                    f"{self.world.size()} devices "
+                    f"(generation {self.world.generation})")
+        )
+        restore_step = self.ckpt.latest_step()
+        trainer, state = self.make_trainer(self.world, restore_step)
+        step = restore_step or 0
+        # Replayed steps are recomputed: drop their stale losses too
+        # (keeping them double-counts every step after the checkpoint).
+        del losses[step:]
+        it = self._data_iter(data, step)
+        self.events.append(FTEvent(step, "restore", f"step {step}"))
+        return trainer, state, it, step
+
+    # -- loop ------------------------------------------------------------------
+    def run(self, data, total_steps: int):
+        """Train for ``total_steps``, surviving failures at any of the
+        three injection points.  ``data`` is a ``make_data(start_step,
+        world)`` factory (preferred) or a plain iterator.  Returns
+        ``(state, losses)`` with exactly one loss per step — replayed
+        steps appear once, with their replayed values."""
         trainer, state = self.make_trainer(self.world, None)
+        it = self._data_iter(data, 0)
         step = 0
-        losses = []
+        losses: List[float] = []
         while step < total_steps:
             try:
-                self.world.check_health()
-                batch = trainer.place_batch(next(data_iter))
+                self.world.check_health("step", step=step)
+                batch = trainer.place_batch(next(it))
                 t0 = time.perf_counter()
-                params, opt_state, extra = state
-                params, opt_state, extra, loss, _ = trainer.step_fn()(
-                    params, opt_state, extra, batch
-                )
+                # Dispatch / commit split: between the two, the step's
+                # buckets are in flight — the mid-collective window.
+                begin = getattr(trainer, "begin_step", None)
+                if begin is not None:
+                    handle = begin(state, batch)
+                    self.world.check_health("collective", step=step)
+                    out = trainer.complete_step(handle)
+                else:
+                    params, opt_state, extra = state
+                    out = trainer.step_fn()(params, opt_state, extra, batch)
+                    self.world.check_health("collective", step=step)
+                params, opt_state, extra, loss, _ = out
                 state = (params, opt_state, extra)
                 dt = time.perf_counter() - t0
                 if self.watchdog.observe(step, dt):
@@ -103,24 +223,11 @@ class FaultTolerantRunner:
                 losses.append(float(loss))
                 step += 1
                 if step % self.checkpoint_every == 0:
-                    self.ckpt.save(
-                        step,
-                        {"params": params, "opt": opt_state},
-                        extra_meta={"generation": self.world.generation},
-                        async_=True,
-                    )
+                    self._save(trainer, state, step)
+                    self.world.check_health("checkpoint", step=step)
             except DeviceFailureDetected as e:
-                # — paper Fig. 12, verbatim control flow —
-                self.events.append(FTEvent(step, "failure", str(e.failed)))
-                if not self.world.is_revoked():
-                    self.world.revoke()
-                self.world = self.world.shrink(e.failed)
-                self.events.append(
-                    FTEvent(step, "shrink", f"{self.world.size()} devices")
+                trainer, state, it, step = self._recover(
+                    e, data, step, losses, trainer
                 )
-                restore_step = self.ckpt.latest_step()
-                trainer, state = self.make_trainer(self.world, restore_step)
-                step = restore_step or 0
-                self.events.append(FTEvent(step, "restore", f"step {step}"))
         self.ckpt.wait()
         return state, losses

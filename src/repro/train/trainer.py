@@ -485,11 +485,25 @@ class Trainer:
         self._step_fn = None
 
     # -- state ----------------------------------------------------------------
-    def init_state(self, key, ep_size: int = 1):
+    def dp_size(self) -> int:
+        """Data-parallel world size on this trainer's mesh (the leading
+        dimension of the EF ``extra`` state)."""
+        return int(
+            np.prod([self.mesh.shape[a] for a in self.profile.dp_axes])
+        )
+
+    def _state_specs(self, key=None, ep_size: int = 1):
+        """(init closure, param specs, opt specs) for this mesh — shared
+        by :meth:`init_state` and :meth:`restore_state` so restore
+        places leaves with exactly the shardings init would have used
+        (the elastic reshard onto the current mesh)."""
         from repro.models import init_params
 
         def init():
-            params = init_params(self.cfg, key, ep_size)
+            params = init_params(
+                self.cfg, key if key is not None else jax.random.PRNGKey(0),
+                ep_size,
+            )
             return params, adamw_init(params)
 
         params_shape = jax.eval_shape(init)
@@ -502,6 +516,10 @@ class Trainer:
             "mu": pspecs,
             "nu": pspecs,
         }
+        return init, pspecs, ospecs
+
+    def init_state(self, key, ep_size: int = 1):
+        init, pspecs, ospecs = self._state_specs(key, ep_size)
         out_shardings = (
             named_shardings(self.mesh, pspecs),
             named_shardings(self.mesh, ospecs),
@@ -509,21 +527,99 @@ class Trainer:
         params, opt_state = jax.jit(init, out_shardings=out_shardings)()
         extra = None
         if self.tcfg.grad_compress is not None:
-            dp_size = int(
-                np.prod([self.mesh.shape[a] for a in self.profile.dp_axes])
-            )
             # Error-feedback residual, one slot per rank — and, under
             # reproducible, per canonical leaf (the residual follows the
             # leaf partitioning, so it is p-invariant too).
-            lead = (dp_size,)
+            lead = (self.dp_size(),)
             if self.tcfg.grad_reduce == "reproducible":
-                lead = (dp_size, self.tcfg.microbatches)
+                lead = (self.dp_size(), self.tcfg.microbatches)
             extra = jax.tree.map(
                 lambda p: jnp.zeros(lead + p.shape, jnp.float32), params
             )
         self.param_specs = pspecs
         self.opt_specs = ospecs
         return params, opt_state, extra
+
+    # -- checkpoint / elastic restore (DESIGN.md §15) --------------------------
+    def save_state(self, ckpt, step: int, state, *, async_: bool = False,
+                   extra_meta: Optional[Dict] = None):
+        """Checkpoint ``(params, opt, extra)`` with the reshard metadata
+        an elastic restore needs: the saving world's dp size and
+        microbatch count (the EF state's ``(dp, mb)`` provenance) ride
+        in the manifest, so :meth:`restore_state` on a different-sized
+        mesh knows how to fold the residuals."""
+        params, opt_state, extra = state
+        tree = {"params": params, "opt": opt_state}
+        if extra is not None:
+            tree["extra"] = extra
+        meta = {
+            "dp_size": self.dp_size(),
+            "microbatches": self.tcfg.microbatches,
+            "grad_reduce": self.tcfg.grad_reduce,
+        }
+        meta.update(extra_meta or {})
+        ckpt.save(step, tree, extra_meta=meta, async_=async_)
+
+    def restore_state(self, ckpt, step: Optional[int] = None):
+        """Restore a :meth:`save_state` snapshot onto *this* trainer's
+        mesh (the elastic-reshard path of the ULFM recovery loop).
+
+        Params/opt are re-placed with the current mesh's shardings;
+        error-feedback ``extra`` state is resharded to this mesh's
+        ``(dp, mb)`` shape via :func:`repro.core.compression
+        .reshard_error_feedback` — exact leaf-order-preserving reshape
+        under ``reproducible`` (so ``deterministic("tree")`` runs stay
+        bitwise across the resize, which requires ``microbatches`` to be
+        scaled to keep the global leaf count: see
+        :func:`repro.core.reproducible.elastic_leaves`), additive
+        per-rank fold otherwise.  Returns ``(params, opt, extra)``.
+        """
+        from repro.core.compression import reshard_error_feedback
+        from repro.core.errors import KampingError
+
+        tree, meta = ckpt.restore(step)
+        _, pspecs, ospecs = self._state_specs()
+        params = jax.device_put(
+            tree["params"], named_shardings(self.mesh, pspecs)
+        )
+        opt_state = jax.device_put(
+            tree["opt"], named_shardings(self.mesh, ospecs)
+        )
+        extra = tree.get("extra")
+        if extra is not None:
+            saved = meta.get("extra", {})
+            old_dp = int(saved.get("dp_size") or self.dp_size())
+            leaf_stacked = (
+                saved.get("grad_reduce", self.tcfg.grad_reduce)
+                == "reproducible"
+            )
+            extra = reshard_error_feedback(
+                extra, old_dp, self.dp_size(), leaf_stacked=leaf_stacked
+            )
+            if leaf_stacked:
+                mb = jax.tree.leaves(extra)[0].shape[1]
+                if mb != self.tcfg.microbatches:
+                    raise KampingError(
+                        f"restore_state: resharded EF state carries {mb} "
+                        f"leaves/rank but TrainConfig.microbatches is "
+                        f"{self.tcfg.microbatches} — scale microbatches "
+                        "to preserve the global leaf count "
+                        "(core.reproducible.elastic_leaves)"
+                    )
+            extra = jax.tree.map(jnp.asarray, extra)
+        if self.tcfg.grad_compress is None:
+            extra = None
+        self.param_specs = pspecs
+        self.opt_specs = ospecs
+        return params, opt_state, extra
+
+    def abort_inflight(self) -> int:
+        """ULFM drain hook (DESIGN.md §15).  The jitted step's
+        RequestPools live at trace time — their buckets are values
+        inside the staged program, so discarding the failed step's
+        *outputs* (the runner replays from the last checkpoint) is the
+        drain; there is never host-side in-flight state to cancel."""
+        return 0
 
     # -- step -----------------------------------------------------------------
     def step_fn(self):

@@ -1,0 +1,238 @@
+"""Async sharded CheckpointManager edge cases (DESIGN.md §15).
+
+The §15 async-checkpoint consistency contract, pinned:
+
+* async saves racing garbage collection — the writer queue serializes
+  writes and ``_gc``, so rapid-fire saves with a small ``keep`` never
+  corrupt or delete an in-progress snapshot;
+* atomic publication — an interrupted write leaves only a ``.tmp``
+  directory, invisible to ``list_steps``/``latest_step`` and swept by
+  the next GC;
+* validation — a corrupt or partial snapshot (missing manifest, missing
+  leaf/shard file, shape mismatch) is detected by ``validate_step`` and
+  skipped by ``latest_step(valid_only=True)``, and ``restore`` raises
+  :class:`CheckpointError` rather than returning garbage;
+* per-host sharding — leaves split along the leading axis into shard
+  files, reassembled bitwise on restore; indivisible leaves stay whole;
+* elastic restore — ``shardings=`` re-places onto the current mesh,
+  ``reshard=`` maps the host tree (the EF fold) before placement;
+* writer-thread errors are captured and re-raised from ``wait()``.
+"""
+import os
+import pickle
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointError, CheckpointManager
+from repro.core.compression import reshard_error_feedback
+
+
+def tree_for(step):
+    return {
+        "w": np.full((8, 3), float(step), np.float32),
+        "b": np.arange(5, dtype=np.float32) + step,
+    }
+
+
+def step_dir(ckpt, step):
+    return os.path.join(ckpt.dir, f"step_{step:08d}")
+
+
+# ---------------------------------------------------------------------------
+# async saves racing _gc
+# ---------------------------------------------------------------------------
+def test_async_saves_race_gc(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(6):
+        ckpt.save(s, tree_for(s), async_=True)
+    ckpt.wait()  # no writer errors
+    assert ckpt.list_steps() == [4, 5]
+    for s in (4, 5):
+        assert ckpt.validate_step(s)
+        tree, meta = ckpt.restore(s)
+        np.testing.assert_array_equal(np.asarray(tree["w"]), tree_for(s)["w"])
+        assert meta["step"] == s
+
+
+def test_async_save_returns_before_durable(tmp_path):
+    """The non-stall contract: with the writer gated, save() returns
+    while the snapshot is still pending; wait() drains it."""
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    gate = threading.Event()
+    real_write = ckpt._write
+
+    def gated(*args):
+        gate.wait()
+        real_write(*args)
+
+    ckpt._write = gated
+    ckpt.save(1, tree_for(1), async_=True)
+    assert ckpt.pending() >= 1
+    assert ckpt.latest_step() is None  # not durable yet
+    gate.set()
+    ckpt.wait()
+    assert ckpt.pending() == 0
+    assert ckpt.latest_step() == 1
+
+
+def test_writer_error_surfaces_from_wait(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+
+    def boom(*args):
+        raise OSError("disk full")
+
+    ckpt._write = boom
+    ckpt.save(1, tree_for(1), async_=True)
+    with pytest.raises(CheckpointError, match="disk full"):
+        ckpt.wait()
+    ckpt.wait()  # errors are consumed, not re-raised forever
+
+
+# ---------------------------------------------------------------------------
+# sharded save/restore
+# ---------------------------------------------------------------------------
+def test_sharded_roundtrip_bitwise(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3, shards=4)
+    tree = {
+        "w": np.random.RandomState(0).randn(8, 3).astype(np.float32),
+        "b": np.arange(5, dtype=np.float32),  # 5 % 4 != 0: stays whole
+    }
+    ckpt.save(3, tree)
+    names = sorted(os.listdir(step_dir(ckpt, 3)))
+    assert "leaf_00000.npy" in names  # "b" flattens first (dict order)
+    assert sum(n.startswith("leaf_00001.shard_") for n in names) == 4
+    got, meta = ckpt.restore(3)
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+    np.testing.assert_array_equal(np.asarray(got["b"]), tree["b"])
+    assert meta["leaf_shards"] == [1, 4]
+
+
+def test_per_save_shards_override(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3, shards=1)
+    ckpt.save(1, tree_for(1), shards=2)
+    names = os.listdir(step_dir(ckpt, 1))
+    assert any("shard_" in n for n in names)
+    got, _ = ckpt.restore(1)
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree_for(1)["w"])
+
+
+# ---------------------------------------------------------------------------
+# corrupt / partial detection
+# ---------------------------------------------------------------------------
+def test_missing_manifest_detected(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    ckpt.save(1, tree_for(1))
+    ckpt.save(2, tree_for(2))
+    os.remove(os.path.join(step_dir(ckpt, 2), "manifest.pkl"))
+    assert not ckpt.validate_step(2)
+    assert ckpt.latest_step() == 1  # falls back to the newest valid
+    assert ckpt.list_steps() == [1, 2]  # raw listing still sees it
+    assert ckpt.list_steps(valid_only=True) == [1]
+    with pytest.raises(CheckpointError, match="manifest"):
+        ckpt.restore(2)
+
+
+def test_missing_shard_detected(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3, shards=2)
+    ckpt.save(1, tree_for(1))
+    ckpt.save(2, tree_for(2))
+    victim = [
+        n for n in os.listdir(step_dir(ckpt, 2)) if "shard_01" in n
+    ][0]
+    os.remove(os.path.join(step_dir(ckpt, 2), victim))
+    assert not ckpt.validate_step(2)
+    assert ckpt.latest_step() == 1  # valid_only default skips the partial
+    assert ckpt.latest_step(valid_only=False) == 2
+    with pytest.raises(CheckpointError, match="unreadable"):
+        ckpt.restore(2)
+
+
+def test_shape_mismatch_detected(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    ckpt.save(1, tree_for(1))
+    # overwrite a leaf with a wrong-shaped array
+    names = sorted(
+        n for n in os.listdir(step_dir(ckpt, 1)) if n.startswith("leaf_")
+    )
+    np.save(os.path.join(step_dir(ckpt, 1), names[0]),
+            np.zeros((2, 2), np.float32))
+    with pytest.raises(CheckpointError, match="shape"):
+        ckpt.restore(1)
+
+
+def test_interrupted_tmp_write_ignored_and_swept(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    ckpt.save(1, tree_for(1))
+    # simulate a write interrupted by the failure being recovered from
+    fake = step_dir(ckpt, 7) + ".tmp"
+    os.makedirs(fake)
+    np.save(os.path.join(fake, "leaf_00000.npy"), np.zeros(3))
+    assert ckpt.list_steps() == [1]
+    assert ckpt.latest_step() == 1
+    ckpt.save(2, tree_for(2))  # next write's _gc sweeps the leftover
+    assert not os.path.exists(fake)
+    assert ckpt.list_steps() == [1, 2]
+
+
+def test_restore_empty_dir_raises(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    assert ckpt.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore()
+
+
+# ---------------------------------------------------------------------------
+# elastic restore: shardings= and reshard=
+# ---------------------------------------------------------------------------
+def test_restore_with_shardings_places_on_mesh(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    ckpt.save(1, tree_for(1))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
+    sh = {
+        "w": NamedSharding(mesh, P()),
+        "b": NamedSharding(mesh, P()),
+    }
+    got, _ = ckpt.restore(1, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree_for(1)["w"])
+
+
+def test_restore_with_reshard_folds_ef(tmp_path):
+    """The recovery hook: reshard= maps the assembled host tree before
+    placement — here the §15 per-rank EF fold from dp=4 to dp=2."""
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    err = np.arange(12, dtype=np.float32).reshape(4, 3)
+    ckpt.save(1, {"extra": err}, extra_meta={"dp_size": 4})
+
+    def fold(tree, meta):
+        tree["extra"] = reshard_error_feedback(
+            tree["extra"], meta["extra"]["dp_size"], 2
+        )
+        return tree
+
+    got, meta = ckpt.restore(1, reshard=fold)
+    assert got["extra"].shape == (2, 3)
+    np.testing.assert_array_equal(
+        np.asarray(got["extra"]), err.reshape(2, 2, 3).sum(axis=1)
+    )
+
+
+def test_extra_meta_roundtrip_and_dtypes(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": np.arange(6, dtype=np.int32), "y": jnp.ones((2,), jnp.float32)}
+    ckpt.save(5, tree, extra_meta={"generation": 2, "world_size": 4})
+    got, meta = ckpt.restore(5)
+    assert meta["extra"] == {"generation": 2, "world_size": 4}
+    assert np.asarray(got["x"]).dtype == np.int32
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.arange(6))
+
+
+def test_shards_must_be_positive(tmp_path):
+    with pytest.raises(ValueError, match="shards"):
+        CheckpointManager(str(tmp_path), shards=0)

@@ -1,0 +1,494 @@
+"""Elastic training through the engine (DESIGN.md §15; paper §V-B).
+
+Acceptance differentials of the elastic-training PR:
+
+(a) **kill-mid-run**: a host killed mid-collective under
+    ``grad_reduce="overlap"`` + ``grad_compress="int8-ef"`` +
+    ``deterministic("tree")`` converges bitwise-identically to a clean
+    restart on the shrunken world (p 8→4 and 4→2) — final params AND
+    error-feedback residuals;
+(b) **loss-curve continuation**: under the leaf-stacked reproducible
+    layout the recovered 8→4 run's FULL loss history is bitwise equal
+    to an uninterrupted run — the §12 p-invariance survives the shrink
+    because residuals reshard by an exact leaf-order-preserving reshape;
+(c) the three §15 injection points behave: mid-collective drains the
+    in-flight RequestPool bucket (drain count ≥ 1), mid-checkpoint
+    recovery restores the just-enqueued snapshot after flushing the
+    writer, and ``run()`` returns exactly one loss per step (the
+    replayed-losses truncation regression);
+(d) the engine plumbing units: shrink lineage + divisor round-down,
+    ``survivor_groups``/``survivor_comm`` (group-scoped recovery
+    collectives on the parent axis), ``rederive_transport`` (hier
+    group-size re-derivation for the new p), EF resharding rules, and
+    ``elastic_leaves``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Communicator,
+    KampingError,
+    compression,
+    deterministic,
+    elastic_leaves,
+    op,
+    overlap_reduce_tree,
+    reshard_error_feedback,
+    send_buf,
+    survivor_groups,
+)
+from repro.core.hier import HierTransport
+from repro.core.nonblocking import NonBlockingResult, RequestPool
+from repro.core.ulfm import DeviceFailureDetected, WorldComm
+from repro.checkpoint.manager import CheckpointManager
+from repro.train.fault_tolerance import FaultTolerantRunner
+
+D_IN, D_H = 6, 8
+M = 8  # global microbatch (leaf) count — constant across every p
+BSZ = 4
+LR = 0.05
+TOTAL, EVERY = 10, 4  # saves land at steps 4 and 8
+
+
+class D:
+    """Fake device (the ulfm suite's stub — only .id is read)."""
+
+    def __init__(self, i):
+        self.id = i
+
+
+def spmd(f, *stacked):
+    return jax.vmap(f, axis_name="x")(*stacked)
+
+
+def _init_params():
+    rng = np.random.RandomState(42)
+    return {
+        "w1": jnp.asarray(rng.randn(D_IN, D_H).astype(np.float32) * 0.3),
+        "b1": jnp.zeros((D_H,), jnp.float32),
+        "w2": jnp.asarray(rng.randn(D_H, 1).astype(np.float32) * 0.3),
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _loss(params, xb, yb):
+    h = jnp.tanh(xb @ params["w1"] + params["b1"])
+    return jnp.mean(((h @ params["w2"] + params["b2"]) - yb) ** 2)
+
+
+def global_batch(step):
+    """The SAME global batch for every p — sliced by rank in leaf order."""
+    rng = np.random.RandomState(1000 + step)
+    return (
+        rng.randn(M, BSZ, D_IN).astype(np.float32),
+        rng.randn(M, BSZ, 1).astype(np.float32),
+    )
+
+
+def make_data(start_step, world):
+    """The runner's rewindable data protocol: restart at ``start_step``
+    with the (possibly shrunken) world's leaf assignment."""
+    p = world.size()
+    m = M // p
+
+    def gen():
+        step = start_step
+        while True:
+            x, y = global_batch(step)
+            yield (x.reshape(p, m, BSZ, D_IN), y.reshape(p, m, BSZ, 1))
+            step += 1
+
+    return gen()
+
+
+class ToyTrainer:
+    """Minimal trainer speaking the FaultTolerantRunner protocol.
+
+    ``mode="overlap"`` — rank-mean grads through ``overlap_reduce_tree``
+    with int8-ef error feedback (per-rank residuals, ``(p,) + shape``
+    stacked) and deterministic bucket trees: run-to-run stable at fixed
+    p, the differential-(a) configuration.  ``mode="reproducible"`` —
+    per-microbatch leaf grads through the engine's compressed
+    ``deterministic("tree", leaves=m)`` allreduce: leaf-stacked
+    residuals ``(p, m) + shape``, bitwise p-invariant (differential b).
+
+    ``begin_step``/``complete_step`` split dispatch from commit with the
+    step's result pending in a RequestPool — the window the runner
+    health-checks ``"collective"`` in, so ``abort_inflight`` genuinely
+    drains an in-flight request when a failure lands there.
+    """
+
+    def __init__(self, world, mode):
+        self.p = world.size()
+        self.m = M // self.p
+        self.mode = mode
+        self.comm = world.comm("x")
+        self.pool = RequestPool()
+
+    def init_err(self):
+        head = (self.p,) if self.mode == "overlap" else (self.p, self.m)
+        return jax.tree.map(
+            lambda v: jnp.zeros(head + v.shape, jnp.float32), _init_params()
+        )
+
+    def place_batch(self, batch):
+        return jax.tree.map(jnp.asarray, batch)
+
+    def _rank_step(self, params, e, xb, yb):
+        comm, p, m = self.comm, self.p, self.m
+        if self.mode == "overlap":
+            loss, grads = jax.value_and_grad(
+                lambda pr: jnp.mean(
+                    jax.vmap(lambda x1, y1: _loss(pr, x1, y1))(xb, yb)
+                )
+            )(params)
+            red, new_e = overlap_reduce_tree(
+                comm, grads, bucket_bytes=64, max_inflight=2,
+                mode="allreduce", scale=1.0 / p, compression="int8-ef",
+                err_state=e, deterministic="tree",
+            )
+            gloss = comm.allreduce(send_buf(loss), op("sum")) / p
+        else:
+            det = deterministic("tree", leaves=m)
+            grads_m = jax.vmap(
+                lambda x1, y1: jax.grad(_loss)(params, x1, y1)
+            )(xb, yb)
+            flat_g, gdef = jax.tree.flatten(grads_m)
+            flat_e = gdef.flatten_up_to(e)
+            red_l, new_l = [], []
+            for g, ee in zip(flat_g, flat_e):
+                r = comm.allreduce(
+                    send_buf(g), op("sum"), det,
+                    compression("int8-ef", state=ee),
+                )
+                red_l.append(r.recv_buf / M)
+                new_l.append(r.compression_state)
+            red = jax.tree.unflatten(gdef, red_l)
+            new_e = jax.tree.unflatten(gdef, new_l)
+            loss_m = jax.vmap(lambda x1, y1: _loss(params, x1, y1))(xb, yb)
+            gloss = comm.allreduce(send_buf(loss_m), op("sum"), det) / M
+        newp = jax.tree.map(lambda w, g: w - LR * g, params, red)
+        return newp, new_e, gloss
+
+    def step_fn(self):
+        def f(params, opt, extra, batch):
+            xs, ys = batch
+            np_, ne_, l_ = spmd(
+                lambda e, xb, yb: self._rank_step(params, e, xb, yb),
+                extra, xs, ys,
+            )
+            params_new = jax.tree.map(lambda v: v[0], np_)
+            return params_new, opt, ne_, l_[0], {}
+
+        return f
+
+    # -- dispatch/commit split (the mid-collective window) -----------------
+    def begin_step(self, state, batch):
+        params, opt, extra = state
+        req = NonBlockingResult(
+            self.step_fn()(params, opt, extra, batch), op_name="step"
+        )
+        self.pool.submit(req)
+        return req
+
+    def complete_step(self, req):
+        return self.pool.collect(req)
+
+    def abort_inflight(self):
+        return self.pool.abort()
+
+
+def make_trainer_factory(ckpt, mode):
+    def make_trainer(world, restore_step):
+        trainer = ToyTrainer(world, mode)
+        if restore_step is None:
+            return trainer, (_init_params(), {}, trainer.init_err())
+        tree, meta = ckpt.restore(restore_step)
+        err = reshard_error_feedback(
+            tree["extra"], meta["extra"]["world_size"], world.size(),
+            leaf_stacked=(mode == "reproducible"),
+        )
+        return trainer, (tree["params"], {}, err)
+
+    return make_trainer
+
+
+def run_elastic(tmpdir, mode, p_from, p_to, point, fail_at,
+                total=TOTAL, every=EVERY, save_async=True):
+    world = WorldComm([D(i) for i in range(p_from)])
+    ckpt = CheckpointManager(os.path.join(str(tmpdir), "ckpt"), keep=3)
+    runner = FaultTolerantRunner(
+        world, ckpt, make_trainer_factory(ckpt, mode),
+        checkpoint_every=every, save_async=save_async,
+    )
+    if point is not None:
+        world.inject_failure(
+            list(range(p_to, p_from)), at=point, after_step=fail_at
+        )
+    state, losses = runner.run(make_data, total)
+    return runner, state, losses, ckpt
+
+
+def replay_clean(ckpt, mode, p_to, start, total):
+    """Reference: a clean restart on the shrunken world from the same
+    durable checkpoint — no failure path, just restore and run."""
+    world = WorldComm([D(i) for i in range(p_to)])
+    trainer, state = make_trainer_factory(ckpt, mode)(world, start)
+    it = make_data(start, world)
+    f = trainer.step_fn()
+    losses = []
+    for _ in range(start, total):
+        batch = trainer.place_batch(next(it))
+        params, opt, extra, loss, _ = f(state[0], state[1], state[2], batch)
+        state = (params, opt, extra)
+        losses.append(float(loss))
+    return state, losses
+
+
+def restore_step_of(runner):
+    return [e for e in runner.events if e.kind == "restore"][-1].step
+
+
+def assert_trees_equal(a, b):
+    fa, da = jax.tree.flatten(jax.tree.map(np.asarray, a))
+    fb, db = jax.tree.flatten(jax.tree.map(np.asarray, b))
+    assert da == db
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# (a) THE acceptance differential: kill mid-collective under
+#     overlap + int8-ef + deterministic buckets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("p_from,p_to", [(8, 4), (4, 2)])
+def test_kill_midrun_overlap_int8ef_bitwise(tmp_path, p_from, p_to):
+    runner, state, losses, ckpt = run_elastic(
+        tmp_path, "overlap", p_from, p_to, "collective", 6
+    )
+    assert runner.world.size() == p_to
+    assert runner.world.generation == 1
+    assert len(losses) == TOTAL  # exactly one loss per step
+    # the in-flight step's bucket was genuinely drained
+    drains = [e for e in runner.events if e.kind == "drain"]
+    assert drains and drains[0].detail.startswith("1 ")
+    rs = restore_step_of(runner)
+    assert rs == 4  # failure at step 6 over the step-4 snapshot
+    ref_state, ref_losses = replay_clean(ckpt, "overlap", p_to, rs, TOTAL)
+    assert losses[rs:] == ref_losses  # per-step losses, bitwise
+    assert_trees_equal(state[0], ref_state[0])  # final params
+    assert_trees_equal(state[2], ref_state[2])  # EF residuals included
+
+
+# ---------------------------------------------------------------------------
+# (b) reproducible mode: the loss curve continues bitwise across the shrink
+# ---------------------------------------------------------------------------
+def test_reproducible_shrink_loss_curve_continues_bitwise(tmp_path):
+    runner, state, losses, ckpt = run_elastic(
+        tmp_path, "reproducible", 8, 4, "step", 6
+    )
+    assert runner.world.size() == 4
+    # uninterrupted reference at the ORIGINAL world size: §12 p-invariance
+    # + exact leaf-order-preserving EF reshard means the recovered 8→4
+    # run's full history is bitwise the same curve.
+    _, _, ref_losses, _ = run_elastic(
+        os.path.join(str(tmp_path), "ref"), "reproducible", 8, 8,
+        None, None, save_async=False,
+    )
+    assert losses == ref_losses
+
+
+# ---------------------------------------------------------------------------
+# (c) injection points & the losses-truncation regression
+# ---------------------------------------------------------------------------
+def test_losses_truncated_on_restore_regression(tmp_path):
+    """run() used to keep the pre-failure losses for replayed steps —
+    12 entries for a 10-step run failing at step 6 over the step-4
+    snapshot.  Replayed steps must appear exactly once."""
+    runner, _, losses, ckpt = run_elastic(
+        tmp_path, "overlap", 4, 2, "step", 6
+    )
+    assert len(losses) == TOTAL
+    # "step"-point failure: nothing in flight, drain count is 0
+    drains = [e for e in runner.events if e.kind == "drain"]
+    assert drains and drains[0].detail.startswith("0 ")
+    rs = restore_step_of(runner)
+    _, ref_losses = replay_clean(ckpt, "overlap", 2, rs, TOTAL)
+    assert losses[rs:] == ref_losses
+
+
+def test_midcheckpoint_failure_restores_flushed_snapshot(tmp_path):
+    """at="checkpoint": the failure fires with the async save enqueued.
+    Recovery flushes the writer first, so the just-saved snapshot is
+    durable and becomes the restore point (no lost checkpoint)."""
+    runner, state, losses, ckpt = run_elastic(
+        tmp_path, "overlap", 4, 2, "checkpoint", 4
+    )
+    assert restore_step_of(runner) == 4
+    assert len(losses) == TOTAL
+    ref_state, ref_losses = replay_clean(ckpt, "overlap", 2, 4, TOTAL)
+    assert losses[4:] == ref_losses
+    assert_trees_equal(state[0], ref_state[0])
+
+
+def test_bare_iterator_rejected_on_recovery(tmp_path):
+    runner_world = WorldComm([D(i) for i in range(4)])
+    ckpt = CheckpointManager(os.path.join(str(tmp_path), "ckpt"), keep=2)
+    runner = FaultTolerantRunner(
+        runner_world, ckpt, make_trainer_factory(ckpt, "overlap"),
+        checkpoint_every=2, save_async=False,
+    )
+    runner_world.inject_failure([2, 3], at="step", after_step=3)
+    data = make_data(0, runner_world)  # bare iterator, not a factory
+    with pytest.raises(KampingError, match="rewindable"):
+        runner.run(data, 6)
+
+
+# ---------------------------------------------------------------------------
+# (d) engine plumbing units
+# ---------------------------------------------------------------------------
+def test_shrink_records_lineage():
+    w = WorldComm([D(i) for i in range(8)])
+    nw = w.shrink([4, 5, 6, 7])
+    assert nw.size() == 4
+    assert nw.parent_size == 8
+    assert nw.survivor_ranks == (0, 1, 2, 3)
+    assert nw.generation == 1
+    assert nw.shrink([0, 1]).generation == 2
+
+
+def test_shrink_rounds_down_to_divisor():
+    """5 survivors of 8 cannot tile the axis: trailing healthy hosts are
+    retired down to the largest divisor (whole-slice decommissioning)."""
+    w = WorldComm([D(i) for i in range(8)])
+    nw = w.shrink([0, 2, 5])
+    assert nw.size() == 4
+    assert nw.survivor_ranks == (1, 3, 4, 6)
+
+
+def test_survivor_groups_partition():
+    gs = WorldComm([D(i) for i in range(8)]).shrink([4, 5, 6, 7]) \
+        .survivor_groups()
+    assert gs[0] == (0, 1, 2, 3)  # survivors are group 0
+    assert sorted(r for g in gs for r in g) == list(range(8))
+    with pytest.raises(KampingError, match="uniformly"):
+        survivor_groups(8, [0, 1, 2])
+    with pytest.raises(KampingError, match="lineage"):
+        WorldComm([D(i) for i in range(4)]).survivor_groups()
+
+
+def test_survivor_comm_group_scoped_psum():
+    """Recovery collectives run on the PARENT axis, scoped to exactly
+    the survivors — the shrink→split mapping."""
+    comm = WorldComm([D(i) for i in range(8)]).shrink([4, 5, 6, 7]) \
+        .survivor_comm("x")
+    out = np.asarray(
+        spmd(
+            lambda v: comm.allreduce(send_buf(v), op("sum")),
+            jnp.arange(8, dtype=jnp.float32),
+        )
+    )
+    np.testing.assert_array_equal(out[:4], 6.0)  # 0+1+2+3, survivors only
+
+
+def test_rederive_transport():
+    w = WorldComm([D(i) for i in range(8)]).shrink([4, 5, 6, 7])
+    t = w.rederive_transport("hier")
+    assert isinstance(t, HierTransport)
+    assert isinstance(t.group_size, int) and 4 % t.group_size == 0
+    # flat transports are size-agnostic
+    assert w.rederive_transport("xla") == "xla"
+    assert w.rederive_transport(None) is None
+    # "auto" re-resolves per call already
+    auto = HierTransport(group_size="auto")
+    assert w.rederive_transport(auto) is auto
+    # a stale (non-dividing) tuned size is replaced, intra/inter kept
+    re = w.rederive_transport(HierTransport(group_size=8, intra="pallas"))
+    assert re.intra == "pallas" and 4 % re.group_size == 0
+
+
+def test_worldcomm_comm_runs_on_new_size():
+    comm = WorldComm([D(i) for i in range(8)]).shrink([4, 5, 6, 7]) \
+        .comm("x", transport="hier")
+    out = np.asarray(
+        spmd(
+            lambda v: comm.allreduce(send_buf(v), op("sum")),
+            jnp.arange(4, dtype=jnp.float32),
+        )
+    )
+    np.testing.assert_array_equal(out, 6.0)
+
+
+def test_injection_points():
+    w = WorldComm([D(i) for i in range(4)])
+    with pytest.raises(KampingError, match="unknown point"):
+        w.inject_failure([0], at="bogus")
+    w.inject_failure([3], at="collective", after_step=3)
+    w.check_health("step", step=5)        # wrong point: no fire
+    w.check_health("collective", step=2)  # too early: no fire
+    with pytest.raises(DeviceFailureDetected) as ei:
+        w.check_health("collective", step=3)
+    assert ei.value.failed == [3]
+    w.check_health("collective", step=3)  # consumed by the first fire
+
+
+def test_reshard_leaf_stacked_preserves_global_leaf_order():
+    e = jnp.arange(24, dtype=jnp.float32).reshape(4, 2, 3)
+    out = reshard_error_feedback({"a": e}, 4, 2, leaf_stacked=True)["a"]
+    assert out.shape == (2, 4, 3)
+    np.testing.assert_array_equal(
+        np.asarray(out).reshape(8, 3), np.asarray(e).reshape(8, 3)
+    )
+    back = reshard_error_feedback(out, 2, 4, leaf_stacked=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(e))
+
+
+def test_reshard_per_rank_fold_preserves_global_sum():
+    e = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    out = reshard_error_feedback(e, 4, 2)
+    assert out.shape == (2, 3)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(e).reshape(2, 2, 3).sum(axis=1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out).sum(axis=0), np.asarray(e).sum(axis=0)
+    )
+
+
+def test_reshard_per_rank_grow_first_child():
+    e = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    out = np.asarray(reshard_error_feedback(e, 2, 4))
+    assert out.shape == (4, 3)
+    np.testing.assert_array_equal(out[0], np.asarray(e)[0])
+    np.testing.assert_array_equal(out[2], np.asarray(e)[1])
+    np.testing.assert_array_equal(out[1], 0.0)
+    np.testing.assert_array_equal(out[3], 0.0)
+
+
+def test_reshard_validation():
+    assert reshard_error_feedback(None, 4, 2) is None
+    e = {"a": jnp.ones((4, 3))}
+    assert reshard_error_feedback(e, 4, 4) is e
+    with pytest.raises(KampingError, match="old_dp"):
+        reshard_error_feedback(jnp.ones((3, 2)), 4, 2)
+    with pytest.raises(KampingError, match="multiple"):
+        reshard_error_feedback(jnp.ones((4, 2)), 4, 3)
+    with pytest.raises(KampingError, match="evenly"):
+        reshard_error_feedback(jnp.ones((4, 1, 2)), 4, 3, leaf_stacked=True)
+    with pytest.raises(KampingError, match="dp, m"):
+        reshard_error_feedback(jnp.ones((4,)), 4, 2, leaf_stacked=True)
+
+
+def test_elastic_leaves_contract():
+    assert elastic_leaves(8, 4) == 2
+    assert elastic_leaves(8, 1) == 8
+    with pytest.raises(KampingError, match="power of two"):
+        elastic_leaves(6, 2)
+    with pytest.raises(KampingError, match="world size 3"):
+        elastic_leaves(8, 3)
+    with pytest.raises(KampingError, match="world size 16"):
+        elastic_leaves(8, 16)

@@ -18,6 +18,7 @@ from the table that defines the surface.
 """
 from __future__ import annotations
 
+import inspect
 import os
 import sys
 
@@ -143,6 +144,72 @@ policies, and bucket layouts follow automatically; `root`, `dest`, and
   inside each group).  The per-device TPU RDMA ring kernels reject
   split communicators with a trace-time error.
 """
+
+
+FT_SECTION_HEADER = """\
+---
+
+# Fault tolerance & elastic checkpointing — DESIGN.md §15
+
+ULFM-style recovery (paper §V-B, Fig. 12) routed through the engine:
+failures surface as exceptions, `WorldComm.shrink` hands out
+survivor-scoped §9 communicators with a re-derived §13 hier topology,
+checkpoints are async + per-host sharded with atomic publication, and
+error-feedback residuals reshard across the resize
+(`repro.core.compression.reshard_error_feedback`).  The member tables
+below are **introspected from the live classes** at generation time, so
+this section is gated by `--check` exactly like the op-spec rows.
+"""
+
+
+def _summary(obj) -> str:
+    """First sentence of the first docstring paragraph, table-safe."""
+    doc = inspect.getdoc(obj) or ""
+    if not doc:
+        return ""
+    para = " ".join(doc.strip().split("\n\n")[0].split())
+    dot = para.find(". ")
+    s = para if dot < 0 else para[: dot + 1]
+    return s.replace("|", "\\|")
+
+
+def _ctor_sig(cls) -> str:
+    try:
+        sig = str(inspect.signature(cls.__init__))
+    except (TypeError, ValueError):
+        return "(...)"
+    # drop the leading `self`
+    inner = sig[1:-1].split(", ")
+    return "(" + ", ".join(p for p in inner if p != "self") + ")"
+
+
+def _ft_section(cls) -> str:
+    """One markdown section per fault-tolerance class: constructor
+    signature, class summary, and a member table (public methods and
+    properties in definition order, each with its first docstring
+    sentence).  Introspected, so it cannot drift."""
+    mod = cls.__module__.replace("repro.", "repro/").replace(".", "/")
+    lines = [
+        f"## `{cls.__name__}{_ctor_sig(cls)}`",
+        "",
+        f"{_summary(cls)}  (`src/{mod}.py`)",
+        "",
+        "| member | |",
+        "|---|---|",
+    ]
+    for name, member in vars(cls).items():
+        if name.startswith("_"):
+            continue
+        if isinstance(member, property):
+            lines.append(f"| `.{name}` (property) | {_summary(member.fget)} |")
+        elif callable(member):
+            try:
+                sig = str(inspect.signature(member)).replace("|", "\\|")
+            except (TypeError, ValueError):
+                sig = "(...)"
+            lines.append(f"| `{name}{sig}` | {_summary(member)} |")
+    lines.append("")
+    return "\n".join(lines)
 
 
 def _kind_name(k) -> str:
@@ -316,6 +383,12 @@ def generate() -> str:
         "`neighbors` parameter kind.\n"
     )
     parts += [_section(s) for s in plugin]
+    from repro.checkpoint.manager import CheckpointManager  # noqa: E402
+    from repro.core.ulfm import WorldComm  # noqa: E402
+    from repro.train.fault_tolerance import FaultTolerantRunner  # noqa: E402
+    parts.append(FT_SECTION_HEADER)
+    parts += [_ft_section(c)
+              for c in (WorldComm, CheckpointManager, FaultTolerantRunner)]
     return "\n".join(parts)
 
 
